@@ -1,0 +1,79 @@
+"""PGF-engine microbenchmarks: the paper's §VII implementation choices.
+
+  * product-tree (paper-faithful FFTW path) vs log-CF (TPU adaptation)
+  * schoolbook-vs-FFT polynomial multiply crossover (paper's 5000 threshold)
+  * grouped aggregation throughput (tuples/s through the UDA layer)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pgf as P, poisson_binomial as pb
+from repro.core.config import default_float
+
+
+def _t(f, repeat=3):
+    f()
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        f()
+    return (time.perf_counter() - t0) / repeat
+
+
+def bench():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # exact COUNT: product tree vs log-CF
+    for n in (2048, 8192):
+        probs = rng.uniform(0.05, 0.95, n)
+        factors = jnp.asarray(
+            np.stack([1 - probs, probs], axis=1), default_float())
+        t_tree = _t(lambda: jax.block_until_ready(
+            P.product_tree(factors).coeffs), 1)
+        pj = jnp.asarray(probs, default_float())
+        cf = jax.jit(lambda p: pb.logcf_finalize(
+            *pb.logcf_terms(p, jnp.ones_like(p), n + 1)))
+        t_cf = _t(lambda: jax.block_until_ready(cf(pj)), 1)
+        rows.append((f"engine/product_tree/n={n}", t_tree * 1e6, ""))
+        rows.append((f"engine/logcf/n={n}", t_cf * 1e6, ""))
+
+    # polymul crossover
+    for k in (256, 1024, 4096):
+        a = jnp.asarray(rng.dirichlet(np.ones(k)), default_float())
+        b = jnp.asarray(rng.dirichlet(np.ones(k)), default_float())
+        t_school = _t(lambda: jax.block_until_ready(jnp.convolve(a, b)))
+        t_fft = _t(lambda: jax.block_until_ready(P.fft_convolve(a, b)))
+        rows.append((f"engine/conv_school/k={k}", t_school * 1e6, ""))
+        rows.append((f"engine/conv_fft/k={k}", t_fft * 1e6, ""))
+
+    # UDA throughput (grouped normal+cumulant accumulate, jitted)
+    from repro.db import operators as ops
+    from repro.db.table import Table
+    n, G = 1 << 18, 1024
+    t = Table.from_columns(
+        {"g": jnp.asarray(rng.integers(0, G, n)),
+         "v": jnp.asarray(rng.integers(1, 50, n).astype(float))},
+        prob=jnp.asarray(rng.uniform(0, 1, n)))
+
+    @jax.jit
+    def agg(t):
+        ids, _, _ = ops.group_ids(t, ["g"], G)
+        v = t["v"].astype(t.prob.dtype)
+        mu, var = ops.group_normal_terms(t, v, ids, G)
+        cum = ops.group_cumulant_terms(t, v, ids, G)
+        return mu, var, cum
+
+    dt = _t(lambda: jax.block_until_ready(agg(t)))
+    rows.append((f"engine/uda_grouped_throughput", dt * 1e6,
+                 f"{n / dt / 1e6:.1f}Mtuples/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, v, extra in bench():
+        print(f"{name},{v:.1f},{extra}")

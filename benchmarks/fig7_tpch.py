@@ -1,0 +1,46 @@
+"""Figure 7 reproduction: TPC-H query runtimes in the four modes.
+
+The paper runs 17 TPC-H variants at 1 TB on a 48-core server; this
+container is a CPU laptop-scale environment, so the benchmark runs the
+implemented query suite (Q1/Q3/Q6/Q18/Q20 — the paper's worked examples)
+at synthetic scale factors and reports per-mode wall time.  The paper's
+headline shape — aggregate-mode probabilistic queries within a small
+factor of deterministic ones — is the claim being measured.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.db import tpch
+
+
+def bench(n_orders: int = 4000, repeat: int = 3):
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    rows = []
+    for qname, fn in tpch.QUERIES.items():
+        jfn = {m: jax.jit(lambda db, m=m, fn=fn: fn(db, m))
+               for m in tpch.MODES}
+        for mode in tpch.MODES:
+            out = jfn[mode](db)                       # compile + warm
+            jax.block_until_ready(jax.tree.leaves(out))
+            t0 = time.perf_counter()
+            for _ in range(repeat):
+                out = jfn[mode](db)
+                jax.block_until_ready(jax.tree.leaves(out))
+            dt = (time.perf_counter() - t0) / repeat
+            rows.append((f"fig7/{qname}/{mode}", dt * 1e6,
+                         f"n_orders={n_orders}"))
+    # the paper's claim: aggregate within small factor of deterministic
+    for q in tpch.QUERIES:
+        det = next(r[1] for r in rows if r[0] == f"fig7/{q}/deterministic")
+        agg = next(r[1] for r in rows if r[0] == f"fig7/{q}/aggregate")
+        rows.append((f"fig7/{q}/agg_over_det", agg / max(det, 1e-9),
+                     "ratio"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, v, extra in bench():
+        print(f"{name},{v:.1f},{extra}")

@@ -1,0 +1,119 @@
+"""Roofline table builder: reads the dry-run artifacts and emits the
+per-(arch x shape x mesh) analysis (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs / peak_FLOPs            (per chip)
+    memory term     = HLO_bytes / HBM_bw                (per chip)
+    collective term = collective_bytes / ICI link bw    (per chip)
+
+plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) and the useful-compute
+ratio MODEL_FLOPS / (chips * HLO_FLOPs).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, base as cfgs
+
+ARTIFACT_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """6 * N(active) * tokens for the workload shape (per step, global)."""
+    if arch == "pgf_tpch":
+        from repro.configs import pgf_tpch
+        qc = pgf_tpch.CONFIG
+        # analytic: ~46 flop-equivalents per (tuple, frequency) pair for
+        # the log-CF path (phase modmult, cos/sin, |z|^2, log, atan2),
+        # global over the step
+        return 46.0 * qc.n_tuples * qc.num_freq
+    cfg = cfgs.get_config(arch)
+    n_active = cfg.active_param_count()
+    spec = SHAPES[shape]
+    if spec["kind"] == "train":
+        tokens = spec["global_batch"] * spec["seq_len"]
+        return 6.0 * n_active * tokens
+    if spec["kind"] == "prefill":
+        tokens = spec["global_batch"] * spec["seq_len"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * spec["global_batch"]
+
+
+def load_rows(artifact_dir: str = ARTIFACT_DIR):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        with open(path) as f:
+            res = json.load(f)
+        if "roofline" not in res:
+            rows.append(dict(cell=res.get("cell", path), error=True))
+            continue
+        r = res["roofline"]
+        arch, shape = res["cell"].split("/")
+        mf = model_flops(arch, shape)
+        chips = r["chips"]
+        useful = mf / max(chips * r["hlo_flops"], 1e-9)
+        terms = {"compute": r["t_compute"], "memory": r["t_memory"],
+                 "collective": r["t_collective"]}
+        dom = r["dominant"]
+        bound = max(terms.values())
+        # roofline fraction: ideal-time(compute term if it were the only
+        # one) over the bounding term — how close the cell is to its roof
+        frac = r["t_compute"] / max(bound, 1e-12)
+        rows.append(dict(
+            cell=res["cell"], mesh=res["mesh"], chips=chips,
+            t_compute=r["t_compute"], t_memory=r["t_memory"],
+            t_collective=r["t_collective"], dominant=dom,
+            model_flops=mf, hlo_flops=r["hlo_flops"],
+            useful_ratio=useful, roofline_fraction=frac,
+            mem_gb=_mem_gb(res)))
+    return rows
+
+
+def _mem_gb(res) -> float:
+    ma = res.get("memory_analysis") or {}
+    tot = sum(ma.get(k, 0) for k in ("argument_size_in_bytes",
+                                     "output_size_in_bytes",
+                                     "temp_size_in_bytes")
+              if isinstance(ma.get(k), int))
+    # aliased outputs (donated) are double-counted by arg+out; subtract
+    tot -= ma.get("alias_size_in_bytes", 0) or 0
+    return tot / 1e9
+
+
+def bench():
+    rows = load_rows()
+    out = []
+    for r in rows:
+        if r.get("error"):
+            out.append((f"roofline/{r['cell']}", float("nan"), "ERROR"))
+            continue
+        out.append((
+            f"roofline/{r['cell']}@{r['mesh']}",
+            r["t_compute"] * 1e6,
+            f"t_m={r['t_memory']:.3e};t_x={r['t_collective']:.3e};"
+            f"dom={r['dominant']};useful={r['useful_ratio']:.3f};"
+            f"mem={r['mem_gb']:.1f}GB"))
+    return out
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| cell | mesh | t_compute | t_memory | t_collective | dominant "
+           "| useful MODEL/HLO | mem GB/dev |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r.get("error"):
+            lines.append(f"| {r['cell']} | — | ERROR | | | | | |")
+            continue
+        lines.append(
+            f"| {r['cell']} | {r['mesh']} | {r['t_compute']:.3e} "
+            f"| {r['t_memory']:.3e} | {r['t_collective']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.3f} "
+            f"| {r['mem_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = load_rows()
+    print(markdown_table(rows))

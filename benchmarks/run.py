@@ -1,0 +1,52 @@
+"""Unified benchmark runner: ``python -m benchmarks.run [--fast]``.
+
+One section per paper artifact (Fig. 7 / Fig. 9 / Fig. 10), plus engine
+microbenchmarks and the roofline table (from dry-run artifacts, if any).
+Prints ``name,value,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from repro.core import enable_x64
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig7,fig9,fig10,engine,roofline")
+    args = ap.parse_args(argv)
+    enable_x64()
+
+    from . import engine, fig7_tpch, fig9_count, fig10_error, roofline
+    sections = {
+        "fig7": lambda: fig7_tpch.bench(n_orders=1000 if args.fast else 4000),
+        "fig9": lambda: fig9_count.bench(
+            sizes=(5_000, 20_000) if args.fast else (10_000, 40_000, 160_000)),
+        "fig10": lambda: fig10_error.bench(
+            sizes=(2_000, 8_000) if args.fast else (2_000, 8_000, 32_000,
+                                                    128_000)),
+        "engine": engine.bench,
+        "roofline": roofline.bench,
+    }
+    only = set(args.only.split(",")) if args.only else set(sections)
+
+    failures = 0
+    for name, fn in sections.items():
+        if name not in only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            for row, value, extra in fn():
+                print(f"{row},{value},{extra}", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,83 @@
+"""End-to-end training driver: train a ~100M-param yi-family model for a
+few hundred steps on CPU with the full production substrate — PGF-based
+probabilistic data sampling, microbatch accumulation, checkpoint-restart
+(a failure is injected mid-run to prove it), and final perplexity.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--small]
+"""
+import argparse
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.train.data import ProbabilisticSampler, TokenStream
+from repro.train.optimizer import AdamW
+from repro.train.trainer import Trainer, run_with_failures
+
+
+def config(small: bool) -> ModelConfig:
+    if small:
+        return ModelConfig(
+            name="yi_tiny", family="dense", n_layers=2, d_model=128,
+            n_heads=4, n_kv_heads=2, d_ff=352, vocab_size=2048,
+            mlp="swiglu", dtype="float32")
+    # ~100M params: 12L x 768, llama/yi family
+    return ModelConfig(
+        name="yi_100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32000,
+        mlp="swiglu", dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--small", action="store_true",
+                    help="tiny model (CI-speed)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = config(args.small)
+    n_params = cfg.param_count()
+    print(f"arch={cfg.name}: ~{n_params/1e6:.0f}M params, "
+          f"{args.steps} steps of batch {args.batch} x seq {args.seq}")
+
+    # PGF-backed probabilistic sampling (paper as substrate): per-example
+    # inclusion probabilities; the Poisson-binomial PGF sizes the batch
+    # capacity with provable overflow probability.
+    rng = np.random.default_rng(0)
+    sampler = ProbabilisticSampler(rng.uniform(0.5, 0.95, args.batch * 4))
+    cap = sampler.capacity_for(1e-6)
+    f = sampler.batch_size_pgf()
+    print(f"probabilistic sampler: pool={args.batch*4} "
+          f"E[batch]={float(f.mean()):.1f} capacity(1e-6)={cap}")
+
+    stream = TokenStream(cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch, seed=0)
+    opt = AdamW(lr=6e-4, warmup=40)
+    with tempfile.TemporaryDirectory() as ckdir:
+        trainer = Trainer(cfg, opt, stream, ckdir, accum=2,
+                          ckpt_every=max(20, args.steps // 4))
+        fail_step = args.steps // 2
+        print(f"injecting a node failure at step {fail_step} "
+              f"(restart from latest checkpoint)...")
+        t0 = time.time()
+        params, _, hist = run_with_failures(
+            trainer, args.steps, {fail_step})[:3]
+        dt = time.time() - t0
+    tokens = args.steps * args.batch * args.seq
+    print(f"done in {dt:.1f}s ({tokens/dt:.0f} tok/s CPU)")
+    print(f"loss: {hist[0]:.4f} -> {hist[-1]:.4f} "
+          f"(ppl {np.exp(hist[0]):.1f} -> {np.exp(hist[-1]):.1f})")
+    assert hist[-1] < hist[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro — "Making Massive Probabilistic Databases Practical" (Todor et al.,
+2013) as a multi-pod JAX framework.
+
+Subsystems:
+    repro.core      PGF probabilistic-aggregation engine (the paper)
+    repro.db        probabilistic relational operators, TPC-H workload
+    repro.kernels   Pallas TPU kernels for the engine's hot spots
+    repro.models    assigned LM architectures (exercise the runtime)
+    repro.train     optimizer / trainer / checkpoint / data substrate
+    repro.launch    production meshes, dry-run, train/serve entry points
+"""
+__version__ = "1.0.0"

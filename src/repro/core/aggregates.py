@@ -1,0 +1,265 @@
+"""User-defined aggregates (paper §VI-A): Initialize / Accumulate / Merge /
+Finalize over JAX pytree states.
+
+The paper packages every probabilistic aggregate as a Glade UDA so that a
+deterministic engine can run probabilistic plans.  Here the same four-phase
+contract is expressed as pure functions over pytree states, which makes the
+*engine* be XLA: `Accumulate` maps over locally-sharded tuple chunks,
+`Merge` is an elementwise reduction that lowers to one `psum` inside
+shard_map (DESIGN.md §2, Glade row of the adaptation table), and `Finalize`
+is a single device (FFT) or host (mixture solve) epilogue.
+
+Every UDA also accepts a `mask` so that fixed-shape relations with validity
+masks (selection pushdown) aggregate only live tuples: a masked-out tuple is
+equivalent to p = 0 for SUM/COUNT/AtLeastOne and to "not in the list" for
+MIN/MAX.
+
+Provided UDAs (paper §V / §VII):
+    CountCF / SumCF         exact distributions via log-CF          (§V-A/C)
+    SumCumulants            moment terms for the gamma mixture      (§V-C.3)
+    SumNormal               mean/variance terms                     (§V-C.3)
+    MinUDA / MaxUDA         top-kappa (value, AtLeastOne) list      (§V-B, §VII-C)
+    AtLeastOne              the projection/group-confidence UDA     (§VI row V)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import approx, poisson_binomial as pb
+from .config import default_float
+from .pgf import PGF
+
+
+def _masked_probs(probs, mask):
+    if mask is None:
+        return probs
+    return jnp.where(mask, probs, 0.0)
+
+
+# ------------------------------------------------------------- AtLeastOne
+class AtLeastOneState(NamedTuple):
+    log_none: jnp.ndarray  # sum of log(1 - p) over accumulated tuples
+
+
+class AtLeastOne:
+    """P(at least one tuple present) = 1 - prod (1 - p_i)  (§VI row V)."""
+
+    @staticmethod
+    def init(dtype=None) -> AtLeastOneState:
+        return AtLeastOneState(jnp.zeros((), dtype or default_float()))
+
+    @staticmethod
+    def accumulate(state: AtLeastOneState, probs, mask=None) -> AtLeastOneState:
+        p = _masked_probs(probs, mask)
+        return AtLeastOneState(state.log_none + jnp.sum(jnp.log1p(-p)))
+
+    @staticmethod
+    def merge(a: AtLeastOneState, b: AtLeastOneState) -> AtLeastOneState:
+        return AtLeastOneState(a.log_none + b.log_none)
+
+    @staticmethod
+    def finalize(state: AtLeastOneState):
+        return 1.0 - jnp.exp(state.log_none)
+
+
+# ------------------------------------------------------------ CF exact UDAs
+class CFState(NamedTuple):
+    log_abs: jnp.ndarray  # (num_freq,)
+    angle: jnp.ndarray    # (num_freq,)
+
+
+class SumCF:
+    """Exact SUM (and COUNT, with values == 1) over integer values via the
+    log-characteristic-function representation.  `num_freq` = max_sum + 1 is
+    the static distribution capacity, fixed at Initialize time (the JAX
+    analogue of the paper's pre-sized FFT buffers)."""
+
+    def __init__(self, num_freq: int):
+        self.num_freq = int(num_freq)
+
+    def init(self, dtype=None) -> CFState:
+        dtype = dtype or default_float()
+        z = jnp.zeros((self.num_freq,), dtype)
+        return CFState(z, z)
+
+    def accumulate(self, state: CFState, probs, values=None, mask=None) -> CFState:
+        p = _masked_probs(probs, mask)
+        v = jnp.ones_like(p) if values is None else values
+        la, an = pb.logcf_terms(p, v, self.num_freq)
+        return CFState(state.log_abs + la, state.angle + an)
+
+    @staticmethod
+    def merge(a: CFState, b: CFState) -> CFState:
+        return CFState(a.log_abs + b.log_abs, a.angle + b.angle)
+
+    @staticmethod
+    def psum_merge(state: CFState, axis_name) -> CFState:
+        return CFState(jax.lax.psum(state.log_abs, axis_name),
+                       jax.lax.psum(state.angle, axis_name))
+
+    @staticmethod
+    def finalize(state: CFState) -> PGF:
+        return PGF(pb.logcf_finalize(state.log_abs, state.angle), 0)
+
+
+def CountCF(capacity: int) -> SumCF:
+    """COUNT = SUM of T_COUNT-translated values (all ones), §IV-F step 1."""
+    return SumCF(capacity + 1)
+
+
+# ------------------------------------------------------- moment-based UDAs
+class CumulantState(NamedTuple):
+    terms: jnp.ndarray  # (2p,) partial cumulant sums
+
+
+class SumCumulants:
+    """Streaming cumulants for Lindsay's gamma-mixture approximation."""
+
+    def __init__(self, p_components: int = 3):
+        self.p = int(p_components)
+
+    def init(self, dtype=None) -> CumulantState:
+        return CumulantState(jnp.zeros((2 * self.p,), dtype or default_float()))
+
+    def accumulate(self, state, probs, values=None, mask=None) -> CumulantState:
+        pr = _masked_probs(probs, mask)
+        v = jnp.ones_like(pr) if values is None else values
+        return CumulantState(state.terms + approx.cumulant_terms(pr, v, 2 * self.p))
+
+    @staticmethod
+    def merge(a, b) -> CumulantState:
+        return CumulantState(a.terms + b.terms)
+
+    @staticmethod
+    def psum_merge(state, axis_name) -> CumulantState:
+        return CumulantState(jax.lax.psum(state.terms, axis_name))
+
+    def finalize(self, state) -> approx.GammaMixture:
+        return approx.fit_gamma_mixture(np.asarray(state.terms), p=self.p)
+
+
+class NormalState(NamedTuple):
+    terms: jnp.ndarray  # (2,) = (mean, variance) partial sums
+
+
+class SumNormal:
+    @staticmethod
+    def init(dtype=None) -> NormalState:
+        return NormalState(jnp.zeros((2,), dtype or default_float()))
+
+    @staticmethod
+    def accumulate(state, probs, values=None, mask=None) -> NormalState:
+        pr = _masked_probs(probs, mask)
+        v = jnp.ones_like(pr) if values is None else values
+        return NormalState(state.terms + approx.normal_terms(pr, v))
+
+    @staticmethod
+    def merge(a, b) -> NormalState:
+        return NormalState(a.terms + b.terms)
+
+    @staticmethod
+    def psum_merge(state, axis_name) -> NormalState:
+        return NormalState(jax.lax.psum(state.terms, axis_name))
+
+    @staticmethod
+    def finalize(state) -> approx.NormalApprox:
+        t = np.asarray(state.terms)
+        return approx.NormalApprox(float(t[0]), math.sqrt(max(float(t[1]), 0.0)))
+
+
+# ------------------------------------------------------------- MIN / MAX
+class MinMaxState(NamedTuple):
+    values: jnp.ndarray    # (kappa,) distinct values, sorted best-first; pad=+inf
+    log_none: jnp.ndarray  # (kappa,) sum log(1-p) of tuples at that value
+    tail_log_none: jnp.ndarray  # () log prod(1-p) over *evicted* values
+    total_log_none: jnp.ndarray  # () log prod(1-p) over all tuples seen
+
+
+@dataclasses.dataclass(frozen=True)
+class MinUDA:
+    """The paper's ordered (value, AtLeastOne) list with capacity kappa
+    (§VII-C), as fixed-shape arrays: JAX needs static shapes, so the linked
+    list becomes a sorted top-kappa buffer merged by sort (DESIGN.md §2).
+
+    `sign` = +1 for MIN (keep smallest), -1 for MAX (keep largest, stored
+    negated so the merge logic is shared).
+    """
+
+    kappa: int = 64
+    sign: float = 1.0
+
+    def init(self, dtype=None) -> MinMaxState:
+        dtype = dtype or default_float()
+        z = jnp.zeros((), dtype)
+        return MinMaxState(jnp.full((self.kappa,), jnp.inf, dtype),
+                           jnp.zeros((self.kappa,), dtype), z, z)
+
+    def accumulate(self, state, probs, values, mask=None) -> MinMaxState:
+        dtype = state.values.dtype
+        p = _masked_probs(jnp.asarray(probs, dtype), mask)
+        v = jnp.asarray(values, dtype) * self.sign
+        v = jnp.where(p > 0, v, jnp.inf)  # masked/p=0 tuples never matter
+        logq = jnp.log1p(-p)
+        # Combine duplicates within the chunk on a fixed-size grid.
+        uniq, inv = jnp.unique(v, size=v.shape[0], fill_value=jnp.inf,
+                               return_inverse=True)
+        combined = jax.ops.segment_sum(logq, inv, num_segments=v.shape[0])
+        chunk = MinMaxState(uniq, combined, jnp.zeros((), dtype),
+                            jnp.sum(logq))
+        return self.merge(state, chunk)
+
+    def merge(self, a: MinMaxState, b: MinMaxState) -> MinMaxState:
+        dtype = a.values.dtype
+        v = jnp.concatenate([a.values, b.values])
+        lq = jnp.concatenate([a.log_none, b.log_none])
+        uniq, inv = jnp.unique(v, size=v.shape[0], fill_value=jnp.inf,
+                               return_inverse=True)
+        lq = jax.ops.segment_sum(lq, inv, num_segments=v.shape[0])
+        kept_v = uniq[: self.kappa]
+        kept_lq = lq[: self.kappa]
+        evicted = jnp.where(jnp.isfinite(uniq[self.kappa:]), lq[self.kappa:], 0.0)
+        return MinMaxState(kept_v, kept_lq,
+                           a.tail_log_none + b.tail_log_none + evicted.sum(),
+                           a.total_log_none + b.total_log_none)
+
+    def finalize(self, state: MinMaxState):
+        """P(min = v_j) = prod_{v_l < v_j} Q_l * (1 - Q_{v_j})  (§V-B.1),
+        where Q_l = prod over tuples at value v_l of (1 - p).
+
+        Returns (values, masses, p_tail): values are un-negated (true MAX
+        values for sign = -1); p_tail is the probability that the aggregate
+        falls beyond the kept support — evicted values *or* the empty world
+        (the paper's X^inf term plus its §V-B.2 truncation remainder).
+        """
+        finite = jnp.isfinite(state.values)
+        lq = jnp.where(finite, state.log_none, 0.0)
+        prefix = jnp.concatenate([jnp.zeros((1,), lq.dtype), jnp.cumsum(lq)[:-1]])
+        mass = jnp.exp(prefix) * (1.0 - jnp.exp(lq)) * finite
+        p_tail = jnp.exp(jnp.sum(lq))  # all kept absent: evicted or empty
+        return state.values * self.sign, mass, p_tail
+
+    def p_empty(self, state: MinMaxState):
+        """Exact P(aggregate undefined) = prod over all tuples of (1-p)."""
+        return jnp.exp(state.total_log_none)
+
+    def to_pgf(self, state: MinMaxState, lo: int, hi: int) -> PGF:
+        """Densify onto integer grid [lo, hi); truncation tail -> inf mass."""
+        values, mass, p_tail = self.finalize(state)
+        k = hi - lo
+        idx = jnp.clip((jnp.where(jnp.isfinite(values), values, lo) - lo)
+                       .astype(jnp.int32), 0, k - 1)
+        coeffs = jnp.zeros((k,), mass.dtype).at[idx].add(
+            jnp.where(jnp.isfinite(values), mass, 0.0))
+        if self.sign > 0:
+            return PGF(coeffs, lo, p_pos_inf=p_tail)
+        return PGF(coeffs, lo, p_neg_inf=p_tail)
+
+
+def MaxUDA(kappa: int = 64) -> MinUDA:
+    return MinUDA(kappa=kappa, sign=-1.0)

@@ -1,0 +1,65 @@
+"""Aggregation monoids (paper §IV-F, Proposition 2).
+
+A probabilistic aggregate is a sum of independent random variables carried out
+in a monoid over the reals:
+
+    SUM : (R, +,   0)
+    MIN : (R, min, +inf)
+    MAX : (R, max, -inf)
+    COUNT = SUM after the translation T_COUNT(X^a) = X^1.
+
+The PGF of the monoid-sum is the product of per-tuple PGFs where *exponent
+addition* is the monoid operation (Theorem 1).  The neutral element is the
+exponent contributed by an absent tuple: ``(1-p)·X^neutral + p·X^a``.
+
+These objects are plain metadata consumed by the UDA layer and the dense-PGF
+product routines; they carry no array state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """An aggregation monoid (R, op, neutral)."""
+
+    name: str
+    op: Callable  # binary, works elementwise on jnp arrays
+    neutral: float
+
+    def fold(self, values):
+        """Reference fold of a 1-D array in this monoid (host-side oracle)."""
+        acc = self.neutral
+        for v in values:
+            acc = float(self.op(acc, v))
+        return acc
+
+
+SUM = Monoid("SUM", lambda a, b: a + b, 0.0)
+MIN = Monoid("MIN", jnp.minimum, math.inf)
+MAX = Monoid("MAX", jnp.maximum, -math.inf)
+# COUNT is SUM over the translated values T_COUNT(a) = 1 (paper §IV-F step 1).
+COUNT = Monoid("COUNT", lambda a, b: a + b, 0.0)
+
+BY_NAME = {m.name: m for m in (SUM, MIN, MAX, COUNT)}
+
+
+def translate(agg: str, values):
+    """T_AGG from paper §IV-F: put tuple values in the aggregate's monoid.
+
+    COUNT maps every value to 1.  SUM after MIN/MAX maps ±inf (the previous
+    monoid's neutral) to 0; MIN after MAX maps -inf to +inf and vice versa.
+    For plain scalar attributes this is the identity (COUNT aside).
+    """
+    values = jnp.asarray(values)
+    if agg == "COUNT":
+        return jnp.ones_like(values)
+    target = BY_NAME[agg]
+    # Re-map foreign neutral elements onto this monoid's neutral element.
+    is_foreign_neutral = jnp.isinf(values) & (values != target.neutral)
+    return jnp.where(is_foreign_neutral, target.neutral, values)

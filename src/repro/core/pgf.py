@@ -1,0 +1,298 @@
+"""Dense PGF value type and exact polynomial products (paper §IV-B..D, §V).
+
+A PGF over an *integer* support grid is stored densely:
+
+    ``coeffs[k] = P(A = offset + k)``            (k = 0..K-1)
+    ``p_pos_inf = P(A = +inf)``  (MIN neutral)   ``p_neg_inf = P(A = -inf)``
+
+The paper's generalized-exponents polynomials allow real exponents; for exact
+computation it restricts to integers {0..m} (rationals via scaling, §V-C.2) —
+we do the same.  Real-valued supports are handled by the approximation layer
+(:mod:`repro.core.approx`) exactly as in the paper.
+
+Products:
+  * :meth:`PGF.mul_sum`  — exponent addition = coefficient convolution
+                           (schoolbook below FFT_THRESHOLD, else FFT),
+                           the paper's §VII-B dispatch.
+  * :meth:`PGF.mul_min` / :meth:`PGF.mul_max` — the ×_MIN / ×_MAX products of
+                           §V-B via prefix/suffix survival sums, O(K) instead
+                           of the paper's O(K²) pairwise term combination.
+  * :func:`product_tree` — the paper's divide-and-conquer product, with each
+                           tree level executed as one *batched* FFT (TPU
+                           adaptation of FFTW plan-per-pair).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import default_float
+
+# Paper §VII-B: "classical O(n^2) method for polynomials of degree smaller
+# than [5000] and the O(n log^2 n) algorithm for larger".  Our crossover is
+# lower because XLA's convolve is less favourable than hand-tuned schoolbook.
+FFT_THRESHOLD = 1024
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PGF:
+    """A probability generating function on an integer grid.
+
+    ``coeffs`` is a dynamic (traced) array; ``offset`` is static metadata.
+    Coefficients sum to 1 together with the two infinity masses
+    (polynomial-monoid membership, Proposition 1).
+    """
+
+    coeffs: jnp.ndarray
+    offset: int = 0
+    p_pos_inf: jnp.ndarray | float = 0.0
+    p_neg_inf: jnp.ndarray | float = 0.0
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.coeffs, self.p_pos_inf, self.p_neg_inf), (self.offset,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        coeffs, ppi, pni = children
+        return cls(coeffs, aux[0], ppi, pni)
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_scalar(cls, value: int, dtype=None):
+        """gamma(a) = X^a — the deterministic embedding (paper §IV-E)."""
+        dtype = dtype or default_float()
+        return cls(jnp.ones((1,), dtype), int(value))
+
+    @classmethod
+    def bernoulli(cls, p, value: int, monoid_name: str = "SUM", dtype=None):
+        """(1-p)·X^neutral + p·X^value — one tuple's PGF (paper §IV-F step 2)."""
+        dtype = dtype or default_float()
+        p = jnp.asarray(p, dtype)
+        if monoid_name in ("SUM", "COUNT"):
+            value = 1 if monoid_name == "COUNT" else int(value)
+            lo, hi = min(0, value), max(0, value)
+            coeffs = jnp.zeros((hi - lo + 1,), dtype)
+            coeffs = coeffs.at[0 - lo].add(1 - p).at[value - lo].add(p)
+            return cls(coeffs, lo)
+        if monoid_name == "MIN":   # absent tuple contributes X^{+inf}
+            return cls(jnp.array([p], dtype), int(value), p_pos_inf=1 - p)
+        if monoid_name == "MAX":
+            return cls(jnp.array([p], dtype), int(value), p_neg_inf=1 - p)
+        raise ValueError(monoid_name)
+
+    # -- basic properties ---------------------------------------------------
+    @property
+    def support(self) -> jnp.ndarray:
+        return self.offset + jnp.arange(self.coeffs.shape[0])
+
+    def total_mass(self):
+        return self.coeffs.sum() + self.p_pos_inf + self.p_neg_inf
+
+    def normalize(self) -> "PGF":
+        z = self.total_mass()
+        return PGF(self.coeffs / z, self.offset, self.p_pos_inf / z,
+                   self.p_neg_inf / z)
+
+    def mass_at(self, value):
+        """P(A = value); handles out-of-support gracefully."""
+        idx = jnp.asarray(value) - self.offset
+        k = self.coeffs.shape[0]
+        ok = (idx >= 0) & (idx < k)
+        return jnp.where(ok, self.coeffs[jnp.clip(idx, 0, k - 1)], 0.0)
+
+    def cdf(self, value):
+        """P(A <= value) over the finite support plus -inf mass."""
+        idx = jnp.asarray(value) - self.offset
+        cum = jnp.cumsum(self.coeffs)
+        k = self.coeffs.shape[0]
+        below = idx < 0
+        val = cum[jnp.clip(idx, 0, k - 1)]
+        return self.p_neg_inf + jnp.where(below, 0.0, jnp.where(idx >= k, cum[-1], val))
+
+    def mean(self):
+        return jnp.sum(self.coeffs * self.support.astype(self.coeffs.dtype))
+
+    def variance(self):
+        s = self.support.astype(self.coeffs.dtype)
+        mu = self.mean()
+        return jnp.sum(self.coeffs * (s - mu) ** 2)
+
+    def confidence_interval(self, gamma: float = 0.95):
+        """Central interval [lo, hi] with P(lo <= A <= hi) >= gamma (Fig. 5 ADT)."""
+        tail = (1.0 - gamma) / 2.0
+        cum = jnp.cumsum(self.coeffs)
+        lo = jnp.searchsorted(cum, tail)
+        hi = jnp.searchsorted(cum, 1.0 - tail)
+        return self.offset + lo, self.offset + jnp.minimum(hi, self.coeffs.shape[0] - 1)
+
+    # -- products (Theorem 1 in each monoid) --------------------------------
+    def mul_sum(self, other: "PGF") -> "PGF":
+        """PGF of A + B: exponents add ⇒ coefficient convolution (§V-A/C)."""
+        k1, k2 = self.coeffs.shape[0], other.coeffs.shape[0]
+        if min(k1, k2) * max(k1, k2) <= FFT_THRESHOLD ** 2 and max(k1, k2) <= FFT_THRESHOLD:
+            out = jnp.convolve(self.coeffs, other.coeffs)          # schoolbook
+        else:
+            out = fft_convolve(self.coeffs, other.coeffs)          # paper's FFTW path
+        return PGF(out, self.offset + other.offset)
+
+    def _survival(self):
+        """P(A >= s_k) including +inf mass, aligned with self.support."""
+        rev = jnp.cumsum(self.coeffs[::-1])[::-1]
+        return rev + self.p_pos_inf
+
+    def mul_min(self, other: "PGF") -> "PGF":
+        """×_MIN of §V-B: P(min=k) = P(A=k)P(B>=k) + P(A>k)P(B=k).
+
+        The paper forms all pairwise terms (O(K²)); with suffix survival sums
+        this is O(K) on the union grid — same numbers, TPU-friendly layout.
+        """
+        lo = min(self.offset, other.offset)
+        hi = max(self.offset + self.coeffs.shape[0],
+                 other.offset + other.coeffs.shape[0])
+        a = _embed(self, lo, hi)
+        b = _embed(other, lo, hi)
+        sa, sb = a._survival(), b._survival()
+        # P(A > k) = P(A >= k) - P(A = k)
+        out = a.coeffs * sb + (sa - a.coeffs) * b.coeffs
+        return PGF(out, lo, p_pos_inf=self.p_pos_inf * other.p_pos_inf)
+
+    def mul_max(self, other: "PGF") -> "PGF":
+        lo = min(self.offset, other.offset)
+        hi = max(self.offset + self.coeffs.shape[0],
+                 other.offset + other.coeffs.shape[0])
+        a = _embed(self, lo, hi)
+        b = _embed(other, lo, hi)
+        ca = jnp.cumsum(a.coeffs) + a.p_neg_inf     # P(A <= k)
+        cb = jnp.cumsum(b.coeffs) + b.p_neg_inf
+        out = a.coeffs * cb + (ca - a.coeffs) * b.coeffs
+        return PGF(out, lo, p_neg_inf=self.p_neg_inf * other.p_neg_inf)
+
+    def mul(self, other: "PGF", monoid_name: str = "SUM") -> "PGF":
+        if monoid_name in ("SUM", "COUNT"):
+            return self.mul_sum(other)
+        if monoid_name == "MIN":
+            return self.mul_min(other)
+        if monoid_name == "MAX":
+            return self.mul_max(other)
+        raise ValueError(monoid_name)
+
+    # -- §V-B.2 truncation ---------------------------------------------------
+    def truncate_smallest(self, kappa: int) -> "PGF":
+        """Keep the κ smallest support values (MIN approximation §V-B.2).
+
+        Dropped mass is *not* renormalised — it is reported as the +inf tail,
+        mirroring the paper's 'eliminate the largest value' capacity rule.
+        """
+        k = min(kappa, self.coeffs.shape[0])
+        dropped = self.coeffs[k:].sum()
+        return PGF(self.coeffs[:k], self.offset,
+                   p_pos_inf=self.p_pos_inf + dropped, p_neg_inf=self.p_neg_inf)
+
+    def stretch(self, factor: int) -> "PGF":
+        """Evaluate at X^factor: spread coefficients `factor` apart (§VII-D).
+
+        For list item (3, 0.2z² + 0.3z + 0.5) the paper creates
+        0.2z⁶ + 0.3z³ + 0.5 — exactly this operation.
+        """
+        factor = int(factor)
+        if factor == 0:
+            one = jnp.zeros((1,), self.coeffs.dtype).at[0].set(self.coeffs.sum())
+            return PGF(one, 0, self.p_pos_inf, self.p_neg_inf)
+        k = self.coeffs.shape[0]
+        out = jnp.zeros(((k - 1) * factor + 1,), self.coeffs.dtype)
+        out = out.at[::factor].set(self.coeffs)
+        return PGF(out, self.offset * factor, self.p_pos_inf, self.p_neg_inf)
+
+    def to_numpy(self):
+        return np.asarray(self.coeffs), self.offset, float(self.p_pos_inf), float(self.p_neg_inf)
+
+
+def _embed(f: PGF, lo: int, hi: int) -> PGF:
+    """Re-grid a PGF onto [lo, hi) (static bounds)."""
+    pad_l = f.offset - lo
+    pad_r = (hi - lo) - pad_l - f.coeffs.shape[0]
+    return PGF(jnp.pad(f.coeffs, (pad_l, pad_r)), lo, f.p_pos_inf, f.p_neg_inf)
+
+
+def fft_convolve(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Real FFT linear convolution — the paper's FFTW product, via XLA FFT."""
+    n = a.shape[0] + b.shape[0] - 1
+    nfft = 1 << max(1, (n - 1).bit_length())
+    fa = jnp.fft.rfft(a, nfft)
+    fb = jnp.fft.rfft(b, nfft)
+    out = jnp.fft.irfft(fa * fb, nfft)[:n]
+    # Convolutions of probability vectors are nonnegative; clamp FFT noise.
+    return jnp.clip(out, 0.0, None)
+
+
+def convolve_batch(polys: jnp.ndarray) -> jnp.ndarray:
+    """One divide-and-conquer tree *level*: multiply polys[2i] by polys[2i+1].
+
+    polys: (B, K) with B even. Returns (B//2, 2K-1). Executed as a single
+    batched FFT — the TPU replacement for FFTW plan-per-pair.
+    """
+    b, k = polys.shape
+    n = 2 * k - 1
+    nfft = 1 << max(1, (n - 1).bit_length())
+    f = jnp.fft.rfft(polys, nfft, axis=-1)
+    prod = f[0::2] * f[1::2]
+    out = jnp.fft.irfft(prod, nfft, axis=-1)[:, :n]
+    return jnp.clip(out, 0.0, None)
+
+
+def product_tree(factors: jnp.ndarray, offsets: Sequence[int] | None = None) -> PGF:
+    """Exact product of many small PGFs (paper §VII-B 'two by two ... until
+    we get a single polynomial').
+
+    factors: (B, K) equal-width coefficient rows (pad small ones with a
+    leading 1-mass if needed).  Rows are multiplied pairwise level by level;
+    odd rows are carried to the next level.  Total work O(n log² n).
+    """
+    rows = [factors[i] for i in range(factors.shape[0])]
+    if offsets is None:
+        offsets = [0] * len(rows)
+    offset = sum(int(o) for o in offsets)
+    while len(rows) > 1:
+        if len(rows) % 2 == 1:
+            carry, rows = rows[-1], rows[:-1]
+        else:
+            carry = None
+        width = max(r.shape[0] for r in rows)
+        batch = jnp.stack([jnp.pad(r, (0, width - r.shape[0])) for r in rows])
+        merged = convolve_batch(batch)
+        rows = [merged[i] for i in range(merged.shape[0])]
+        if carry is not None:
+            rows.append(jnp.pad(carry, (0, merged.shape[1] - carry.shape[0]))
+                        if carry.shape[0] < merged.shape[1] else carry)
+    return PGF(rows[0], offset)
+
+
+def possible_worlds_pgf(probs, values, monoid_name: str = "SUM") -> dict:
+    """Brute-force 2^n possible-worlds oracle (Fig. 2 semantics). Host-side,
+    n <= ~20. Returns {outcome: probability} including math.inf/-math.inf."""
+    from . import monoids as M
+    probs = np.asarray(probs, dtype=np.float64)
+    values = np.asarray(values, dtype=np.float64)
+    m = M.BY_NAME[monoid_name]
+    n = len(probs)
+    out: dict = {}
+    for world in range(1 << n):
+        pr, acc = 1.0, m.neutral
+        for i in range(n):
+            if world >> i & 1:
+                pr *= probs[i]
+                v = 1.0 if monoid_name == "COUNT" else values[i]
+                acc = acc + v if m.name in ("SUM", "COUNT") else (
+                    min(acc, v) if m.name == "MIN" else max(acc, v))
+            else:
+                pr *= 1.0 - probs[i]
+        out[acc] = out.get(acc, 0.0) + pr
+    return out

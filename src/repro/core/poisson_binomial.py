@@ -1,0 +1,179 @@
+"""Exact COUNT / SUM distributions via log-domain characteristic functions.
+
+This is the headline TPU adaptation of the paper's FFTW product tree
+(DESIGN.md §2).  The COUNT PGF
+
+    Q(X) = prod_i (q_i + p_i X)                       (paper Eq. 4)
+
+is a degree-n polynomial; instead of multiplying factors pairwise we evaluate
+Q at the (N)-th roots of unity w^k = exp(2*pi*i*k/N), N = n+1:
+
+    log Q(w^k) = sum_i log(q_i + p_i w^k)
+
+The product over billions of tuples becomes a **sum of complex logs** — an
+additive reduction that maps onto one `psum` over the mesh — followed by a
+single length-N FFT to recover the coefficients:
+
+    coeffs = FFT(exp(logQ)) / N        (since Q_k = N * IFFT(coeffs)_k)
+
+Branch cuts of the complex log are harmless: exp(sum of logs) equals the
+product regardless of the 2*pi*i branch each term lands on.
+
+SUM with nonnegative integer values a_i (§V-C.2) is the same machinery with
+w^{k a_i}: one pass, O(n * M) VPU-friendly flops, M = sum(a_i).  The
+paper-faithful alternative (group by value, COUNT per group, stretch, FFT
+product tree, §V-C eq. for Q_M) is `sum_pgf_grouped` below; both are exact
+and tested against each other and the possible-worlds oracle.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import default_float
+from .pgf import PGF, product_tree
+
+
+def _log_factor(p, cos_t, sin_t):
+    """(log|z|, arg z) for z = (1-p) + p * e^{i t}, elementwise.
+
+    Stable form: |z|^2 = q^2 + 2 q p cos t + p^2.
+    """
+    q = 1.0 - p
+    re = q + p * cos_t
+    im = p * sin_t
+    log_abs = 0.5 * jnp.log(jnp.maximum(re * re + im * im, 1e-300))
+    ang = jnp.arctan2(im, re)
+    return log_abs, ang
+
+
+def logcf_terms(probs: jnp.ndarray, values: jnp.ndarray, num_freq: int,
+                block: int = 4096):
+    """Accumulated (sum over tuples) log CF at the num_freq DFT frequencies.
+
+    Returns (log_abs_sum, angle_sum), each (num_freq,).  This is the
+    `Accumulate` half of the CF UDA; `Merge` is elementwise `+` / `psum`.
+    Blocked over tuples so the (block, num_freq) intermediate stays bounded.
+    """
+    dtype = probs.dtype
+    n = probs.shape[0]
+    # Bound the (num_freq, block) intermediate to ~2^24 elements so the scan
+    # body's working set stays cache/VMEM sized regardless of distribution
+    # width.  (The Pallas kernel does the same with its grid.)
+    block = max(64, min(block, (1 << 24) // max(1, num_freq)))
+    nfull = ((n + block - 1) // block) * block
+    probs = jnp.pad(probs, (0, nfull - n))          # p=0 pads contribute log(1)=0
+    values = jnp.pad(values, (0, nfull - n))
+    k = jnp.arange(num_freq, dtype=dtype)
+
+    def body(carry, chunk):
+        la, an = carry
+        p, a = chunk
+        # theta[k, i] = 2 pi k a_i / N  (mod 2 pi for accuracy at large k*a)
+        phase = (k[:, None] * a[None, :]) % num_freq
+        theta = (2.0 * math.pi / num_freq) * phase
+        l, t = _log_factor(p[None, :], jnp.cos(theta), jnp.sin(theta))
+        return (la + l.sum(-1), an + t.sum(-1)), None
+
+    init = (jnp.zeros((num_freq,), dtype), jnp.zeros((num_freq,), dtype))
+    chunks = (probs.reshape(-1, block), values.reshape(-1, block))
+    (log_abs, angle), _ = jax.lax.scan(body, init, chunks)
+    return log_abs, angle
+
+
+def logcf_finalize(log_abs: jnp.ndarray, angle: jnp.ndarray) -> jnp.ndarray:
+    """exp + FFT: recover the coefficient vector from summed log CF."""
+    q = jnp.exp(log_abs) * jax.lax.complex(jnp.cos(angle), jnp.sin(angle))
+    coeffs = jnp.fft.fft(q).real / log_abs.shape[0]
+    return jnp.clip(coeffs, 0.0, None)
+
+
+# Above this size the O(n log^2 n) FFT product tree beats the O(n*F)
+# log-CF evaluation on a single host (the paper's §VII-B dispatch, one
+# level up).  The log-CF stays the distributed/TPU path: bounded-F,
+# one-psum-merge (DESIGN.md §2).
+TREE_THRESHOLD = 8192
+
+
+def count_pgf_tree(probs: jnp.ndarray) -> PGF:
+    """Exact COUNT via the paper-faithful pairwise FFT product tree."""
+    probs = jnp.asarray(probs, default_float())
+    factors = jnp.stack([1.0 - probs, probs], axis=1)   # (n, 2) rows
+    f = product_tree(factors)
+    return PGF(f.coeffs[: probs.shape[0] + 1], 0)
+
+
+def count_pgf(probs: jnp.ndarray, block: int = 4096,
+              method: str = "auto") -> PGF:
+    """Exact Poisson-binomial COUNT distribution (paper Eq. 4).
+
+    method: 'cf' (log-CF + FFT), 'tree' (pairwise FFT product tree), or
+    'auto' (paper §VII-B-style dispatch on size).
+    """
+    probs = jnp.asarray(probs, default_float())
+    n = probs.shape[0]
+    if method == "tree" or (method == "auto" and n >= TREE_THRESHOLD):
+        return count_pgf_tree(probs)
+    la, an = logcf_terms(probs, jnp.ones_like(probs), n + 1, block)
+    return PGF(logcf_finalize(la, an), 0)
+
+
+def sum_pgf(probs: jnp.ndarray, values: jnp.ndarray,
+            max_sum: int | None = None, block: int = 4096,
+            method: str = "auto") -> PGF:
+    """Exact SUM distribution for nonnegative-integer values (§V-C.2).
+
+    method 'auto' routes large single-host inputs to the paper-faithful
+    grouped/stretch/FFT path (O(sum log^2) instead of O(n * sum)); 'cf'
+    forces the log-CF path (the distributed building block).
+    """
+    dtype = default_float()
+    probs = jnp.asarray(probs, dtype)
+    values = jnp.asarray(values, dtype)
+    if method == "grouped" or (method == "auto"
+                               and probs.shape[0] >= TREE_THRESHOLD):
+        return sum_pgf_grouped(probs, values)
+    if max_sum is None:
+        max_sum = int(np.asarray(jnp.sum(values)))
+    la, an = logcf_terms(probs, values, max_sum + 1, block)
+    return PGF(logcf_finalize(la, an), 0)
+
+
+def sum_pgf_grouped(probs: jnp.ndarray, values: jnp.ndarray) -> PGF:
+    """Paper-faithful SUM: group tuples by value, COUNT-PGF per group,
+    'evaluate at X^{alpha_k}' by coefficient stretching, FFT product tree
+    (§V-C general case + §VII-D implementation).  Host-driven loop over the
+    d distinct values; exact, used as the baseline in §Perf.
+    """
+    probs_np = np.asarray(probs, np.float64)
+    vals_np = np.asarray(values)
+    distinct = np.unique(vals_np)
+    factors: list[PGF] = []
+    for alpha in distinct:
+        sel = vals_np == alpha
+        g = count_pgf(jnp.asarray(probs_np[sel]))
+        if int(alpha) == 0:
+            continue  # value-0 tuples do not move the sum
+        factors.append(g.stretch(int(alpha)))
+    if not factors:
+        return PGF(jnp.ones((1,), default_float()), 0)
+    acc = factors[0]
+    for f in factors[1:]:
+        acc = acc.mul_sum(f)
+    return acc
+
+
+# ------------------------------------------------------------------ sharded
+def sharded_logcf(probs, values, num_freq: int, axis_name: str | tuple):
+    """Per-shard accumulate + cross-shard psum merge, for use inside
+    shard_map: tuples sharded over `axis_name`, frequencies replicated (or
+    sharded over a different axis by the caller).  One collective total.
+    """
+    la, an = logcf_terms(probs, values, num_freq)
+    la = jax.lax.psum(la, axis_name)
+    an = jax.lax.psum(an, axis_name)
+    return la, an

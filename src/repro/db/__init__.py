@@ -1,0 +1,12 @@
+"""Probabilistic relational layer (paper §IV-F, §VI, §VIII).
+
+    table.py        columnar probabilistic tables with validity masks
+    operators.py    sigma / pi / join / grouped-UDA operators (Table I)
+    plans.py        probabilistic -> deterministic plan DSL
+    tpch.py         synthetic TPC-H workload + Q1/Q3/Q6/Q18/Q20 in 4 modes
+    distributed.py  shard_map query execution (psum UDA merge)
+"""
+from . import distributed, operators, plans, tpch
+from .table import Table
+
+__all__ = ["Table", "distributed", "operators", "plans", "tpch"]

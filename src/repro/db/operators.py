@@ -1,0 +1,300 @@
+"""Probabilistic relational operators (paper §IV-F / Table I), vectorised.
+
+Each operator is the deterministic-plan translation of Table I:
+
+    I    R -> R^p                Table.from_columns(prob=...)
+    II   sigma_C (deterministic) `select`: valid &= C
+    III  sigma_{A theta B}       `reweight`: p *= P(theta); PGF comparisons
+                                 come from repro.core.compare / approx cdfs
+    IV   R join_C S              `fk_join` (many-to-one) / `general_join`
+    V    pi_A                    `project`: GROUP BY + AtLeastOne UDA
+    VI   aggregation             `group_*`: GROUP BY + PGF UDA per group
+
+All operators run under jit with static capacities; liveness is carried by
+the validity mask (a dead tuple behaves exactly like p = 0 for every UDA).
+Grouping uses a fixed `max_groups`; overflows are detectable (group id ==
+max_groups-1 fill bucket is flagged invalid).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core import poisson_binomial as pb
+from ..core.approx import MAX_ORDER, _bernoulli_cumulant_polys
+from .table import Table
+
+# --------------------------------------------------------------- grouping
+def encode_keys(table: Table, keys: Sequence[str],
+                multipliers: Sequence[int] | None = None) -> jnp.ndarray:
+    """Combine key columns into one sortable int64-ish code (f64-safe ints).
+
+    multipliers[i] must exceed max(keys[i+1:]) range; defaults assume each
+    key < 2**20 which holds for every workload in repro.db.tpch.
+    """
+    code = jnp.zeros((table.capacity,), jnp.int64 if jax.config.jax_enable_x64
+                     else jnp.int32)
+    for i, k in enumerate(keys):
+        m = multipliers[i] if multipliers else (1 << 20)
+        code = code * m + table[k].astype(code.dtype)
+    return code
+
+
+def group_ids(table: Table, keys: Sequence[str], max_groups: int):
+    """Assign each valid row a group id in [0, max_groups).
+
+    Returns (ids, group_codes, group_valid): `ids` is per-row (invalid rows
+    get id max_groups-1 but contribute p=0 everywhere), `group_codes` the
+    representative key code per group, `group_valid` marks live groups.
+    """
+    code = encode_keys(table, keys)
+    big = jnp.iinfo(code.dtype).max
+    code_live = jnp.where(table.valid, code, big)
+    uniq = jnp.unique(code_live, size=max_groups, fill_value=big)
+    ids = jnp.searchsorted(uniq, code_live)
+    ids = jnp.clip(ids, 0, max_groups - 1)
+    return ids, uniq, uniq != big
+
+
+def group_key_columns(table: Table, keys: Sequence[str], ids, max_groups: int):
+    """Representative value of each key column per group.
+
+    All valid writers of a group agree by construction; invalid rows write
+    the identity 0, so this requires nonnegative key columns (true for every
+    repro.db workload — keys are ids/dates/quantities).
+    """
+    out = {}
+    for k in keys:
+        col = table[k]
+        out[k] = jax.ops.segment_max(
+            jnp.where(table.valid, col, jnp.zeros_like(col)), ids,
+            num_segments=max_groups)
+    return out
+
+
+# -------------------------------------------------------------- selection
+def select(table: Table, pred: Callable[[Table], jnp.ndarray]) -> Table:
+    """sigma_C, deterministic condition (Table I row II)."""
+    return table.with_valid(table.valid & pred(table))
+
+
+def reweight(table: Table, p_cond: jnp.ndarray) -> Table:
+    """sigma with probabilistic condition (Table I row III): p *= P(cond).
+
+    The caller computes P(cond) from the PGF ADT (compare.py / approx cdfs);
+    the condition attributes are then discarded per the language restriction.
+    """
+    return table.with_prob(table.prob * p_cond)
+
+
+# -------------------------------------------------------------- projection
+def project(table: Table, keys: Sequence[str], max_groups: int) -> Table:
+    """pi_A (Table I row V): GROUP BY keys + AtLeastOne UDA.
+
+    p_group = 1 - prod_{tuples in group} (1 - p).
+    """
+    ids, _, gvalid = group_ids(table, keys, max_groups)
+    logq = jnp.where(table.valid, jnp.log1p(-table.masked_prob()), 0.0)
+    acc = jax.ops.segment_sum(logq, ids, num_segments=max_groups)
+    prob = 1.0 - jnp.exp(acc)
+    cols = group_key_columns(table, keys, ids, max_groups)
+    return Table(cols, prob, gvalid)
+
+
+# -------------------------------------------------------------------- joins
+def fk_join(left: Table, right: Table, left_key: str, right_key: str,
+            right_cols: Sequence[str], suffix: str = "") -> Table:
+    """Many-to-one equijoin (fact -> dimension), Table I row IV.
+
+    Each left row matches at most one VALID right row (right_key unique
+    among valid rows — the TPC-H FK pattern).  Output capacity = left
+    capacity; p = p_l * p_r.  Right lookup is sort + searchsorted, the
+    XLA-friendly hash-join stand-in.
+    """
+    rkey = right[right_key]
+    big = jnp.iinfo(jnp.int32).max
+    rk = jnp.where(right.valid, rkey.astype(jnp.int32), big)
+    order = jnp.argsort(rk)
+    rk_sorted = rk[order]
+    lk = left[left_key].astype(jnp.int32)
+    pos = jnp.searchsorted(rk_sorted, lk)
+    pos = jnp.clip(pos, 0, right.capacity - 1)
+    src = order[pos]
+    hit = rk_sorted[jnp.clip(pos, 0, right.capacity - 1)] == lk
+
+    cols = dict(left.columns)
+    for c in right_cols:
+        cols[c + suffix] = right[c][src]
+    prob = left.prob * jnp.where(hit, right.prob[src], 0.0)
+    valid = left.valid & hit
+    return Table(cols, prob, valid)
+
+
+def general_join(left: Table, right: Table,
+                 cond: Callable[[Table, Table, jnp.ndarray, jnp.ndarray], jnp.ndarray],
+                 right_cols: Sequence[str], suffix: str = "") -> Table:
+    """Nested-loop theta-join for small relations: capacity |L| x |R|.
+
+    cond(left, right, i_idx, j_idx) -> bool over the flattened pair grid.
+    """
+    nl, nr = left.capacity, right.capacity
+    ii = jnp.repeat(jnp.arange(nl), nr)
+    jj = jnp.tile(jnp.arange(nr), nl)
+    cols = {k: v[ii] for k, v in left.columns.items()}
+    for c in right_cols:
+        cols[c + suffix] = right[c][jj]
+    ok = cond(left, right, ii, jj)
+    prob = left.prob[ii] * right.prob[jj]
+    valid = left.valid[ii] & right.valid[jj] & ok
+    return Table(cols, prob, valid)
+
+
+# ------------------------------------------------- grouped aggregation UDAs
+def group_atleastone(table: Table, ids, max_groups: int) -> jnp.ndarray:
+    """Per-group confidence 1 - prod(1-p) — the 'group confidence' query mode."""
+    logq = jnp.log1p(-table.masked_prob())
+    acc = jax.ops.segment_sum(logq, ids, num_segments=max_groups)
+    return 1.0 - jnp.exp(acc)
+
+
+def group_normal_terms(table: Table, values, ids, max_groups: int):
+    """Per-group (mean, var) of the probabilistic SUM (paper §V-C.3 Normal,
+    with the variance erratum fixed: var = sum v^2 p (1-p))."""
+    p = table.masked_prob()
+    mu = jax.ops.segment_sum(values * p, ids, num_segments=max_groups)
+    var = jax.ops.segment_sum(values ** 2 * p * (1 - p), ids,
+                              num_segments=max_groups)
+    return mu, var
+
+
+def group_cumulant_terms(table: Table, values, ids, max_groups: int,
+                         orders: int = 8) -> jnp.ndarray:
+    """Per-group cumulant partial sums (G, orders) for the moment method."""
+    p = table.masked_prob()
+    dtype = p.dtype
+    table_c = jnp.asarray(_bernoulli_cumulant_polys()[1:orders + 1], dtype)
+    powers = p[None, :] ** jnp.arange(MAX_ORDER + 1, dtype=dtype)[:, None]
+    kappas = table_c @ powers                               # (orders, n)
+    vpow = values[None, :] ** jnp.arange(1, orders + 1, dtype=dtype)[:, None]
+    terms = (kappas * vpow).T                               # (n, orders)
+    return jax.ops.segment_sum(terms, ids, num_segments=max_groups)
+
+
+def group_logcf(table: Table, values, ids, max_groups: int, num_freq: int,
+                block: int = 512):
+    """Per-group summed log CF -> (G, F) log_abs and angle (exact SUM/COUNT
+    per group).  Blocked over tuples so the (block, F) tile stays bounded —
+    the grouped twin of kernels/pb_cf.py.
+    """
+    p = table.masked_prob()
+    dtype = p.dtype
+    n = p.shape[0]
+    v = jnp.asarray(values, dtype)
+    block = max(64, min(block, (1 << 22) // max(1, num_freq)))
+    nfull = ((n + block - 1) // block) * block
+    p = jnp.pad(p, (0, nfull - n))
+    v = jnp.pad(v, (0, nfull - n))
+    ids_p = jnp.pad(ids, (0, nfull - n), constant_values=max_groups - 1)
+    k = jnp.arange(num_freq, dtype=dtype)
+
+    def body(carry, chunk):
+        la, an = carry
+        pc, vc, gc = chunk
+        phase = (k[None, :] * vc[:, None]) % num_freq
+        theta = (2.0 * math.pi / num_freq) * phase
+        q = 1.0 - pc[:, None]
+        re = q + pc[:, None] * jnp.cos(theta)
+        im = pc[:, None] * jnp.sin(theta)
+        tiny = 1e-30 if dtype == jnp.float32 else 1e-300
+        l = 0.5 * jnp.log(jnp.maximum(re * re + im * im, tiny))
+        t = jnp.arctan2(im, re)
+        la = la.at[gc].add(l)
+        an = an.at[gc].add(t)
+        return (la, an), None
+
+    init = (jnp.zeros((max_groups, num_freq), dtype),
+            jnp.zeros((max_groups, num_freq), dtype))
+    chunks = (p.reshape(-1, block), v.reshape(-1, block), ids_p.reshape(-1, block))
+    (la, an), _ = jax.lax.scan(body, init, chunks)
+    return la, an
+
+
+def group_logcf_finalize(la: jnp.ndarray, an: jnp.ndarray) -> jnp.ndarray:
+    """(G, F) log CF -> (G, F) coefficient rows via one batched FFT."""
+    q = jnp.exp(la) * jax.lax.complex(jnp.cos(an), jnp.sin(an))
+    coeffs = jnp.fft.fft(q, axis=-1).real / la.shape[-1]
+    return jnp.clip(coeffs, 0.0, None)
+
+
+def group_minmax(table: Table, values, ids, max_groups: int, sign: float = 1.0):
+    """Grouped MIN (sign=+1) / MAX (sign=-1) masses, fully vectorised.
+
+    Sort rows by (group, sign*value); fold duplicates; per-group prefix
+    survival products (paper §V-B.1):
+
+        P(agg = v_j) = prod_{v_l better than v_j} Q_l * (1 - Q_j),
+        Q_l = prod_{tuples at v_l} (1 - p).
+
+    Returns per-row (sorted order) arrays: (gid, value, mass, is_seg_head)
+    plus per-group p_empty.  Densification/top-kappa happens downstream.
+    """
+    p = table.masked_prob()
+    v = jnp.asarray(values, p.dtype) * sign
+    n = p.shape[0]
+    # Lexsort by (group, value) via two stable argsorts — a combined float
+    # key would lose the value bits to f64 ULP at large group ids.
+    ord1 = jnp.argsort(v, stable=True)
+    ord2 = jnp.argsort(ids[ord1], stable=True)
+    order = ord1[ord2]
+    gs, vs, ps = ids[order], v[order], p[order]
+    logq = jnp.log1p(-ps)
+
+    # Segment heads: first row of each (group, value) run.
+    head = jnp.concatenate([jnp.ones((1,), bool),
+                            (gs[1:] != gs[:-1]) | (vs[1:] != vs[:-1])])
+    seg = jnp.cumsum(head) - 1                         # (n,) run index
+    run_logq = jax.ops.segment_sum(logq, seg, num_segments=n)  # log Q per run
+
+    # prefix[r] = sum of log Q over same-group runs strictly better than r
+    #           = (row prefix sum at r's head row) - (at r's group head row).
+    cs = jnp.concatenate([jnp.zeros((1,), logq.dtype),
+                          jnp.cumsum(logq)[:-1]])      # sum before each row
+    grp_head = jnp.concatenate([jnp.ones((1,), bool), gs[1:] != gs[:-1]])
+    run_head_cs = jax.ops.segment_sum(jnp.where(head, cs, 0.0), seg,
+                                      num_segments=n)  # one head per run
+    grp_base = jax.ops.segment_sum(jnp.where(grp_head, cs, 0.0), gs,
+                                   num_segments=max_groups)
+    grp_of_run = jnp.clip(jax.ops.segment_max(gs, seg, num_segments=n),
+                          0, max_groups - 1)
+    prefix = run_head_cs - grp_base[grp_of_run]
+    mass_run = jnp.exp(prefix) * (1.0 - jnp.exp(run_logq))
+
+    total_logq = jax.ops.segment_sum(jnp.log1p(-p), ids,
+                                     num_segments=max_groups)
+    p_empty = jnp.exp(total_logq)
+
+    run_value = jax.ops.segment_min(vs, seg, num_segments=n) * sign
+    run_valid = jax.ops.segment_max(ps, seg, num_segments=n) > 0
+    return dict(run_group=grp_of_run, run_value=run_value,
+                run_mass=jnp.where(run_valid, mass_run, 0.0),
+                run_valid=run_valid, p_empty=p_empty)
+
+
+# --------------------------------------------- scalar comparison epilogues
+def normal_greater(mu, var, threshold):
+    """P(N(mu, var) > threshold), vectorised over groups (§VII-D epilogue)."""
+    sigma = jnp.sqrt(jnp.maximum(var, 1e-30))
+    z = (threshold - mu) / sigma
+    return 0.5 * jax.lax.erfc(z / math.sqrt(2.0))
+
+
+def cf_greater(la, an, threshold):
+    """Exact P(S > t) from per-group log CF rows (G, F)."""
+    coeffs = group_logcf_finalize(la, an)
+    f = la.shape[-1]
+    idx = jnp.arange(f)
+    mask = idx[None, :] > jnp.asarray(threshold)[:, None]
+    return jnp.sum(coeffs * mask, axis=-1)

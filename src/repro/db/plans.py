@@ -1,0 +1,145 @@
+"""Probabilistic -> deterministic plan mapping (paper §VI, Table I).
+
+A Plan is a small dataflow DAG of operator nodes.  ``compile_plan`` walks
+the DAG and emits one jit-able function  tables -> results , realising the
+paper's central claim: probabilistic queries run on a *deterministic*
+engine (here: XLA) once every probabilistic operator is rewritten to a
+deterministic one + PGF UDA calls.
+
+Node zoo (Table I rows in brackets):
+
+    Scan(name)                               [I]   R -> R^p
+    Select(child, pred)                      [II]  sigma, deterministic cond
+    FKJoin(l, r, lk, rk, cols)               [IV]  join, deterministic cond
+    Project(child, keys, max_groups)         [V]   GROUP BY + AtLeastOne
+    GroupAgg(child, keys, agg, value, ...)   [VI]  GROUP BY + PGF UDA
+    ReweightGreater(child, agg_of, vs, ...)  [III] p *= P(SUM > threshold)
+
+This layer is deliberately small — the paper's queries are hand-planned in
+tpch.py; Plan exists so *new* queries compose without touching operators.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Sequence
+
+import jax.numpy as jnp
+
+from . import operators as ops
+from .table import Table
+
+
+class Node:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Scan(Node):
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Select(Node):
+    child: Node
+    pred: Callable[[Table], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class FKJoin(Node):
+    left: Node
+    right: Node
+    left_key: str
+    right_key: str
+    right_cols: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Project(Node):
+    child: Node
+    keys: tuple
+    max_groups: int
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupAgg(Node):
+    """Returns a dict of per-group UDA results, not a Table (PGF-valued
+    columns live outside the 1NF Table, §VI-C)."""
+    child: Node
+    keys: tuple
+    value: str            # column to aggregate ("" = COUNT)
+    agg: str              # SUM | COUNT | MIN | MAX
+    max_groups: int
+    method: str = "normal"  # normal | cumulants | exact
+
+
+@dataclasses.dataclass(frozen=True)
+class ReweightGreater(Node):
+    """sigma_{AGG(B) > C}: group child by keys, SUM(value), then keep each
+    group with p = AtLeastOne * P(SUM > threshold_col) (Table I row III)."""
+    child: Node
+    keys: tuple
+    value: str
+    threshold_col: str
+    max_groups: int
+
+
+def compile_plan(root: Node) -> Callable[[Dict[str, Table]], object]:
+    """Emit a function tables -> result (Table or dict of arrays)."""
+
+    def run(node: Node, tables: Dict[str, Table]):
+        if isinstance(node, Scan):
+            return tables[node.name]
+        if isinstance(node, Select):
+            return ops.select(run(node.child, tables), node.pred)
+        if isinstance(node, FKJoin):
+            return ops.fk_join(run(node.left, tables),
+                               run(node.right, tables),
+                               node.left_key, node.right_key,
+                               list(node.right_cols))
+        if isinstance(node, Project):
+            return ops.project(run(node.child, tables), list(node.keys),
+                               node.max_groups)
+        if isinstance(node, GroupAgg):
+            t = run(node.child, tables)
+            ids, codes, gvalid = ops.group_ids(t, list(node.keys),
+                                               node.max_groups)
+            vals = (jnp.ones_like(t.prob) if node.agg == "COUNT" or not node.value
+                    else t[node.value].astype(t.prob.dtype))
+            out = dict(valid=gvalid,
+                       keys=ops.group_key_columns(t, list(node.keys), ids,
+                                                  node.max_groups),
+                       confidence=ops.group_atleastone(t, ids,
+                                                       node.max_groups))
+            if node.agg in ("SUM", "COUNT"):
+                if node.method == "normal":
+                    out["sum"] = ops.group_normal_terms(t, vals, ids,
+                                                        node.max_groups)
+                elif node.method == "cumulants":
+                    out["cumulants"] = ops.group_cumulant_terms(
+                        t, vals, ids, node.max_groups)
+                else:
+                    raise ValueError(node.method)
+            elif node.agg in ("MIN", "MAX"):
+                out["minmax"] = ops.group_minmax(
+                    t, t[node.value].astype(t.prob.dtype), ids,
+                    node.max_groups, sign=1.0 if node.agg == "MIN" else -1.0)
+            else:
+                raise ValueError(node.agg)
+            return out
+        if isinstance(node, ReweightGreater):
+            t = run(node.child, tables)
+            ids, codes, gvalid = ops.group_ids(t, list(node.keys),
+                                               node.max_groups)
+            vals = t[node.value].astype(t.prob.dtype)
+            mu, var = ops.group_normal_terms(t, vals, ids, node.max_groups)
+            thr_cols = ops.group_key_columns(
+                t, list(node.keys) + [node.threshold_col], ids,
+                node.max_groups)
+            p_gt = ops.normal_greater(
+                mu, var, thr_cols[node.threshold_col].astype(mu.dtype))
+            conf = ops.group_atleastone(t, ids, node.max_groups)
+            cols = {k: thr_cols[k] for k in node.keys}
+            return Table(cols, conf * p_gt, gvalid)
+        raise TypeError(node)
+
+    return lambda tables: run(root, tables)

@@ -1,0 +1,114 @@
+"""Columnar probabilistic tables (paper Definition 3, JAX edition).
+
+A probabilistic table is a fixed-capacity struct-of-arrays:
+
+    columns: dict[str, (capacity,) array]   single-valued attributes
+    prob:    (capacity,) float              the p column (tuple probability)
+    valid:   (capacity,) bool               row liveness mask
+
+JAX requires static shapes, so relational operators never shrink a table —
+selection flips `valid` bits (the paper's Glade engine similarly streams
+tuples through predicates; our mask is the vectorised equivalent), and
+operators that grow rows (joins) have static output capacities.
+
+A *deterministic* relation is the paper's gamma-embedding (§IV-E): the same
+structure with prob = 1.  PGF-valued attributes (aggregation results) are
+carried outside the Table as UDA states / dense PGFs by the plan layer —
+1NF columns here are scalars only, matching the paper's "single valued" vs
+"probability distribution" column split (§VI-C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Table:
+    columns: Dict[str, jnp.ndarray]
+    prob: jnp.ndarray
+    valid: jnp.ndarray
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return ((tuple(self.columns[k] for k in names), self.prob, self.valid),
+                (names,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        cols, prob, valid = children
+        return cls(dict(zip(aux[0], cols)), prob, valid)
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_columns(cls, columns: Dict[str, jnp.ndarray],
+                     prob: jnp.ndarray | None = None,
+                     valid: jnp.ndarray | None = None) -> "Table":
+        n = next(iter(columns.values())).shape[0]
+        for k, v in columns.items():
+            assert v.shape[0] == n, f"column {k} length mismatch"
+        if prob is None:  # deterministic relation: gamma-embedding, p = 1
+            prob = jnp.ones((n,), jnp.float32)
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+        return cls(dict(columns), prob, valid)
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.prob.shape[0]
+
+    def num_valid(self) -> jnp.ndarray:
+        return jnp.sum(self.valid)
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    # -- functional updates ----------------------------------------------------
+    def with_valid(self, valid: jnp.ndarray) -> "Table":
+        return Table(self.columns, self.prob, valid)
+
+    def with_prob(self, prob: jnp.ndarray) -> "Table":
+        return Table(self.columns, prob, self.valid)
+
+    def with_column(self, name: str, values: jnp.ndarray) -> "Table":
+        cols = dict(self.columns)
+        cols[name] = values
+        return Table(cols, self.prob, self.valid)
+
+    def select_columns(self, names) -> "Table":
+        return Table({k: self.columns[k] for k in names}, self.prob, self.valid)
+
+    def masked_prob(self) -> jnp.ndarray:
+        """p with invalid rows zeroed — the UDA-facing view (a dead tuple is
+        indistinguishable from a p = 0 tuple for every aggregate)."""
+        return jnp.where(self.valid, self.prob, 0.0)
+
+    # -- host-side materialisation (tests / demos) -----------------------------
+    def to_pandas_like(self) -> dict:
+        mask = np.asarray(self.valid)
+        out = {k: np.asarray(v)[mask] for k, v in self.columns.items()}
+        out["p"] = np.asarray(self.prob)[mask]
+        return out
+
+    def pad_to(self, capacity: int) -> "Table":
+        n = self.capacity
+        assert capacity >= n
+        pad = capacity - n
+        cols = {k: jnp.pad(v, (0, pad)) for k, v in self.columns.items()}
+        return Table(cols, jnp.pad(self.prob, (0, pad)),
+                     jnp.pad(self.valid, (0, pad)))
+
+
+def concat(a: Table, b: Table) -> Table:
+    keys = sorted(a.columns)
+    assert keys == sorted(b.columns)
+    cols = {k: jnp.concatenate([a.columns[k], b.columns[k]]) for k in keys}
+    return Table(cols, jnp.concatenate([a.prob, b.prob]),
+                 jnp.concatenate([a.valid, b.valid]))

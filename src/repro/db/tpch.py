@@ -1,0 +1,310 @@
+"""Synthetic TPC-H-like probabilistic workload (paper §VIII).
+
+The paper evaluates on TPC-H with an added uniform-random `p` column per
+relation ("a randomly selected number between 0.0 and 1.0").  We reproduce
+the schema subset its queries touch, a size-parameterised generator (scale
+factor ~ rows, CPU-feasible), and the probabilistic query variants in the
+paper's four modes:
+
+    deterministic      the plain query (p ignored)
+    confidence         P(result non-empty)        = AtLeastOne over the result
+    group_confidence   P(group non-empty) per group
+    aggregate          full PGF aggregate distribution per group
+                       (exact log-CF / Normal / moment-based, §V)
+
+Queries: Q1, Q3, Q6, Q18 and the paper's worked example Q20 (Fig. 6).
+Dates are day numbers (int), prices/quantities integers — the paper's own
+integer-grid restriction (§V-C.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import poisson_binomial as pb
+from . import operators as ops
+from .table import Table
+
+DAY0_1995 = 9131          # days since epoch-ish origin for synthetic dates
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TPCH:
+    """A scale-parameterised synthetic TPC-H instance with p columns."""
+
+    lineitem: Table
+    orders: Table
+    customer: Table
+    part: Table
+    partsupp: Table
+    supplier: Table
+    nation: Table
+    scale: dict
+
+    _TABLES = ("lineitem", "orders", "customer", "part", "partsupp",
+               "supplier", "nation")
+
+    def tree_flatten(self):
+        return (tuple(getattr(self, t) for t in self._TABLES),
+                (tuple(sorted(self.scale.items())),))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, scale=dict(aux[0]))
+
+
+def generate(n_orders: int = 2000, lines_per_order: int = 4,
+             n_parts: int = 200, n_suppliers: int = 50,
+             n_customers: int = 300, n_nations: int = 25,
+             seed: int = 0, prob_mode: str = "uniform") -> TPCH:
+    rng = np.random.default_rng(seed)
+    n_lineitem = n_orders * lines_per_order
+    n_partsupp = n_parts * 4
+
+    def probs(n):
+        if prob_mode == "uniform":
+            return rng.uniform(0.0, 1.0, n).astype(np.float64)
+        return np.ones(n)
+
+    nation = Table.from_columns({
+        "n_nationkey": jnp.arange(n_nations),
+        "n_name": jnp.arange(n_nations),          # name id; 3 == "CANADA"
+    }, prob=jnp.asarray(probs(n_nations)))
+
+    supplier = Table.from_columns({
+        "s_suppkey": jnp.arange(n_suppliers),
+        "s_nationkey": jnp.asarray(rng.integers(0, n_nations, n_suppliers)),
+        "s_name": jnp.arange(n_suppliers),
+        "s_address": jnp.arange(n_suppliers),
+    }, prob=jnp.asarray(probs(n_suppliers)))
+
+    part = Table.from_columns({
+        "p_partkey": jnp.arange(n_parts),
+        "p_name_forest": jnp.asarray(rng.uniform(0, 1, n_parts) < 0.1),
+        "p_retailprice": jnp.asarray(rng.integers(100, 2000, n_parts)),
+    }, prob=jnp.asarray(probs(n_parts)))
+
+    ps_part = np.repeat(np.arange(n_parts), 4)
+    ps_supp = rng.integers(0, n_suppliers, n_partsupp)
+    partsupp = Table.from_columns({
+        "ps_partkey": jnp.asarray(ps_part),
+        "ps_suppkey": jnp.asarray(ps_supp),
+        "ps_availqty": jnp.asarray(rng.integers(1, 1000, n_partsupp)),
+        "ps_pskey": jnp.asarray(ps_part * (1 << 10) + ps_supp),
+    }, prob=jnp.asarray(probs(n_partsupp)))
+
+    customer = Table.from_columns({
+        "c_custkey": jnp.arange(n_customers),
+        "c_mktsegment": jnp.asarray(rng.integers(0, 5, n_customers)),
+    }, prob=jnp.asarray(probs(n_customers)))
+
+    orders = Table.from_columns({
+        "o_orderkey": jnp.arange(n_orders),
+        "o_custkey": jnp.asarray(rng.integers(0, n_customers, n_orders)),
+        "o_orderdate": jnp.asarray(rng.integers(DAY0_1995 - 800,
+                                                DAY0_1995 + 800, n_orders)),
+        "o_totalprice": jnp.asarray(rng.integers(1000, 100000, n_orders)),
+    }, prob=jnp.asarray(probs(n_orders)))
+
+    l_part = rng.integers(0, n_parts, n_lineitem)
+    # pick a supplier that actually supplies the part (partsupp has 4/part)
+    l_supp = ps_supp[l_part * 4 + rng.integers(0, 4, n_lineitem)]
+    lineitem = Table.from_columns({
+        "l_orderkey": jnp.asarray(np.repeat(np.arange(n_orders),
+                                            lines_per_order)),
+        "l_partkey": jnp.asarray(l_part),
+        "l_suppkey": jnp.asarray(l_supp),
+        "l_pskey": jnp.asarray(l_part * (1 << 10) + l_supp),
+        "l_quantity": jnp.asarray(rng.integers(1, 51, n_lineitem)),
+        "l_extendedprice": jnp.asarray(rng.integers(100, 10000, n_lineitem)),
+        "l_discount": jnp.asarray(rng.integers(0, 11, n_lineitem)),  # percent
+        "l_shipdate": jnp.asarray(rng.integers(DAY0_1995 - 900,
+                                               DAY0_1995 + 900, n_lineitem)),
+        "l_returnflag": jnp.asarray(rng.integers(0, 3, n_lineitem)),
+        "l_linestatus": jnp.asarray(rng.integers(0, 2, n_lineitem)),
+    }, prob=jnp.asarray(probs(n_lineitem)))
+
+    return TPCH(lineitem, orders, customer, part, partsupp, supplier, nation,
+                dict(n_orders=n_orders, n_lineitem=n_lineitem,
+                     n_parts=n_parts, n_suppliers=n_suppliers,
+                     n_customers=n_customers, n_nations=n_nations))
+
+
+# --------------------------------------------------------------- queries
+def q1(db: TPCH, mode: str = "aggregate"):
+    """Pricing summary: GROUP BY (returnflag, linestatus); SUM(quantity),
+    SUM(extendedprice), COUNT(*) over shipped lineitems."""
+    li = ops.select(db.lineitem,
+                    lambda t: t["l_shipdate"] <= DAY0_1995 + 500)
+    ids, _, gvalid = ops.group_ids(li, ["l_returnflag", "l_linestatus"], 8)
+    if mode == "deterministic":
+        m = li.valid
+        qty = jax.ops.segment_sum(jnp.where(m, li["l_quantity"], 0), ids, num_segments=8)
+        price = jax.ops.segment_sum(jnp.where(m, li["l_extendedprice"], 0), ids, num_segments=8)
+        cnt = jax.ops.segment_sum(m.astype(jnp.int32), ids, num_segments=8)
+        return dict(valid=gvalid, sum_qty=qty, sum_price=price, count=cnt)
+    if mode == "confidence":
+        from ..core.aggregates import AtLeastOne
+        st = AtLeastOne.accumulate(AtLeastOne.init(), li.masked_prob())
+        return dict(confidence=AtLeastOne.finalize(st))
+    if mode == "group_confidence":
+        return dict(valid=gvalid, confidence=ops.group_atleastone(li, ids, 8))
+    # aggregate: Normal + moment terms per group; COUNT exactly via CF
+    qty = li["l_quantity"].astype(li.prob.dtype)
+    price = li["l_extendedprice"].astype(li.prob.dtype)
+    mu_q, var_q = ops.group_normal_terms(li, qty, ids, 8)
+    mu_p, var_p = ops.group_normal_terms(li, price, ids, 8)
+    cum_q = ops.group_cumulant_terms(li, qty, ids, 8)
+    ones = jnp.ones_like(qty)
+    mu_c, var_c = ops.group_normal_terms(li, ones, ids, 8)
+    return dict(valid=gvalid, qty=(mu_q, var_q), price=(mu_p, var_p),
+                count=(mu_c, var_c), cumulants_qty=cum_q)
+
+
+def q3(db: TPCH, mode: str = "aggregate", segment: int = 1,
+       max_groups: int = 512):
+    """Shipping priority: revenue per order for one market segment."""
+    cust = ops.select(db.customer, lambda t: t["c_mktsegment"] == segment)
+    orders = ops.select(db.orders, lambda t: t["o_orderdate"] < DAY0_1995)
+    o = ops.fk_join(orders, cust, "o_custkey", "c_custkey", ["c_mktsegment"])
+    li = ops.select(db.lineitem, lambda t: t["l_shipdate"] > DAY0_1995)
+    j = ops.fk_join(li, o, "l_orderkey", "o_orderkey",
+                    ["o_orderdate", "o_custkey"])
+    ids, codes, gvalid = ops.group_ids(j, ["l_orderkey"], max_groups)
+    if mode == "deterministic":
+        rev = jax.ops.segment_sum(
+            jnp.where(j.valid, j["l_extendedprice"], 0), ids,
+            num_segments=max_groups)
+        return dict(valid=gvalid, revenue=rev)
+    if mode == "confidence":
+        from ..core.aggregates import AtLeastOne
+        st = AtLeastOne.accumulate(AtLeastOne.init(), j.masked_prob())
+        return dict(confidence=AtLeastOne.finalize(st))
+    if mode == "group_confidence":
+        return dict(valid=gvalid,
+                    confidence=ops.group_atleastone(j, ids, max_groups))
+    price = j["l_extendedprice"].astype(j.prob.dtype)
+    mu, var = ops.group_normal_terms(j, price, ids, max_groups)
+    cum = ops.group_cumulant_terms(j, price, ids, max_groups)
+    return dict(valid=gvalid, revenue=(mu, var), cumulants=cum)
+
+
+def q6(db: TPCH, mode: str = "aggregate", num_freq: int | None = None):
+    """Forecast revenue change: scalar SUM over filtered lineitem.
+
+    The single-group scalar aggregate — the paper's Figure 9 COUNT(*)
+    experiment is this query with values == 1.
+    """
+    li = ops.select(
+        db.lineitem,
+        lambda t: (t["l_shipdate"] >= DAY0_1995 - 400)
+        & (t["l_shipdate"] < DAY0_1995)
+        & (t["l_discount"] >= 5) & (t["l_discount"] <= 7)
+        & (t["l_quantity"] < 24))
+    p = li.masked_prob()
+    if mode == "deterministic":
+        return dict(revenue=jnp.sum(jnp.where(li.valid, li["l_quantity"]
+                                              * li["l_discount"], 0)))
+    if mode in ("confidence", "group_confidence"):
+        from ..core.aggregates import AtLeastOne
+        st = AtLeastOne.accumulate(AtLeastOne.init(), p)
+        return dict(confidence=AtLeastOne.finalize(st))
+    v = (li["l_quantity"] * li["l_discount"]).astype(p.dtype)
+    from ..core import approx
+    terms = approx.cumulant_terms(p, v, 8)
+    mu = jnp.sum(v * p)
+    var = jnp.sum(v * v * p * (1 - p))
+    out = dict(normal=(mu, var), cumulants=terms)
+    if num_freq:  # exact distribution on request (Figure 9's exact path)
+        la, an = pb.logcf_terms(p, v, num_freq)
+        out["exact_coeffs"] = pb.logcf_finalize(la, an)
+    return out
+
+
+def q18(db: TPCH, mode: str = "aggregate", qty_threshold: int = 150,
+        max_groups: int = 2048):
+    """Large-volume customers: orders whose SUM(l_quantity) > threshold.
+
+    The probabilistic version keeps every order with
+    p = p_order * P(SUM > threshold)  (Table I row III reweight)."""
+    li = db.lineitem
+    ids, codes, gvalid = ops.group_ids(li, ["l_orderkey"], max_groups)
+    if mode == "deterministic":
+        qty = jax.ops.segment_sum(jnp.where(li.valid, li["l_quantity"], 0),
+                                  ids, num_segments=max_groups)
+        return dict(valid=gvalid & (qty > qty_threshold), sum_qty=qty)
+    qty = li["l_quantity"].astype(li.prob.dtype)
+    mu, var = ops.group_normal_terms(li, qty, ids, max_groups)
+    p_gt = ops.normal_greater(mu, var, jnp.asarray(qty_threshold, mu.dtype))
+    conf = ops.group_atleastone(li, ids, max_groups)
+    if mode == "confidence":
+        # P(at least one order qualifies) = 1 - prod_g (1 - conf_g * p_gt_g)
+        peach = jnp.where(gvalid, conf * p_gt, 0.0)
+        return dict(confidence=1.0 - jnp.exp(jnp.sum(jnp.log1p(-peach))))
+    if mode == "group_confidence":
+        return dict(valid=gvalid, confidence=conf * p_gt)
+    return dict(valid=gvalid, sum_qty=(mu, var), p_qualifies=p_gt)
+
+
+def q20(db: TPCH, mode: str = "aggregate", nation_name: int = 3,
+        max_groups: int = 1024, avail_frac: float = 0.05):
+    """The paper's Fig. 6 plan: suppliers in one nation with excess stock of
+    'forest' parts.
+
+        R1 = sigma_forest(part)
+        R2 = partsupp |x| R1
+        R3 = sigma_shipdate(lineitem)
+        R4 = R3 |x| R2                       (on partkey & suppkey)
+        R6 = GROUP R4 BY ps key; SUM(l_quantity)
+        R7 = reweight p *= P(SUM > availqty) (Table I row III)
+        R9 = supplier |x| sigma_CANADA(nation)
+        Q  = project(s_name) of R7 |x| R9
+    """
+    r1 = ops.select(db.part, lambda t: t["p_name_forest"])
+    r2 = ops.fk_join(db.partsupp, r1, "ps_partkey", "p_partkey",
+                     ["p_name_forest"])
+    r3 = ops.select(db.lineitem,
+                    lambda t: (t["l_shipdate"] >= DAY0_1995 - 365)
+                    & (t["l_shipdate"] < DAY0_1995))
+    r4 = ops.fk_join(r3, r2, "l_pskey", "ps_pskey",
+                     ["ps_availqty", "ps_suppkey", "ps_pskey"])
+    ids, codes, gvalid = ops.group_ids(r4, ["ps_pskey"], max_groups)
+    qty = r4["l_quantity"].astype(r4.prob.dtype)
+    mu, var = ops.group_normal_terms(r4, qty, ids, max_groups)
+
+    # availqty / suppkey per group (all valid rows in a group agree).
+    gcols = ops.group_key_columns(
+        r4, ["ps_pskey", "ps_availqty", "ps_suppkey"], ids, max_groups)
+    avail, suppk = gcols["ps_availqty"], gcols["ps_suppkey"]
+
+    p_excess = ops.normal_greater(mu, var, avail.astype(mu.dtype) * avail_frac)
+    conf = ops.group_atleastone(r4, ids, max_groups)
+    r7 = Table({"ps_suppkey": suppk, "ps_pskey": gcols["ps_pskey"]},
+               conf * p_excess, gvalid)
+
+    nat = ops.select(db.nation, lambda t: t["n_name"] == nation_name)
+    r9 = ops.fk_join(db.supplier, nat, "s_nationkey", "n_nationkey",
+                     ["n_name"])
+    r10 = ops.fk_join(r7, r9, "ps_suppkey", "s_suppkey",
+                      ["s_name", "s_address"])
+    if mode == "deterministic":
+        return dict(valid=r10.valid & (r10.prob > 0.5), s_name=r10["s_name"])
+    result = ops.project(r10, ["s_name"], max_groups=64)
+    if mode == "confidence":
+        from ..core.aggregates import AtLeastOne
+        st = AtLeastOne.accumulate(AtLeastOne.init(), result.masked_prob())
+        return dict(confidence=AtLeastOne.finalize(st))
+    if mode == "group_confidence":
+        return dict(valid=result.valid, s_name=result["s_name"],
+                    confidence=result.prob)
+    return dict(valid=result.valid, s_name=result["s_name"],
+                prob=result.prob)
+
+
+QUERIES = {"q1": q1, "q3": q3, "q6": q6, "q18": q18, "q20": q20}
+MODES = ("deterministic", "confidence", "group_confidence", "aggregate")

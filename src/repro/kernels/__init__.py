@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the PGF engine's compute hot spots.
+
+    pb_cf.py       blocked log-CF accumulation (exact COUNT/SUM)
+    polymul.py     blocked schoolbook polynomial multiply (small-degree path)
+    cumulants.py   fused one-pass cumulant accumulation (moment method)
+    ops.py         jit'd public wrappers with size/dtype dispatch
+    ref.py         pure-jnp oracles (tests assert_allclose kernel vs ref)
+
+All kernels use pl.pallas_call with explicit BlockSpec VMEM tiling and are
+validated on CPU with interpret=True; lane dims are 128-multiples for the
+TPU target.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

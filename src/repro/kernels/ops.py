@@ -1,0 +1,53 @@
+"""Public jit'd wrappers for the Pallas kernels, with shape dispatch.
+
+These are the entry points the engine uses; each transparently falls back to
+the pure-jnp oracle when a kernel is a bad fit (tiny inputs where padding
+dominates, or f64 mode where the TPU kernels don't apply).  The kernels
+themselves live in pb_cf.py / polymul.py / cumulants.py; oracles in ref.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import cumulants as _cum
+from . import pb_cf as _cf
+from . import polymul as _pm
+from . import ref
+
+# Below these sizes, block padding exceeds useful work — use the oracle.
+MIN_KERNEL_TUPLES = 256
+MIN_KERNEL_DEGREE = 128
+
+
+def logcf(probs: jnp.ndarray, values: jnp.ndarray, num_freq: int,
+          use_kernel: bool | None = None):
+    """Summed log CF at num_freq DFT frequencies. Kernel or oracle."""
+    if use_kernel is None:
+        use_kernel = (probs.shape[0] >= MIN_KERNEL_TUPLES
+                      and probs.dtype == jnp.float32)
+    if use_kernel:
+        return _cf.logcf(probs, values, num_freq=num_freq)
+    return ref.logcf_ref(probs, values, num_freq)
+
+
+def polymul(a: jnp.ndarray, b: jnp.ndarray,
+            use_kernel: bool | None = None) -> jnp.ndarray:
+    """Linear convolution of coefficient vectors. Kernel or oracle."""
+    if use_kernel is None:
+        use_kernel = (min(a.shape[0], b.shape[0]) >= MIN_KERNEL_DEGREE
+                      and a.dtype == jnp.float32)
+    if use_kernel:
+        return _pm.polymul(a, b)
+    return ref.polymul_ref(a, b)
+
+
+def cumulant_sums(probs: jnp.ndarray, values: jnp.ndarray, orders: int = 8,
+                  use_kernel: bool | None = None) -> jnp.ndarray:
+    """Fused one-pass cumulant partial sums. Kernel or oracle."""
+    if use_kernel is None:
+        use_kernel = (probs.shape[0] >= MIN_KERNEL_TUPLES
+                      and probs.dtype == jnp.float32)
+    if use_kernel:
+        return _cum.cumulant_sums(probs, values, orders=orders)
+    return ref.cumulants_ref(probs, values, orders)

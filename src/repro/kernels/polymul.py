@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: blocked schoolbook polynomial multiplication.
+
+The paper (§VII-B) dispatches small-degree PGF products to the classical
+O(n^2) algorithm because FFT overhead dominates below ~5000 coefficients.
+On TPU the same regime exists (FFT lowers to many small kernels; a blocked
+convolution is one fused VPU loop), so we keep the dispatch and implement
+the O(n^2) path as a Pallas kernel.
+
+TPU mapping
+-----------
+c = a * b (linear convolution).  a is padded to A = ceil(na/B)*B, the output
+to C = ceil((na+nb-1)/B)*B, and b is embedded into b_pad of length A + C
+with A leading zeros, so every window the kernel touches is in range.
+
+grid = (C/B, A/B): output block `o` accumulates over a-blocks `ia`.  For
+block pair (o, ia) the contribution is
+
+    c[o*B + t] += sum_u a[ia*B + u] * b[(o - ia - 1)*B + (B + t - u)]
+
+i.e. a size-B dot between the a-block and a sliding window of the
+*two adjacent* b blocks (o-ia-1, o-ia) — both fetched via aligned
+BlockSpecs, the shift happens in VMEM.  All blocks are (1, B) with B a
+multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _polymul_kernel(a_ref, b1_ref, b2_ref, c_ref, *, bsize: int):
+    ia = pl.program_id(1)
+
+    @pl.when(ia == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    a = a_ref[...]                                   # (1, B)
+    bwin = jnp.concatenate([b1_ref[...], b2_ref[...]], axis=1)  # (1, 2B)
+
+    def body(u, acc):
+        # bwin[B + t - u] for t in [0, B): slice of length B starting B - u.
+        window = jax.lax.dynamic_slice(bwin, (0, bsize - u), (1, bsize))
+        coef = jax.lax.dynamic_slice(a, (0, u), (1, 1))
+        return acc + coef * window
+
+    acc = jax.lax.fori_loop(0, bsize, body,
+                            jnp.zeros((1, bsize), a.dtype))
+    c_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("bsize", "interpret"))
+def polymul(a: jnp.ndarray, b: jnp.ndarray, *, bsize: int = 128,
+            interpret: bool | None = None) -> jnp.ndarray:
+    """Blocked schoolbook linear convolution; matches jnp.convolve(a, b)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    na, nb = a.shape[0], b.shape[0]
+    nc = na + nb - 1
+    A = pl.cdiv(na, bsize) * bsize
+    C = pl.cdiv(nc, bsize) * bsize
+    a_p = jnp.pad(a, (0, A - na)).reshape(1, -1)
+    # A leading zeros so window index (o - ia - 1 + A/B) is always >= 0.
+    b_p = jnp.pad(b, (A, C - nb)).reshape(1, -1)
+    nA = A // bsize
+
+    c = pl.pallas_call(
+        functools.partial(_polymul_kernel, bsize=bsize),
+        grid=(C // bsize, nA),
+        in_specs=[
+            pl.BlockSpec((1, bsize), lambda o, ia: (0, ia)),
+            pl.BlockSpec((1, bsize), lambda o, ia: (0, o - ia - 1 + nA)),
+            pl.BlockSpec((1, bsize), lambda o, ia: (0, o - ia + nA)),
+        ],
+        out_specs=pl.BlockSpec((1, bsize), lambda o, ia: (0, o)),
+        out_shape=jax.ShapeDtypeStruct((1, C), a.dtype),
+        interpret=interpret,
+    )(a_p, b_p, b_p)
+    return c[0, :nc]

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function computes exactly what the corresponding kernel computes, with
+no blocking, padding or VMEM concerns.  Tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-oracle; the oracles themselves are validated
+against the possible-worlds enumeration in ``tests/test_aggregates.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def logcf_ref(probs: jnp.ndarray, values: jnp.ndarray, num_freq: int):
+    """Summed log characteristic function of sum_i a_i * Bernoulli(p_i).
+
+    Returns (log_abs, angle), each (num_freq,):
+        log Q(w^k) = sum_i log( (1-p_i) + p_i * w^{k a_i} ),  w = e^{2 pi i/N}.
+
+    The angle is the sum of per-factor principal arguments (NOT the argument
+    of the product) — branch offsets are multiples of 2*pi*i and cancel at
+    exp() time, and per-factor angles are what a blocked accumulator can
+    compute, so the kernel contract is defined this way.
+    """
+    dtype = probs.dtype
+    n = num_freq
+    k = jnp.arange(n, dtype=dtype)
+    # phase[k, i] = (k * a_i) mod N, computed in f64-exactness range
+    phase = (k[:, None] * values[None, :]) % n
+    theta = (2.0 * np.pi / n) * phase
+    q = 1.0 - probs
+    re = q[None, :] + probs[None, :] * jnp.cos(theta)
+    im = probs[None, :] * jnp.sin(theta)
+    log_abs = 0.5 * jnp.log(jnp.maximum(re * re + im * im, 1e-300))
+    ang = jnp.arctan2(im, re)
+    return log_abs.sum(-1), ang.sum(-1)
+
+
+def polymul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Full linear convolution c[k] = sum_{i+j=k} a[i] b[j] (schoolbook)."""
+    return jnp.convolve(a, b)
+
+
+def cumulants_ref(probs: jnp.ndarray, values: jnp.ndarray,
+                  orders: int = 8) -> jnp.ndarray:
+    """Partial cumulant sums s_j = sum_i v_i^j kappa_j(p_i), j = 1..orders.
+
+    kappa_j(p) follows the paper's recursion kappa_{j+1} = p(1-p) dk_j/dp.
+    """
+    from repro.core.approx import cumulant_terms
+    return cumulant_terms(probs, values, orders)
+
+
+def atleastone_ref(probs: jnp.ndarray, segment_ids: jnp.ndarray,
+                   num_segments: int) -> jnp.ndarray:
+    """Per-group 1 - prod(1 - p) (paper Table I row V)."""
+    logq = jnp.log1p(-probs)
+    import jax
+    acc = jax.ops.segment_sum(logq, segment_ids, num_segments=num_segments)
+    return 1.0 - jnp.exp(acc)

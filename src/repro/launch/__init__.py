@@ -1,0 +1,8 @@
+"""Launchers: production meshes, dry-run, train, serve.
+
+NOTE: dryrun must run as its own process (it pins 512 host devices before
+jax initialises); do not import repro.launch.dryrun from a live session.
+"""
+from . import mesh
+
+__all__ = ["mesh"]

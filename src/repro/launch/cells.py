@@ -1,0 +1,224 @@
+"""Per-cell step builders: (arch x shape x mesh) -> jit-able step + specs.
+
+A *cell* is one dry-run/roofline unit.  For LM archs:
+
+    train_4k     full train step (fwd + bwd + clip + AdamW update), remat,
+                 microbatch accumulation for the big configs
+    prefill_32k  forward logits over the full sequence
+    decode_32k   one-token serve_step against a seq_len KV cache
+    long_500k    one-token serve_step against a 512k context
+                 (sub-quadratic archs only)
+
+plus the paper's own `pgf_tpch` cell (distributed aggregate-query step).
+
+Memory posture knobs per arch (DESIGN.md §5): FSDP always on; SP-style
+residual sharding and bf16 Adam moments for d_model >= 5120; bf16 grad
+accumulation + accum=8 for the 340B config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import base as cfgs
+from ..models import api
+from ..sharding import Rules
+from ..train.optimizer import AdamW
+from ..train.trainer import make_train_step
+
+
+def arch_knobs(cfg) -> dict:
+    big = cfg.d_model >= 5120
+    huge = cfg.d_model >= 16384
+    # Universal microbatching: 16 rows/device at 4k seq blows the 16 GB
+    # HBM budget for EVERY family (yi 22.9 GB, rgemma 29 GB, ... §Perf);
+    # accum=4 caps per-micro tokens/device at 16k.  Cost: the per-micro
+    # gradient reduce-scatter runs A times (GSPMD can't defer it through
+    # the scan) — memory fit is the hard constraint, so accept and record.
+    accum = 8 if huge else 4
+    return dict(
+        sp=big,
+        accum=accum,
+        moment_dtype="bfloat16" if big else None,
+        accum_dtype=jnp.bfloat16 if huge else jnp.float32,
+    )
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Callable                     # jit-able python callable
+    args: dict                       # kwarg name -> ShapeDtypeStruct pytree
+    in_shardings: dict               # same structure, NamedShardings
+    donate: tuple = ()
+
+
+# ------------------------------------------------------------- shardings
+def _batch_shardings(rules: Rules, args: dict) -> dict:
+    out = {}
+    for k, v in args.items():
+        if k in ("tokens", "labels"):
+            name = "tokens" if len(v.shape) == 2 else "residual"
+            out[k] = rules.input_sharding(name, v.shape)
+        else:
+            out[k] = NamedSharding(rules.mesh, P())
+    return out
+
+
+def _cache_shardings(rules: Rules, cache) -> Any:
+    mesh = rules.mesh
+    dp = rules.dp
+
+    def spec_for(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        shape = leaf.shape
+
+        def div(i, ax):
+            return shape[i] % mesh.shape[ax] == 0 if ax in mesh.axis_names \
+                else False
+
+        dp_ok = dp and shape[1] % _axsize(mesh, dp) == 0
+        batch = dp if dp_ok else None
+        parts = [None, batch] + [None] * (len(shape) - 2)
+        if name in ("k", "v") and len(shape) == 5 and div(3, "model"):
+            parts[3] = "model"                      # (n, B, S, KV, hd)
+        elif name in ("k", "v") and len(shape) == 5 and div(2, "model"):
+            parts[2] = "model"                      # sequence-sharded cache
+        elif name == "s" and len(shape) == 5 and div(2, "model"):
+            parts[2] = "model"                      # (n, B, H, K, V)
+        elif name == "h" and len(shape) == 3 and div(2, "model"):
+            parts[2] = "model"                      # (n, B, W)
+        elif name == "conv" and len(shape) == 4 and div(3, "model"):
+            parts[3] = "model"
+        elif name in ("shift", "shift_c") and len(shape) == 3 \
+                and div(2, "model"):
+            parts[2] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+# ------------------------------------------------------------------ cells
+def calibration_pattern(cfg):
+    """(repeating base pattern, trip count) for the calibration cost
+    model.  Tail layers sit in the model's intercept (they appear in both
+    calibration variants), so the two-point fit is exact."""
+    return cfg.pattern, cfg.n_periods
+
+
+def build_lm_cell(arch: str, shape_name: str, mesh: Mesh, *,
+                  cfg=None, accum: int | None = None,
+                  unroll: bool = False) -> Cell:
+    base_cfg = cfgs.get_config(arch)
+    assert shape_name in cfgs.runnable_cells(base_cfg), \
+        f"{arch} skips {shape_name} (DESIGN.md §4)"
+    knobs = arch_knobs(base_cfg)
+    if accum is not None:
+        knobs["accum"] = accum
+    cfg = cfg or base_cfg
+    rules = Rules(mesh, fsdp=True, sp=knobs["sp"])
+    spec = cfgs.SHAPES[shape_name]
+
+    import contextlib
+    from ..models.runmode import unrolled
+    ctx = unrolled if unroll else contextlib.nullcontext
+
+    params_shapes = jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+    params_sh = rules.params_tree(params_shapes)
+    args = cfgs.input_specs(cfg, shape_name)
+
+    if spec["kind"] == "train":
+        opt = AdamW(moment_dtype=knobs["moment_dtype"])
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        opt_sh = rules.params_tree(opt_shapes)
+        step = make_train_step(cfg, opt, accum=knobs["accum"], remat=True,
+                               donate=False, accum_dtype=knobs["accum_dtype"],
+                               jit=False)
+
+        def fn(params, opt_state, tokens, labels):
+            with ctx(), rules.activate():
+                return step(params, opt_state,
+                            dict(tokens=tokens, labels=labels))
+
+        in_sh = dict(params=params_sh, opt_state=opt_sh,
+                     **_batch_shardings(rules, args))
+        return Cell(f"{arch}/{shape_name}", fn,
+                    dict(params=params_shapes, opt_state=opt_shapes, **args),
+                    in_sh, donate=("params", "opt_state"))
+
+    if spec["kind"] == "prefill":
+        def fn(params, tokens):
+            with ctx(), rules.activate():
+                return api.prefill(cfg, params, tokens)
+
+        in_sh = dict(params=params_sh, **_batch_shardings(rules, args))
+        return Cell(f"{arch}/{shape_name}", fn,
+                    dict(params=params_shapes, **args), in_sh)
+
+    # decode
+    def fn(params, tokens, cache, cache_len):
+        with ctx(), rules.activate():
+            return api.decode_step(cfg, params, tokens, cache, cache_len)
+
+    cache_shapes = args["cache"]
+    in_sh = dict(params=params_sh,
+                 tokens=rules.input_sharding(
+                     "tokens" if len(args["tokens"].shape) == 2
+                     else "residual", args["tokens"].shape),
+                 cache=_cache_shardings(rules, cache_shapes),
+                 cache_len=NamedSharding(mesh, P()))
+    return Cell(f"{arch}/{shape_name}", fn,
+                dict(params=params_shapes, **args), in_sh,
+                donate=("cache",))
+
+
+def build_pgf_cell(mesh: Mesh, reduced: bool = False,
+                   n_tuples: int | None = None,
+                   unroll: bool = False) -> Cell:
+    import contextlib
+    from ..configs import pgf_tpch
+    from ..db import distributed as dist
+    from ..models.runmode import unrolled
+    qc = pgf_tpch.reduced() if reduced else pgf_tpch.CONFIG
+    step = dist.make_query_step(mesh, max_groups=qc.max_groups,
+                                num_freq=qc.num_freq, orders=qc.orders)
+    args = dist.input_specs(n_tuples=n_tuples or qc.n_tuples)
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sh = NamedSharding(mesh, P(axes))
+    in_sh = {k: sh for k in args}
+    ctx = unrolled if unroll else contextlib.nullcontext
+
+    def fn(**kw):
+        with ctx():
+            return step(**kw)
+
+    return Cell(f"pgf_tpch/query", fn, args, in_sh)
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
+    if arch == "pgf_tpch":
+        return build_pgf_cell(mesh)
+    return build_lm_cell(arch, shape_name, mesh)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every runnable (arch, shape) pair + the pgf cell (DESIGN.md §4)."""
+    cells = []
+    for arch in cfgs.ARCH_IDS:
+        cfg = cfgs.get_config(arch)
+        for s in cfgs.runnable_cells(cfg):
+            cells.append((arch, s))
+    cells.append(("pgf_tpch", "query"))
+    return cells

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+# the production meshes, record memory/cost/collective analysis.
+#
+# MUST be run as its own process (the two lines above run before any jax
+# import — jax locks the device count on first init):
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch yi_6b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+#
+# Artifacts: one JSON per cell with
+#   memory_analysis   bytes per device (args/outputs/temps/code)
+#   cost_analysis     HLO flops / bytes accessed (per device)
+#   collectives       per-op-kind operand bytes parsed from the HLO
+#   roofline terms    compute/memory/collective seconds (v5e constants)
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+# --- v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (conservative single-link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+\S+\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(([^)]*)\)")
+DEF_RE = re.compile(r"(%?[\w.\-]+)\s+=\s+\(?([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from HLO text.
+
+    Builds a name->bytes table from every instruction definition, then sums
+    the operand sizes of each collective op (tuples/variadic included).
+    `-done` ops are skipped (the `-start` carries the operands).
+    """
+    sizes: dict[str, int] = {}
+    for m in DEF_RE.finditer(hlo_text):
+        name, dtype, dims = m.groups()
+        sizes[name.lstrip("%")] = _shape_bytes(dtype, dims)
+
+    per_kind: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind, operands = m.groups()
+        total = 0
+        for op in operands.split(","):
+            op = op.strip().lstrip("%")
+            # operands may carry inline types: "bf16[2,4]{1,0} %name"
+            name = op.split(" ")[-1].lstrip("%")
+            if name in sizes:
+                total += sizes[name]
+            else:
+                tm = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", op)
+                if tm:
+                    total += _shape_bytes(*tm.groups())
+        per_kind[kind] = per_kind.get(kind, 0) + total
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes": per_kind, "count": count,
+            "total_bytes": sum(per_kind.values())}
+
+
+def analyze(lowered, compiled) -> dict:
+    out: dict = {}
+    try:
+        ma = compiled.memory_analysis()
+        out["memory_analysis"] = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(ma, k)} if ma is not None else None
+    except Exception as e:  # CPU backend may not implement it
+        out["memory_analysis"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        out["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))}
+    except Exception as e:
+        out["cost_analysis"] = {"error": str(e)}
+    out["collectives"] = parse_collective_bytes(compiled.as_text())
+    return out
+
+
+def roofline_terms(analysis: dict, chips: int) -> dict:
+    ca = analysis.get("cost_analysis") or {}
+    flops = ca.get("flops", 0.0)
+    bytes_acc = ca.get("bytes accessed", 0.0)
+    coll = analysis["collectives"]["total_bytes"]
+    # cost_analysis is per-device for SPMD modules
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_collective = coll / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return dict(t_compute=t_compute, t_memory=t_memory,
+                t_collective=t_collective, dominant=dominant,
+                hlo_flops=flops, hlo_bytes=bytes_acc,
+                collective_bytes=coll, chips=chips)
+
+
+def _lower_costs(cell, mesh) -> dict:
+    """Lower+compile one cell, return its cost vector."""
+    import jax
+    order = list(cell.args)
+    donate = tuple(i for i, k in enumerate(order) if k in cell.donate)
+    fn = jax.jit(lambda *a: cell.fn(**dict(zip(order, a))),
+                 in_shardings=tuple(cell.in_shardings[k] for k in order),
+                 donate_argnums=donate)
+    with mesh:
+        lowered = fn.lower(*[cell.args[k] for k in order])
+        compiled = lowered.compile()
+    out = analyze(lowered, compiled)
+    ca = out.get("cost_analysis") or {}
+    return dict(
+        flops=ca.get("flops", 0.0),
+        bytes=ca.get("bytes accessed", 0.0),
+        coll=float(out["collectives"]["total_bytes"]),
+        analysis=out)
+
+
+def _affine(one_trip, two_trips, extra: float) -> dict:
+    """cost(1 trip) + extra * per-trip-slope, component-wise (clamped at
+    the one-trip floor: slope noise must not extrapolate below reality)."""
+    return {n: max(one_trip[n] + extra * (two_trips[n] - one_trip[n]), 0.0)
+            for n in ("flops", "bytes", "coll")}
+
+
+def calibrate(arch: str, shape: str, mesh) -> dict:
+    """Corrected per-device cost vector via unrolled calibration lowers.
+
+    XLA cost_analysis counts while-loop bodies once; we lower small
+    UNROLLED variants at full tensor widths and extrapolate the linear
+    cost model  cost = outside + trips * body  (+ accum axis for train).
+    """
+    import dataclasses
+    from repro.configs import base as cfgs
+    from repro.launch import cells as C
+
+    if arch == "pgf_tpch":
+        from repro.configs import pgf_tpch
+        qc = pgf_tpch.CONFIG
+        shards = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                shards *= mesh.shape[a]
+        block = 2048                      # matches local_query_contrib cap
+        u1 = _lower_costs(C.build_pgf_cell(mesh, n_tuples=shards * block,
+                                           unroll=True), mesh)
+        u2 = _lower_costs(C.build_pgf_cell(mesh, n_tuples=2 * shards * block,
+                                           unroll=True), mesh)
+        trips = qc.n_tuples / (shards * block)
+        return _affine(u1, u2, trips - 1.0)
+
+    cfg = cfgs.get_config(arch)
+    base_pat, trips = C.calibration_pattern(cfg)
+    knobs = C.arch_knobs(cfg)
+    mk = lambda k: dataclasses.replace(
+        cfg, n_layers=k * len(base_pat) + len(cfg.tail_pattern),
+        pattern=base_pat)
+    u11 = _lower_costs(C.build_lm_cell(arch, shape, mesh, cfg=mk(1),
+                                       accum=1, unroll=True), mesh)
+    u12 = _lower_costs(C.build_lm_cell(arch, shape, mesh, cfg=mk(2),
+                                       accum=1, unroll=True), mesh)
+    corrected = _affine(u11, u12, trips - 1.0)
+    a = knobs["accum"]
+    if cfgs.SHAPES[shape]["kind"] == "train" and a > 1:
+        u21 = _lower_costs(C.build_lm_cell(arch, shape, mesh, cfg=mk(1),
+                                           accum=2, unroll=True), mesh)
+        u22 = _lower_costs(C.build_lm_cell(arch, shape, mesh, cfg=mk(2),
+                                           accum=2, unroll=True), mesh)
+        dA1 = {k: u21[k] - u11[k] for k in ("flops", "bytes", "coll")}
+        a1 = {k: (u22[k] - u12[k]) - dA1[k] for k in dA1}
+        for k in ("flops", "bytes", "coll"):
+            corrected[k] += (a - 1) * dA1[k] + (a - 1) * (trips - 1) * a1[k]
+    return corrected
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             calibrated: bool = True) -> dict:
+    import jax
+    from repro.launch import cells as C
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = C.build_cell(arch, shape, mesh)
+    full = _lower_costs(cell, mesh)
+    t1 = time.time()
+    result = dict(cell=cell.name,
+                  mesh="2x16x16" if multi_pod else "16x16",
+                  chips=512 if multi_pod else 256,
+                  compile_seconds=round(t1 - t0, 1))
+    result.update(full["analysis"])
+    result["roofline_raw"] = roofline_terms(result, result["chips"])
+    if calibrated:
+        try:
+            corr = calibrate(arch, shape, mesh)
+            result["corrected"] = corr
+            fake = dict(cost_analysis={"flops": corr["flops"],
+                                       "bytes accessed": corr["bytes"]},
+                        collectives={"total_bytes": corr["coll"]})
+            result["roofline"] = roofline_terms(fake, result["chips"])
+        except Exception as e:
+            result["calibration_error"] = traceback.format_exc()
+            result["roofline"] = result["roofline_raw"]
+    else:
+        result["roofline"] = result["roofline_raw"]
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="artifact directory")
+    args = ap.parse_args(argv)
+
+    from repro.launch import cells as C
+    todo = C.all_cells() if args.all else [(args.arch, args.shape or "query")]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    failures = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = f"{arch}/{shape}@{'2x16x16' if mp else '16x16'}"
+            try:
+                res = run_cell(arch, shape, mp)
+                status = "OK"
+            except Exception as e:
+                failures += 1
+                res = dict(cell=f"{arch}/{shape}", error=str(e),
+                           traceback=traceback.format_exc())
+                status = f"FAIL: {type(e).__name__}"
+            line = f"[dryrun] {tag:56s} {status}"
+            if "roofline" in res:
+                r = res["roofline"]
+                line += (f"  t_c={r['t_compute']:.3e}s t_m={r['t_memory']:.3e}s"
+                         f" t_x={r['t_collective']:.3e}s dom={r['dominant']}")
+            print(line, flush=True)
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                fname = f"{arch}_{shape}_{'mp' if mp else 'sp'}.json"
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(res, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

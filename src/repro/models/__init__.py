@@ -1,0 +1,15 @@
+"""Assigned-architecture model stack (exercises the distributed runtime).
+
+    layers.py       norms, RoPE, init, sharding hooks
+    transformer.py  GQA attention: causal/bidir/local, KV cache, streaming
+    mlp.py          swiglu / gelu / relu^2 / rwkv channel-mix
+    moe.py          top-k expert routing with static capacity (EP)
+    rglru.py        RecurrentGemma RG-LRU recurrent block
+    rwkv6.py        RWKV-6 chunked WKV time-mix
+    api.py          init/forward/loss/prefill/decode over any ModelConfig
+    frontends.py    [vlm]/[audio] embedding stubs
+"""
+from . import api, frontends, layers, mlp, moe, rglru, rwkv6, transformer
+
+__all__ = ["api", "frontends", "layers", "mlp", "moe", "rglru", "rwkv6",
+           "transformer"]

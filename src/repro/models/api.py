@@ -1,0 +1,250 @@
+"""Unified model API over all assigned architectures.
+
+    init_params(cfg, key)            parameter pytree (eval_shape-able)
+    init_cache(cfg, batch, max_len)  decode state (KV / ring / recurrent)
+    forward(cfg, params, tokens, ..) logits (+ cache, aux)
+    loss_fn(cfg, params, batch)      token cross-entropy (+ MoE aux)
+    prefill / decode_step            serving entry points
+
+Layer stacking: the repeating pattern period is scanned with lax.scan
+(stacked params, leading dim n_periods), with full per-period remat during
+training — the compile-time and memory posture that survives 96-layer
+configs.  Heterogeneous patterns (recurrentgemma's rglru/rglru/local) and
+period-per-model patterns (its trailing 2 layers make the period the whole
+stack) both fit this scheme.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .runmode import unroll_mode, unrolled  # re-export (dryrun calibration)
+
+from . import layers as L
+from . import moe as MOE
+from . import rglru as RG
+from . import rwkv6 as RW
+from . import transformer as T
+from .mlp import mlp, mlp_params
+
+
+# ---------------------------------------------------------------- params
+def _block_params(cfg, key, kind: str):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L.norm_params(cfg, k1, cfg.d_model),
+                         "norm2": L.norm_params(cfg, k2, cfg.d_model)}
+    if kind in ("attn", "attn_local"):
+        p["mixer"] = T.attn_params(cfg, k3, kind)
+    elif kind == "rglru":
+        p["mixer"] = RG.rglru_params(cfg, k3)
+    elif kind == "rwkv6":
+        p["mixer"] = RW.rwkv6_params(cfg, k3)
+    else:
+        raise ValueError(kind)
+    p["ffn"] = MOE.moe_params(cfg, k4) if cfg.n_experts \
+        else mlp_params(cfg, k4)
+    return p
+
+
+def init_params(cfg, key):
+    dt = jnp.dtype(cfg.dtype)
+    nk = len(cfg.pattern) + len(cfg.tail_pattern) + 3
+    keys = jax.random.split(key, nk)
+    blocks = {}
+    for j, kind in enumerate(cfg.pattern):
+        per_period = jax.vmap(lambda k: _block_params(cfg, k, kind))(
+            jax.random.split(keys[j], cfg.n_periods))
+        blocks[str(j)] = per_period
+    params: Dict[str, Any] = {"blocks": blocks,
+                              "final_norm": L.norm_params(cfg, keys[-3],
+                                                          cfg.d_model)}
+    if cfg.tail_pattern:
+        params["tail"] = {
+            str(j): _block_params(cfg, keys[len(cfg.pattern) + j], kind)
+            for j, kind in enumerate(cfg.tail_pattern)}
+    if not cfg.embedding_inputs:
+        params["embed"] = L.truncnorm(keys[-2], (cfg.vocab_size, cfg.d_model),
+                                      dt, 1.0)
+    if not cfg.tie_embeddings or cfg.embedding_inputs:
+        params["head"] = L.dense_init(keys[-1], cfg.d_model, cfg.vocab_size,
+                                      dt)
+    return params
+
+
+# ---------------------------------------------------------------- cache
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode state, stacked (n_periods, ...) per pattern position."""
+    def stack(tree):
+        return jax.tree.map(
+            lambda l: jnp.zeros((cfg.n_periods,) + l.shape, l.dtype), tree)
+
+    def one(kind):
+        if kind in ("attn", "attn_local"):
+            return T.init_attn_cache(cfg, kind, batch, max_len, dtype)
+        if kind == "rglru":
+            return RG.init_rglru_state(cfg, batch, dtype)
+        if kind == "rwkv6":
+            return RW.init_rwkv_state(cfg, batch, dtype)
+        raise ValueError(kind)
+
+    cache = {}
+    for j, kind in enumerate(cfg.pattern):
+        cache[str(j)] = stack(one(kind))
+    if cfg.tail_pattern:
+        cache["tail"] = {str(j): one(kind)
+                         for j, kind in enumerate(cfg.tail_pattern)}
+    return cache
+
+
+# ---------------------------------------------------------------- blocks
+def _apply_block(cfg, kind, p, x, positions, cache, cache_len):
+    """One (mixer + ffn) block.  Returns (x, new_cache, aux)."""
+    h = L.apply_norm(cfg, p["norm1"], x)
+    if kind in ("attn", "attn_local"):
+        mixed, new_cache = T.attention(cfg, p["mixer"], h, kind=kind,
+                                       positions=positions, cache=cache,
+                                       cache_len=cache_len)
+    elif kind == "rglru":
+        mixed, new_cache = RG.rglru(cfg, p["mixer"], h, state=cache)
+    elif kind == "rwkv6":
+        state = None if cache is None else dict(s=cache["s"],
+                                                shift=cache["shift"])
+        mixed, new_state = RW.rwkv6_timemix(cfg, p["mixer"], h, state=state)
+        new_cache = None if cache is None else dict(new_state,
+                                                    shift_c=cache["shift_c"])
+    else:
+        raise ValueError(kind)
+    x = x + mixed
+
+    h2 = L.apply_norm(cfg, p["norm2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        out, aux = MOE.moe(cfg, p["ffn"], h2)
+    elif cfg.mlp == "rwkv_channel":
+        if cache is None:
+            shifted = jnp.concatenate(
+                [jnp.zeros_like(h2[:, :1]), h2[:, :-1]], axis=1)
+        else:
+            shifted = cache["shift_c"][:, None].astype(h2.dtype)
+            new_cache = dict(new_cache,
+                             shift_c=h2[:, -1].astype(cache["shift_c"].dtype))
+        out = mlp(cfg, p["ffn"], h2, shifted=shifted)
+    else:
+        out = mlp(cfg, p["ffn"], h2)
+    x = L.constrain(x + out, "residual")
+    # dummy caches must keep a stable pytree structure for lax.scan
+    return x, new_cache, aux
+
+
+def _period_body(cfg, remat: bool):
+    """The scanned function over periods."""
+    def body(carry, xs):
+        x, cache_len, aux = carry
+        bp, bc, positions = xs["params"], xs["cache"], xs["positions"]
+        for j, kind in enumerate(cfg.pattern):
+            cj = None if bc is None else bc[str(j)]
+            x, ncj, a = _apply_block(cfg, kind, bp[str(j)], x, positions,
+                                     cj, cache_len)
+            if bc is not None:
+                bc[str(j)] = ncj
+            aux = aux + a
+        return (x, cache_len, aux), bc
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    return body
+
+
+def forward(cfg, params, tokens, *, cache=None, cache_len=None,
+            remat: bool = False, return_cache: bool = False):
+    """tokens: (B, S) int32 or (B, S, D) embeddings.
+
+    Returns (logits, new_cache_or_None, aux_loss).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.embedding_inputs:
+        x = tokens.astype(dt)
+    else:
+        x = params["embed"][tokens]
+    x = L.constrain(x, "residual")
+    t = x.shape[1]
+    if cache_len is None:
+        positions = jnp.arange(t, dtype=jnp.int32)
+    else:
+        positions = cache_len + jnp.arange(t, dtype=jnp.int32)
+
+    n = cfg.n_periods
+    body = _period_body(cfg, remat)
+    cl0 = jnp.zeros((), jnp.int32) if cache_len is None else cache_len
+    carry0 = (x, cl0, jnp.zeros((), jnp.float32))
+    body_cache = None if cache is None else \
+        {k: v for k, v in cache.items() if k != "tail"}
+    xs = {"params": params["blocks"], "cache": body_cache,
+          "positions": jnp.broadcast_to(positions, (n, t))}
+
+    if unroll_mode():
+        carry = carry0
+        collected = []
+        for i in range(n):
+            sl = jax.tree.map(lambda l: l[i], xs)
+            carry, bc = body(carry, sl)
+            collected.append(bc)
+        (x, _, aux) = carry
+        new_cache = (None if cache is None else
+                     jax.tree.map(lambda *ls: jnp.stack(ls), *collected))
+    else:
+        (x, _, aux), new_cache = jax.lax.scan(body, carry0, xs)
+        if cache is None:
+            new_cache = None
+
+    # trailing layers that don't complete a period (rgemma's final 2)
+    if cfg.tail_pattern:
+        new_tail = {}
+        for j, kind in enumerate(cfg.tail_pattern):
+            cj = None if cache is None else cache["tail"][str(j)]
+            blk = _apply_block
+            if remat:
+                blk = jax.checkpoint(_apply_block,
+                                     static_argnums=(0, 1), prevent_cse=False)
+            x, ncj, a = blk(cfg, kind, params["tail"][str(j)], x,
+                            positions, cj, cl0)
+            new_tail[str(j)] = ncj
+            aux = aux + a
+        if new_cache is not None:
+            new_cache = dict(new_cache, tail=new_tail)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if "head" in params:
+        logits = x @ params["head"]
+    else:
+        logits = x @ params["embed"].T
+    logits = L.constrain(logits, "logits")
+    return logits, new_cache, aux
+
+
+# ------------------------------------------------------------------ loss
+def loss_fn(cfg, params, tokens, labels, *, remat: bool = True):
+    logits, _, aux = forward(cfg, params, tokens, remat=remat)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    return ce + 0.01 * aux, dict(ce=ce, aux=aux)
+
+
+# --------------------------------------------------------------- serving
+def prefill(cfg, params, tokens):
+    """Forward pass producing logits; the per-layer K/V come out as the
+    scan-collected cache for subsequent decode."""
+    logits, cache, _ = forward(cfg, params, tokens, return_cache=False)
+    return logits
+
+
+def decode_step(cfg, params, tokens, cache, cache_len):
+    """One-token decode against the cache.  tokens (B,1) or (B,1,D)."""
+    logits, new_cache, _ = forward(cfg, params, tokens, cache=cache,
+                                   cache_len=cache_len)
+    return logits, new_cache, cache_len + 1

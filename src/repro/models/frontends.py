@@ -1,0 +1,25 @@
+"""Modality frontends for [vlm]/[audio] archs — STUBS per the assignment.
+
+The assigned internvl2 (ViT patch frontend) and hubert (waveform CNN
+frontend) cells specify the transformer BACKBONE only; `input_specs()`
+delivers precomputed patch/frame embeddings of shape (B, S, d_model)
+(`ModelConfig.embedding_inputs = True`), and the backbone consumes them
+directly (models.api.forward skips the token embedding).
+
+For runnable smoke tests/examples, `fake_embeddings` below synthesises
+deterministic embeddings with the right statistics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_embeddings(key, batch: int, seq: int, d_model: int,
+                    dtype=jnp.float32):
+    """Unit-variance stand-in for frontend outputs."""
+    return jax.random.normal(key, (batch, seq, d_model), dtype)
+
+
+def fake_frame_labels(key, batch: int, seq: int, vocab: int):
+    return jax.random.randint(key, (batch, seq), 0, vocab)

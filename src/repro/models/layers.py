@@ -1,0 +1,90 @@
+"""Shared building blocks: norms, RoPE, initialisers, sharding hooks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+
+
+def truncnorm(key, shape, dtype, scale: float):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return truncnorm(key, (d_in, d_out), dtype, scale)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def norm_params(cfg, key, d: int):
+    if cfg.norm == "layer":
+        return {"gamma": jnp.ones((d,), jnp.float32),
+                "beta": jnp.zeros((d,), jnp.float32)}
+    return {"gamma": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layer":
+        return layer_norm(x, p["gamma"], p["beta"])
+    return rms_norm(x, p["gamma"])
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_tables(positions, head_dim: int, rotary_pct: float, theta: float,
+                dtype=jnp.float32):
+    """cos/sin tables for the rotated fraction of head_dim.
+
+    positions: (T,) int array (absolute).  Returns (T, rot/2) each, or None
+    when rotary_pct == 0 (e.g. hubert's conv-positional stub).
+    """
+    rot = int(head_dim * rotary_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return None
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, tables):
+    """x: (B, T, H, hd); tables from rope_tables (T-aligned).
+
+    Rotates the first `rot` dims pairwise (interleaved convention), passes
+    the rest through — covers full (pct=1), half/'2d' (pct=0.5), none.
+    """
+    if tables is None:
+        return x
+    cos, sin = tables
+    rot = 2 * cos.shape[-1]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1).astype(x.dtype)
+
+
+def constrain(x, spec_name: str):
+    """Apply the active mesh's activation sharding rule (no-op if none)."""
+    return sharding.constrain(x, spec_name)

@@ -1,0 +1,49 @@
+"""Dense MLP variants: SwiGLU, (non-gated) GELU, squared-ReLU, RWKV channel-mix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def mlp_params(cfg, key, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {"w_in": L.dense_init(k1, d, f, dt),
+                "w_gate": L.dense_init(k2, d, f, dt),
+                "w_out": L.dense_init(k3, f, d, dt, scale=f ** -0.5)}
+    if cfg.mlp in ("gelu", "relu2"):
+        return {"w_in": L.dense_init(k1, d, f, dt),
+                "w_out": L.dense_init(k3, f, d, dt, scale=f ** -0.5)}
+    if cfg.mlp == "rwkv_channel":
+        return {"w_in": L.dense_init(k1, d, f, dt),
+                "w_out": L.dense_init(k3, f, d, dt, scale=f ** -0.5),
+                "w_r": L.dense_init(k2, d, d, dt),
+                "mu_k": jnp.ones((d,), dt) * 0.5,
+                "mu_r": jnp.ones((d,), dt) * 0.5}
+    raise ValueError(cfg.mlp)
+
+
+def mlp(cfg, p, x, shifted=None):
+    """x: (B, T, D).  `shifted` = token-shifted x (rwkv_channel only)."""
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])
+    elif cfg.mlp == "gelu":
+        h = jax.nn.gelu(x @ p["w_in"], approximate=True)
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_in"]))
+    elif cfg.mlp == "rwkv_channel":
+        xx = shifted - x
+        xk = x + xx * p["mu_k"]
+        xr = x + xx * p["mu_r"]
+        h = jnp.square(jax.nn.relu(xk @ p["w_in"]))
+        return L.constrain(
+            (jax.nn.sigmoid(xr @ p["w_r"]) * (h @ p["w_out"])), "residual")
+    else:
+        raise ValueError(cfg.mlp)
+    h = L.constrain(h, "ffn")
+    return L.constrain(h @ p["w_out"], "residual")

@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block = (W_x input proj + short causal depthwise conv + RG-LRU) gated by a
+GeLU branch (W_y), then W_out.  The RG-LRU recurrence:
+
+    r_t = sigmoid(u_t @ W_a)                  recurrence gate
+    i_t = sigmoid(u_t @ W_ix)                 input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)    data-dependent decay (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training runs the linear recurrence as a parallel associative scan over the
+sequence (the TPU-native replacement for the GPU linear-scan kernel);
+decode is a single fused step on an O(width) state.  The short conv keeps a
+(conv_width-1, W) tail as decode state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+RGLRU_C = 8.0
+
+
+def rglru_params(cfg, key):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    dt = jnp.dtype(cfg.dtype)
+    kx, ky, ka, ki, ko, kc = jax.random.split(key, 6)
+    return {
+        "w_x": L.dense_init(kx, d, w, dt),
+        "w_y": L.dense_init(ky, d, w, dt),
+        "w_a": L.dense_init(ka, w, w, dt),
+        "w_ix": L.dense_init(ki, w, w, dt),
+        "w_rnn_out": L.dense_init(ko, w, d, dt, scale=w ** -0.5),
+        "conv_w": L.truncnorm(kc, (cfg.conv_width, w), dt, 0.5),
+        "conv_b": jnp.zeros((w,), dt),
+        # Lambda init so that a = sigmoid(Lambda)^c is in ~[0.9, 0.999]
+        "lam": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+    }
+
+
+def _conv_causal(p, u, tail=None):
+    """Depthwise causal conv, width cw.  tail: (B, cw-1, W) decode state."""
+    cw = p["conv_w"].shape[0]
+    if tail is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = tail.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)          # (B, T+cw-1, W)
+    out = sum(ext[:, i:i + u.shape[1]] * p["conv_w"][i] for i in range(cw))
+    new_tail = ext[:, -(cw - 1):] if cw > 1 else pad
+    return out + p["conv_b"], new_tail
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u @ p["w_a"])
+    i = jax.nn.sigmoid(u @ p["w_ix"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]).astype(jnp.float32) \
+        * r.astype(jnp.float32)                       # (…, W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, gated
+
+
+def rglru(cfg, p, x, state=None):
+    """x: (B, T, D).  state: None (training) or dict(h=(B,W), conv=(B,cw-1,W)).
+
+    Returns (out (B,T,D), new_state).
+    """
+    u = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_y"], approximate=True)
+    conv_tail = None if state is None else state["conv"]
+    u, new_tail = _conv_causal(p, u, conv_tail)
+    a, b = _gates(p, u)                                # (B,T,W) f32
+
+    if state is None:
+        # parallel linear recurrence h_t = a_t h_{t-1} + b_t: chunked —
+        # an associative scan over the full T keeps log2(T) full-size
+        # (B, T, W) f32 intermediates live (the §Perf rgemma memory wall);
+        # chunking runs the log-depth scan per 256-chunk and carries h
+        # sequentially between chunks (recurrence flops are negligible,
+        # liveness drops ~T/256-fold).
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        t = a.shape[1]
+        ck = min(256, t)
+        if t % ck:
+            ck = t                       # odd lengths: single chunk
+        nc = t // ck
+        ac = a.reshape(a.shape[0], nc, ck, -1).transpose(1, 0, 2, 3)
+        bc = b.reshape(b.shape[0], nc, ck, -1).transpose(1, 0, 2, 3)
+
+        def chunk_body(h0, xs):
+            aci, bci = xs
+            # fold the carried state into the chunk's first step
+            bci = bci.at[:, 0].add((aci[:, 0] * h0).astype(bci.dtype))
+            aa, hh = jax.lax.associative_scan(combine, (aci, bci), axis=1)
+            return hh[:, -1], hh
+
+        from .runmode import unroll_mode
+        if unroll_mode():
+            hcur, outs = jnp.zeros_like(a[:, 0]), []
+            for i in range(nc):
+                hcur, hh = chunk_body(hcur, (ac[i], bc[i]))
+                outs.append(hh)
+            hs = jnp.stack(outs)
+        else:
+            _, hs = jax.lax.scan(chunk_body, jnp.zeros_like(a[:, 0]),
+                                 (ac, bc))
+        h = hs.transpose(1, 0, 2, 3).reshape(a.shape)
+        new_state = None
+    else:
+        h0 = state["h"].astype(jnp.float32)            # (B, W)
+        h = a[:, 0] * h0 + b[:, 0]
+        h = h[:, None]
+        new_state = dict(h=h[:, -1].astype(state["h"].dtype),
+                         conv=new_tail.astype(state["conv"].dtype))
+    h = L.constrain(h.astype(x.dtype), "ffn")
+    out = (h * gate) @ p["w_rnn_out"]
+    return L.constrain(out, "residual"), new_state
+
+
+def init_rglru_state(cfg, batch: int, dtype):
+    w = cfg.rglru_width or cfg.d_model
+    return dict(h=jnp.zeros((batch, w), dtype),
+                conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype))

@@ -1,0 +1,29 @@
+"""Cost-calibration run mode: unroll every lax.scan into a python loop.
+
+XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+count; the dry-run therefore lowers small UNROLLED variants (1 vs 2
+periods, 1 vs 2 microbatches, ...) at full tensor widths and solves the
+linear cost model to extrapolate exact per-cell FLOPs/bytes/collective
+counts (launch/dryrun.py §calibration).  Production paths always use
+lax.scan; this flag exists only for those calibration lowers.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_UNROLL: contextvars.ContextVar = contextvars.ContextVar("unroll",
+                                                         default=False)
+
+
+@contextlib.contextmanager
+def unrolled():
+    tok = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+def unroll_mode() -> bool:
+    return _UNROLL.get()

@@ -1,0 +1,172 @@
+"""RWKV-6 "Finch" time-mix (arXiv:2404.05892): attention-free token mixing
+with data-dependent per-channel decay.
+
+Per head (dim K = V = head_dim), with r/k/v/g projections of the
+token-shift-interpolated input and a LoRA-produced decay w_t:
+
+    w_t = exp(-exp(w0 + tanh(x_w @ A) @ B))          in (0, 1)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t              (K, V) state
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)          u = per-channel bonus
+
+Training uses a CHUNKED scan (DESIGN.md §2 hardware adaptation): within a
+chunk of length Cw the recurrence unrolls into dense einsums (decay powers
+via cumulative log-sums), and a lax.scan carries S between chunks — the
+classic linear-attention chunk form that keeps the MXU busy instead of
+stepping one token at a time.  Decode is the O(1) single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+LORA_R = 64
+CHUNK = 64
+
+
+def rwkv6_params(cfg, key):
+    d = cfg.d_model
+    h = cfg.rnn_heads
+    hd = d // h
+    dt = jnp.dtype(cfg.dtype)
+    kr, kk, kv, kg, ko, ka, kb = jax.random.split(key, 7)
+    return {
+        "wr": L.dense_init(kr, d, d, dt),
+        "wk": L.dense_init(kk, d, d, dt),
+        "wv": L.dense_init(kv, d, d, dt),
+        "wg": L.dense_init(kg, d, d, dt),
+        "wo": L.dense_init(ko, d, d, dt, scale=d ** -0.5),
+        "lora_a_w": L.dense_init(ka, d, LORA_R, dt),
+        "lora_b_w": L.dense_init(kb, LORA_R, d, dt),
+        "w0": jnp.full((d,), -5.0, jnp.float32),     # slow default decay
+        "u": jnp.zeros((h, hd), jnp.float32),        # bonus
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "ln_g": jnp.ones((d,), jnp.float32),         # per-head group norm
+    }
+
+
+def _heads(x, h):
+    b, t, d = x.shape
+    return x.reshape(b, t, h, d // h)
+
+
+def _chunked_wkv(r, k, v, w, u, s0):
+    """Chunked WKV recurrence.
+
+    r,k,v,w: (B, T, H, K) with w in (0,1) (decay), u: (H, K), s0: (B,H,K,V).
+    Returns (y (B,T,H,V), sT).  T must be a multiple of CHUNK (caller pads).
+    """
+    b, t, h, dk = r.shape
+    nc = t // CHUNK
+    rc = r.reshape(b, nc, CHUNK, h, dk).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, nc, CHUNK, h, dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, CHUNK, h, dk).transpose(1, 0, 2, 3, 4)
+    wc = w.reshape(b, nc, CHUNK, h, dk).transpose(1, 0, 2, 3, 4)
+
+    def body(s, xs):
+        rr, kk, vv, ww = xs                       # (B, C, H, K)
+        logw = jnp.log(jnp.maximum(ww, 1e-12))
+        cum = jnp.cumsum(logw, axis=1)            # log prod_{<=i} w
+        cum_excl = cum - logw                     # log prod_{<i}  w
+        # clamp the *cumulative* decay: a channel that decays below e^-30
+        # inside one chunk has washed out; clamping keeps the factored
+        # exp(+/-cum) terms inside f32 range (documented approximation).
+        cum = jnp.maximum(cum, -30.0)
+        cum_excl = jnp.maximum(cum_excl, -30.0)
+        # inter-chunk: y_i += r_i diag(prod_{<i} w) S
+        ri = rr * jnp.exp(cum_excl)               # (B,C,H,K)
+        y = jnp.einsum("bihk,bhkv->bihv", ri, s)
+        # intra-chunk (j < i): A[i,j] = sum_k ri[k] * (k_j exp(-cum_j))[k]
+        kj = kk * jnp.exp(-cum)                   # (B,C,H,K)
+        att = jnp.einsum("bihk,bjhk->bhij", ri, kj)
+        mask = jnp.tril(jnp.ones((CHUNK, CHUNK), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        # bonus diagonal: y_i += (r_i . u . k_i) v_i
+        diag = jnp.einsum("bihk,hk,bihk->bih", rr, u, kk)
+        y = y + jnp.einsum("bhij,bjhv->bihv", att, vv) \
+            + diag[..., None] * vv
+        # state: S' = diag(prod w) S + sum_j diag(prod_{>j} w) k_j v_j
+        k_dec = kk * jnp.exp(cum[:, -1:] - cum)
+        s_new = jnp.exp(cum[:, -1])[..., None] * s \
+            + jnp.einsum("bjhk,bjhv->bhkv", k_dec, vv)
+        return s_new, y
+
+    from .runmode import unroll_mode
+    if unroll_mode():
+        s, outs = s0, []
+        for i in range(nc):
+            s, yi = body(s, (rc[i], kc[i], vc[i], wc[i]))
+            outs.append(yi)
+        sT, ys = s, jnp.stack(outs)
+    else:
+        sT, ys = jax.lax.scan(body, s0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, -1)
+    return y, sT
+
+
+def rwkv6_timemix(cfg, p, x, state=None):
+    """x: (B, T, D).  state: None (training) or dict(s=(B,H,K,V),
+    shift=(B,D)) for decode.  Returns (out, new_state)."""
+    b, t, d = x.shape
+    h = cfg.rnn_heads
+    if state is None:
+        prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+        s0 = jnp.zeros((b, h, d // h, d // h), jnp.float32)
+    else:
+        prev = state["shift"][:, None].astype(x.dtype)
+        s0 = state["s"].astype(jnp.float32)
+    xx = prev - x
+    xr, xk, xv, xg = (x + xx * p[m] for m in ("mu_r", "mu_k", "mu_v", "mu_g"))
+    xw = x + xx * p["mu_w"]
+
+    r = _heads(xr @ p["wr"], h).astype(jnp.float32)
+    k = _heads(xk @ p["wk"], h).astype(jnp.float32)
+    v = _heads(xv @ p["wv"], h).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    logit = p["w0"] + (jnp.tanh(xw @ p["lora_a_w"]) @ p["lora_b_w"]) \
+        .astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logit))                      # (B,T,D) in (0,1)
+    w = _heads(w, h)
+
+    if state is None:
+        pad = (-t) % CHUNK
+        if pad:
+            zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            # pad with w=1 (no decay), k=0 (no writes), r=0 (no reads)
+            r_, k_, v_ = zp(r), zp(k), zp(v)
+            w_ = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                         constant_values=1.0)
+        else:
+            r_, k_, v_, w_ = r, k, v, w
+        y, sT = _chunked_wkv(r_, k_, v_, w_, p["u"], s0)
+        y = y[:, :t]
+        new_state = None
+    else:
+        # O(1) decode step (t == 1)
+        r1, k1, v1, w1 = r[:, 0], k[:, 0], v[:, 0], w[:, 0]
+        y1 = jnp.einsum("bhk,bhkv->bhv", r1,
+                        s0 + p["u"][None, :, :, None] *
+                        jnp.einsum("bhk,bhv->bhkv", k1, v1))
+        sT = w1[..., None] * s0 + jnp.einsum("bhk,bhv->bhkv", k1, v1)
+        y = y1[:, None]
+        new_state = dict(s=sT.astype(state["s"].dtype),
+                         shift=x[:, -1].astype(state["shift"].dtype))
+
+    # per-head group norm then output gate (back in the residual dtype)
+    y = L.rms_norm(y.reshape(b, t, h, -1),
+                   p["ln_g"].reshape(h, -1)).reshape(b, t, d)
+    out = (y.astype(x.dtype) * g) @ p["wo"]
+    return L.constrain(out, "residual"), new_state
+
+
+def init_rwkv_state(cfg, batch: int, dtype):
+    d = cfg.d_model
+    h = cfg.rnn_heads
+    return dict(s=jnp.zeros((batch, h, d // h, d // h), jnp.float32),
+                shift=jnp.zeros((batch, d), dtype),
+                shift_c=jnp.zeros((batch, d), dtype))

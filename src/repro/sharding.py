@@ -1,0 +1,209 @@
+"""GSPMD sharding rules: pod=DP, data=DP/FSDP, model=TP/EP (DESIGN.md §5).
+
+One rule table serves all 10 heterogeneous architectures because every rule
+is *divisibility-aware*: an axis that does not divide the dimension is
+dropped (replicated) instead of failing — e.g. yi-6b's 4 KV heads on a
+16-way model axis fall back to replicated KV, granite's MQA likewise.
+
+Usage:
+    rules = Rules(mesh, fsdp=True)
+    with rules.activate():
+        ... jit(step, in_shardings=rules.params_tree(shapes), ...) ...
+
+Inside model code, ``sharding.constrain(x, "residual")`` applies the active
+rule (no-op outside an activation context — models stay runnable on CPU
+with no mesh).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar("rules", default=None)
+
+
+def _dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+class Rules:
+    """Sharding rule table bound to a mesh."""
+
+    # parameter rules: leaf-name regex -> spec over the TRAILING dims.
+    # 'dp' expands to the FSDP axis ('data') when fsdp=True, else None.
+    PARAM_RULES = [
+        (r"embed$",                ("model", "dp")),     # (V, D)
+        (r"(wq|wk|wv|wqkv)$",      ("dp", "model")),     # (D, H*hd)
+        (r"wo$",                   ("model", "dp")),     # (H*hd, D)
+        (r"(w_in|w_gate)$",        ("dp", "model")),     # (D, F)
+        (r"w_out$",                ("model", "dp")),     # (F, D)
+        (r"(experts_in|experts_gate)$", ("model", "dp", None)),  # (E, D, F)
+        (r"experts_out$",          ("model", None, "dp")),       # (E, F, D)
+        (r"router$",               ("dp", None)),        # (D, E)
+        (r"head$",                 ("dp", "model")),     # (D, V)
+        (r"(w_a|w_ix|w_rg|w_x|w_y)$", ("dp", "model")),  # rglru dense (W, W)
+        (r"w_rnn_out$",            ("model", "dp")),
+        (r"(lora_a.*|lora_b.*)$",  (None, None)),
+        (r".*",                    None),                # norms/bias/scalars
+    ]
+
+    ACT_RULES = {
+        "residual":   lambda dp: P(dp, None, None),        # (B, S, D)
+        "heads":      lambda dp: P(dp, None, "model", None),  # (B,S,H,hd)
+        "kv_heads":   lambda dp: P(dp, None, "model", None),
+        "ffn":        lambda dp: P(dp, None, "model"),     # (B, S, F)
+        "logits":     lambda dp: P(dp, None, "model"),     # (B, S, V)
+        "tokens":     lambda dp: P(dp, None),              # (B, S)
+        "moe_buffer": lambda dp: P("model", None, None),   # (E, C, D)
+        "moe_hidden": lambda dp: P("model", None, None),   # (E, C, F)
+        "rnn_state":  lambda dp: P(dp, None),              # (B, W)
+        "wkv_state":  lambda dp: P(dp, "model", None, None),  # (B,H,K,V)
+    }
+
+    def __init__(self, mesh: Mesh, fsdp: bool = True, sp: bool = False):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        # sp: shard the residual stream's d_model over the model axis
+        # (sequence-parallel-style memory posture for the big configs;
+        # XLA inserts all-gather/reduce-scatter at layer boundaries).
+        self.sp = sp
+        self.dp = _dp_axes(mesh)
+
+    # ------------------------------------------------------------ params
+    def _resolve(self, axes, shape):
+        """Map rule axes onto the trailing dims of `shape`, dropping axes
+        that are absent from the mesh or do not divide the dim."""
+        if axes is None:
+            return P()
+        spec = [None] * len(shape)
+        trailing = shape[len(shape) - len(axes):] if len(shape) >= len(axes) \
+            else shape
+        offset = len(shape) - len(trailing)
+        for i, ax in enumerate(axes[-len(trailing):] if len(shape) < len(axes)
+                               else axes):
+            dim = trailing[i]
+            name = "data" if ax == "dp" else ax
+            if ax == "dp" and not self.fsdp:
+                continue
+            if name is None or name not in self.mesh.axis_names:
+                continue
+            if dim % self.mesh.shape[name] != 0:
+                continue
+            spec[offset + i] = name
+        return P(*spec)
+
+    def param_spec(self, path: str, shape) -> P:
+        leaf = path.split("/")[-1]
+        for pat, axes in self.PARAM_RULES:
+            if re.fullmatch(pat, leaf):
+                return self._resolve(axes, shape)
+        return P()
+
+    def params_tree(self, shapes_pytree):
+        """NamedSharding pytree for a params pytree of ShapeDtypeStructs."""
+        def visit(path, leaf):
+            keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+            name = "/".join(str(k) for k in keys)
+            return NamedSharding(self.mesh, self.param_spec(name, leaf.shape))
+        return jax.tree_util.tree_map_with_path(visit, shapes_pytree)
+
+    # --------------------------------------------------------- activations
+    def act_spec(self, name: str, rank: int | None = None) -> P:
+        if name == "residual" and self.sp:
+            spec = P(self.dp, None, "model")
+        else:
+            spec = self.ACT_RULES[name](self.dp)
+        # divisibility is handled by GSPMD padding for constraints; but drop
+        # axes not in the mesh.
+        parts = []
+        for ax in spec:
+            if isinstance(ax, tuple):
+                kept = tuple(a for a in ax if a in self.mesh.axis_names)
+                parts.append(kept if kept else None)
+            elif ax is None or ax in self.mesh.axis_names:
+                parts.append(ax)
+            else:
+                parts.append(None)
+        return P(*parts)
+
+    def input_sharding(self, name: str, shape) -> NamedSharding:
+        spec = self.act_spec(name)
+        # drop non-dividing axes for *input* shardings (jit is strict-er
+        # about layouts we hand it than about internal constraints).
+        parts = []
+        for i, ax in enumerate(spec):
+            if i >= len(shape):
+                break
+            axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            parts.append(ax if size and shape[i] % max(size, 1) == 0 else None)
+        return NamedSharding(self.mesh, P(*parts))
+
+    # ------------------------------------------------------------- context
+    @contextlib.contextmanager
+    def activate(self):
+        token = _ACTIVE.set(self)
+        try:
+            yield self
+        finally:
+            _ACTIVE.reset(token)
+
+
+def constrain(x, name: str):
+    rules: Rules | None = _ACTIVE.get()
+    if rules is None:
+        return x
+    try:
+        spec = rules.act_spec(name)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(rules.mesh, spec))
+    except Exception:
+        return x
+
+
+def _spec_fits(mesh: Mesh, spec: P, shape) -> bool:
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            if a not in mesh.axis_names:
+                return False
+            size *= mesh.shape[a]
+        if i >= len(shape) or shape[i] % size != 0:
+            return False
+    return True
+
+
+def constrain_first_fit(x, specs: Sequence[P]):
+    """Constrain with the first spec whose named axes all exist and divide;
+    no-op if none fit or no rules are active.  The mechanism behind
+    divisibility-aware attention sharding across heterogeneous GQA configs.
+    """
+    rules: Rules | None = _ACTIVE.get()
+    if rules is None:
+        return x
+    for spec in specs:
+        if _spec_fits(rules.mesh, spec, x.shape):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(rules.mesh, spec))
+    return x
+
+
+def current_rules() -> Rules | None:
+    return _ACTIVE.get()
+
+
+def current_dp() -> tuple:
+    """The active data-parallel axes, e.g. ('pod', 'data'); () if inactive."""
+    rules = _ACTIVE.get()
+    return rules.dp if rules is not None else ()

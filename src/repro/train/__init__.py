@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, trainer, checkpointing, data, elasticity."""
+from . import checkpoint, data, elastic, optimizer, trainer
+
+__all__ = ["checkpoint", "data", "elastic", "optimizer", "trainer"]

@@ -1,0 +1,80 @@
+"""Deterministic, shardable data pipeline + the paper's PGF tie-in.
+
+``TokenStream`` produces synthetic LM batches keyed only by (seed, step,
+shard) — any host can regenerate any shard of any step, which is the
+property that makes checkpoint-restart and straggler-failover trivial
+(restart at step k needs no data-state file) and keeps multi-pod input
+pipelines coordination-free.
+
+``ProbabilisticSampler`` is the paper-as-substrate piece (DESIGN.md §3):
+each example carries an inclusion probability p_i (quality weight /
+dedup-confidence — the tuple-independence model applied to a training
+corpus).  The sampler draws inclusion as independent Bernoullis, and the
+PGF engine gives the *exact* distribution of the effective batch size
+(Poisson-binomial, paper Eq. 4) — used to pick a padded batch capacity
+with overflow probability < eps instead of a heuristic, and to report
+exact per-mixture token-count distributions for data QC.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import poisson_binomial as pb
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    embedding_dim: int | None = None   # [vlm]/[audio]: emit embeddings
+
+    def batch(self, step: int, shard: int = 0, num_shards: int = 1):
+        """The (step, shard)-th batch slice; deterministic, stateless."""
+        assert self.global_batch % num_shards == 0
+        b = self.global_batch // num_shards
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), step), shard)
+        kt, kl = jax.random.split(key)
+        if self.embedding_dim:
+            tokens = jax.random.normal(
+                kt, (b, self.seq_len, self.embedding_dim), jnp.float32)
+        else:
+            tokens = jax.random.randint(kt, (b, self.seq_len), 0,
+                                        self.vocab_size)
+        labels = jax.random.randint(kl, (b, self.seq_len), 0,
+                                    self.vocab_size)
+        return dict(tokens=tokens, labels=labels)
+
+
+@dataclasses.dataclass
+class ProbabilisticSampler:
+    """Tuple-independent example inclusion; exact batch-size PGF."""
+
+    inclusion_probs: np.ndarray        # (pool,) example inclusion probs
+    seed: int = 0
+
+    def batch_size_pgf(self):
+        """Exact Poisson-binomial distribution of #included examples."""
+        return pb.count_pgf(jnp.asarray(self.inclusion_probs, jnp.float64
+                                        if jax.config.jax_enable_x64
+                                        else jnp.float32))
+
+    def capacity_for(self, eps: float = 1e-6) -> int:
+        """Smallest capacity C with P(#included > C) < eps — the PGF ADT's
+        GreaterEq answering a systems question exactly."""
+        f = self.batch_size_pgf()
+        cdf = np.cumsum(np.asarray(f.coeffs))
+        idx = int(np.searchsorted(cdf, 1.0 - eps))
+        return min(idx + 1, len(cdf))
+
+    def draw(self, step: int):
+        """Bernoulli world at this step (the 'random instance' of Fig. 2)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        u = jax.random.uniform(key, (len(self.inclusion_probs),))
+        return np.asarray(u) < self.inclusion_probs

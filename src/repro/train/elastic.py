@@ -1,0 +1,61 @@
+"""Elastic scaling: restore / reshard state across different meshes.
+
+A checkpoint written under mesh A (say 2x16x16) must restore onto mesh B
+(16x16, or a degraded 15-host pod) — that is what makes node failures
+survivable without identical spare capacity.  Because checkpoints store
+full logical arrays per key (host-sharded only along the process
+dimension), resharding is a pure placement decision:
+
+    reshard(tree, rules_B)   ->   device_put with mesh-B shardings
+
+`degrade_mesh` builds the largest (data, model)-factorable mesh from a
+reduced device count — the pod-loses-hosts path; `scale_batch` recomputes
+per-shard batch so the global batch is preserved under the new data-axis
+size (synchronous elastic semantics: the optimizer trajectory is unchanged
+because the *global* batch, not the per-device batch, is the contract).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..sharding import Rules
+
+
+def reshard(tree, rules: Rules):
+    """Re-place every leaf with the sharding rules of a (new) mesh."""
+    shapes = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+    shardings = rules.params_tree(shapes)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def degrade_mesh(devices, prefer_model: int = 16) -> Mesh:
+    """Largest (data, model) mesh from an arbitrary device count.
+
+    Keeps the model axis at the largest power-of-two divisor <= prefer_model
+    so TP groups stay intact; leftover devices are dropped (they rejoin at
+    the next resize) — the simple, deterministic policy a 1000-node fleet
+    can agree on without coordination.
+    """
+    n = len(devices)
+    model = 1
+    while model * 2 <= prefer_model and n // (model * 2) >= 1 \
+            and (model * 2) <= n:
+        model *= 2
+    data = n // model
+    dev = devices[: data * model]
+    import numpy as np
+    return Mesh(np.asarray(dev).reshape(data, model), ("data", "model"))
+
+
+def scale_batch(global_batch: int, mesh: Mesh) -> int:
+    """Per-data-shard batch preserving the global batch (synchronous
+    elasticity).  Requires divisibility; callers pad the batch up."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    assert global_batch % dp == 0, (global_batch, dp)
+    return global_batch // dp

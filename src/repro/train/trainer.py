@@ -1,0 +1,157 @@
+"""Training loop: microbatch accumulation, checkpoint-restart, failure
+injection, straggler-free determinism.
+
+`make_train_step` builds the jit'd step for any ModelConfig:
+
+    (params, opt_state, batch) -> (params', opt_state', metrics)
+
+with gradient accumulation as a lax.scan over microbatches (the pod-axis
+all-reduce overlaps the next microbatch's backward under XLA's latency-
+hiding scheduler — the accumulation structure is what makes that legal),
+gradient clipping, and the AdamW update.  `Trainer` drives it with
+checkpoint-every-N and restart-from-latest semantics; `run_with_failures`
+is the fault-tolerance harness used by tests (kill the loop at arbitrary
+steps, restart, assert bit-identical convergence vs an uninterrupted run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import api
+from . import checkpoint as ckpt_lib
+from .optimizer import AdamW, clip_by_global_norm
+
+
+def make_train_step(cfg, opt: AdamW, *, accum: int = 1, remat: bool = True,
+                    donate: bool = True, clip: float = 1.0,
+                    accum_dtype=jnp.float32, jit: bool = True):
+    """Build the train step with `accum` microbatches per step.
+
+    accum_dtype: gradient-accumulator dtype (bf16 for the 340B memory gate).
+    jit=False returns the raw callable (the dry-run jits it itself with
+    explicit in_shardings).
+    """
+
+    def loss_of(params, tokens, labels):
+        loss, metrics = api.loss_fn(cfg, params, tokens, labels, remat=remat)
+        return loss, metrics
+
+    def step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        if accum > 1:
+            b = tokens.shape[0]
+            mb = b // accum
+            tok = tokens.reshape(accum, mb, *tokens.shape[1:])
+            lab = labels.reshape(accum, mb, *labels.shape[1:])
+
+            def micro(carry, xs):
+                g_acc, l_acc = carry
+                (loss, m), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    params, xs[0], xs[1])
+                g_acc = jax.tree.map(
+                    lambda a, x: a + (x.astype(jnp.float32) / accum
+                                      ).astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + loss / accum), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              params)
+            from ..models.runmode import unroll_mode
+            if unroll_mode():
+                carry = (g0, 0.0)
+                for i in range(accum):
+                    carry, _ = micro(carry, (tok[i], lab[i]))
+                grads, loss = carry
+            else:
+                (grads, loss), _ = jax.lax.scan(micro, (g0, 0.0), (tok, lab))
+        else:
+            (loss, m), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, tokens, labels)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, dict(loss=loss, grad_norm=gnorm)
+
+    if not jit:
+        return step
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)
+
+
+@dataclasses.dataclass
+class Trainer:
+    cfg: Any
+    opt: AdamW
+    stream: Any                          # train.data.TokenStream
+    ckpt_dir: str
+    accum: int = 1
+    ckpt_every: int = 50
+    remat: bool = True
+
+    def __post_init__(self):
+        self.step_fn = make_train_step(self.cfg, self.opt, accum=self.accum,
+                                       remat=self.remat)
+
+    def init_state(self, seed: int = 0):
+        params = api.init_params(self.cfg, jax.random.PRNGKey(seed))
+        return params, self.opt.init(params)
+
+    def restore_or_init(self, seed: int = 0):
+        last = ckpt_lib.latest_step(self.ckpt_dir)
+        params, opt_state = self.init_state(seed)
+        if last is None:
+            return params, opt_state, 0
+        like = {"params": params, "opt": opt_state}
+        tree, manifest = ckpt_lib.restore(self.ckpt_dir, last, like)
+        return tree["params"], tree["opt"], int(manifest["step"])
+
+    def run(self, num_steps: int, *, seed: int = 0,
+            fail_at: Callable[[int], bool] | None = None):
+        """Train to `num_steps` global steps, restarting from the latest
+        checkpoint.  `fail_at(step)` True simulates a node failure (raises
+        after the optimizer update, before the checkpoint barrier —
+        the worst-case crash point)."""
+        params, opt_state, start = self.restore_or_init(seed)
+        history = []
+        for step in range(start, num_steps):
+            batch = self.stream.batch(step)
+            params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                      batch)
+            history.append(float(metrics["loss"]))
+            done = step + 1
+            if done % self.ckpt_every == 0 or done == num_steps:
+                ckpt_lib.save(self.ckpt_dir, done,
+                              {"params": params, "opt": opt_state},
+                              extra={"loss": history[-1]})
+            if fail_at is not None and fail_at(step):
+                raise RuntimeError(f"injected failure at step {step}")
+        return params, opt_state, history
+
+
+def run_with_failures(trainer: Trainer, num_steps: int,
+                      fail_steps: set[int], seed: int = 0):
+    """Drive `trainer` to completion across injected failures — the
+    checkpoint-restart integration harness.  Each step in `fail_steps`
+    kills the loop once; the loop restarts from the latest checkpoint.
+    Returns (params, opt_state, history, attempts)."""
+    fired: set[int] = set()
+
+    def fail_at(s: int) -> bool:
+        if s in fail_steps and s not in fired:
+            fired.add(s)
+            return True
+        return False
+
+    attempts = 0
+    while True:
+        attempts += 1
+        try:
+            params, opt_state, hist = trainer.run(num_steps, seed=seed,
+                                                  fail_at=fail_at)
+            return params, opt_state, hist, attempts
+        except RuntimeError as e:
+            if "injected failure" not in str(e):
+                raise

@@ -1,0 +1,15 @@
+# NOTE: no --xla_force_host_platform_device_count here (smoke tests and
+# benches must see 1 device; only launch/dryrun pins 512).  Multi-device
+# tests spawn subprocesses with their own XLA_FLAGS.
+import jax
+import pytest
+
+from repro.core import enable_x64
+
+enable_x64()  # the PGF engine's exactness tests need f64 on CPU
+
+
+@pytest.fixture
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

@@ -1,0 +1,108 @@
+"""UDA layer (paper §VI-A): Initialize/Accumulate/Merge/Finalize semantics.
+
+The key structural property: any partition of the tuples into chunks, any
+merge tree over the chunk states, gives the same final distribution —
+that's what makes the shard_map/psum execution valid (DESIGN.md §2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregates as agg
+from repro.core import pgf as P
+from repro.core.config import default_float
+
+
+def _rand(rng, n):
+    return (rng.uniform(0.05, 0.95, n), rng.integers(1, 9, n).astype(float))
+
+
+def test_atleastone(rng):
+    probs, _ = _rand(rng, 20)
+    st = agg.AtLeastOne.init()
+    st = agg.AtLeastOne.accumulate(st, jnp.asarray(probs, default_float()))
+    want = 1 - np.prod(1 - probs)
+    assert float(agg.AtLeastOne.finalize(st)) == pytest.approx(want, abs=1e-12)
+
+
+def test_merge_equals_single_accumulate(rng):
+    """Chunked accumulate + merge == one-shot accumulate (all UDAs)."""
+    probs, values = _rand(rng, 64)
+    pj = jnp.asarray(probs, default_float())
+    vj = jnp.asarray(values, default_float())
+
+    uda = agg.SumCF(num_freq=int(values.sum()) + 1)
+    one = uda.accumulate(uda.init(), pj, vj)
+    st = uda.init()
+    for lo in range(0, 64, 16):
+        chunk = uda.accumulate(uda.init(), pj[lo:lo + 16], vj[lo:lo + 16])
+        st = uda.merge(st, chunk)
+    np.testing.assert_allclose(np.asarray(one.log_abs),
+                               np.asarray(st.log_abs), atol=1e-10)
+    np.testing.assert_allclose(np.asarray(uda.finalize(one).coeffs),
+                               np.asarray(uda.finalize(st).coeffs),
+                               atol=1e-10)
+
+    m = agg.MinUDA(kappa=16)
+    one_m = m.accumulate(m.init(), pj, vj)
+    st_m = m.init()
+    for lo in range(0, 64, 16):
+        st_m = m.merge(st_m, m.accumulate(m.init(), pj[lo:lo + 16],
+                                          vj[lo:lo + 16]))
+    v1, m1, t1 = m.finalize(one_m)
+    v2, m2, t2 = m.finalize(st_m)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-12)
+    np.testing.assert_allclose(float(t1), float(t2), atol=1e-12)
+
+
+@pytest.mark.parametrize("sign,name", [(1.0, "MIN"), (-1.0, "MAX")])
+def test_minmax_uda_vs_possible_worlds(rng, sign, name):
+    probs, values = _rand(rng, 12)
+    u = agg.MinUDA(kappa=16, sign=sign)
+    st = u.accumulate(u.init(), jnp.asarray(probs, default_float()),
+                      jnp.asarray(values, default_float()))
+    vals, mass, p_tail = u.finalize(st)
+    vals, mass = np.asarray(vals), np.asarray(mass)
+    oracle = P.possible_worlds_pgf(probs, values, name)
+    for outcome, pr in oracle.items():
+        if np.isinf(outcome):
+            assert float(p_tail) == pytest.approx(pr, abs=1e-12)
+        else:
+            got = mass[vals == outcome].sum()
+            assert got == pytest.approx(pr, abs=1e-12), outcome
+
+
+def test_minmax_truncation_tail(rng):
+    """kappa smaller than support: dropped mass lands in the tail (§V-B.2)."""
+    probs = np.full(10, 0.5)
+    values = np.arange(10, dtype=float)
+    u = agg.MinUDA(kappa=4)
+    st = u.accumulate(u.init(), jnp.asarray(probs, default_float()),
+                      jnp.asarray(values, default_float()))
+    vals, mass, p_tail = u.finalize(st)
+    kept = np.asarray(mass).sum()
+    assert kept + float(p_tail) == pytest.approx(1.0, abs=1e-12)
+    # P(min >= 4) = all of 0..3 absent = 0.5^4
+    assert float(p_tail) == pytest.approx(0.5 ** 4, abs=1e-12)
+    assert float(u.p_empty(st)) == pytest.approx(0.5 ** 10, abs=1e-12)
+
+
+def test_masked_tuples_are_ignored(rng):
+    probs, values = _rand(rng, 10)
+    mask = np.arange(10) < 6
+    uda = agg.SumCF(num_freq=64)
+    a = uda.accumulate(uda.init(), jnp.asarray(probs, default_float()),
+                       jnp.asarray(values, default_float()),
+                       mask=jnp.asarray(mask))
+    b = uda.accumulate(uda.init(), jnp.asarray(probs[:6], default_float()),
+                       jnp.asarray(values[:6], default_float()))
+    np.testing.assert_allclose(np.asarray(uda.finalize(a).coeffs),
+                               np.asarray(uda.finalize(b).coeffs),
+                               atol=1e-10)
+
+
+def test_count_cf_capacity():
+    uda = agg.CountCF(capacity=10)
+    st = uda.accumulate(uda.init(), jnp.asarray([0.5] * 5, default_float()))
+    f = uda.finalize(st)
+    assert f.coeffs.shape[0] == 11
+    assert float(f.coeffs.sum()) == pytest.approx(1.0, abs=1e-9)

@@ -1,0 +1,71 @@
+"""PGF ADT comparison operators (paper Fig. 5, §VII-A)."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compare as C
+from repro.core.pgf import PGF
+from repro.core.config import default_float
+
+
+def mk(masses: dict, ppi=0.0, pni=0.0):
+    lo, hi = min(masses), max(masses)
+    coeffs = np.zeros(hi - lo + 1)
+    for v, p in masses.items():
+        coeffs[v - lo] = p
+    return PGF(jnp.asarray(coeffs, default_float()), lo, ppi, pni)
+
+
+def brute(fa: dict, ga: dict, op):
+    return sum(pa * pb for (a, pa), (b, pb)
+               in itertools.product(fa.items(), ga.items()) if op(a, b))
+
+
+def test_scalar_comparisons():
+    f = mk({1: 0.2, 3: 0.5, 6: 0.3})
+    assert float(C.equal(f, 3)) == pytest.approx(0.5)
+    assert float(C.equal(f, 2)) == 0.0
+    assert float(C.greater(f, 3)) == pytest.approx(0.3)
+    assert float(C.greater_eq(f, 3)) == pytest.approx(0.8)
+    assert float(C.less(f, 3)) == pytest.approx(0.2)
+    assert float(C.less_eq(f, 3)) == pytest.approx(0.7)
+
+
+def test_pgf_vs_pgf(rng):
+    fa = {1: 0.2, 3: 0.5, 6: 0.3}
+    ga = {0: 0.1, 3: 0.4, 7: 0.5}
+    f, g = mk(fa), mk(ga)
+    assert float(C.equal_pgf(f, g)) == pytest.approx(
+        brute(fa, ga, lambda a, b: a == b), abs=1e-12)
+    assert float(C.greater_pgf(f, g)) == pytest.approx(
+        brute(fa, ga, lambda a, b: a > b), abs=1e-12)
+    assert float(C.greater_eq_pgf(f, g)) == pytest.approx(
+        brute(fa, ga, lambda a, b: a >= b), abs=1e-12)
+
+
+def test_pgf_vs_pgf_with_inf_masses():
+    """MIN/MAX results carry +/-inf masses through comparisons."""
+    fa = {2: 0.5}
+    ga = {1: 0.3, 4: 0.3}
+    f = mk(fa, ppi=0.5)            # P(F=+inf)=0.5
+    g = mk(ga, pni=0.4)            # P(G=-inf)=0.4
+    # brute force with inf outcomes
+    fa_full = {**fa, 10 ** 9: 0.5}
+    ga_full = {**ga, -10 ** 9: 0.4}
+    assert float(C.greater_pgf(f, g)) == pytest.approx(
+        brute(fa_full, ga_full, lambda a, b: a > b), abs=1e-12)
+    assert float(C.equal_pgf(f, g)) == pytest.approx(
+        brute(fa, ga, lambda a, b: a == b), abs=1e-12)
+
+
+def test_comparisons_on_approx_objects(rng):
+    from repro.core import approx
+    probs = rng.uniform(0.2, 0.8, 2000)
+    values = rng.integers(1, 10, 2000).astype(float)
+    gm = approx.fit_from_data(probs, values, p=3)
+    mu = float(np.sum(probs * values))
+    assert C.prob_greater(gm, mu - 500) > 0.99
+    assert C.prob_greater(gm, mu + 500) < 0.01
+    assert 0.3 < C.prob_greater(gm, mu) < 0.7

@@ -1,0 +1,159 @@
+"""Relational operators (paper Table I) vs brute-force semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pgf import possible_worlds_pgf
+from repro.db import operators as ops
+from repro.db.table import Table
+
+
+def small_table(rng, n=20, groups=3):
+    return Table.from_columns(
+        {"g": jnp.asarray(rng.integers(0, groups, n)),
+         "v": jnp.asarray(rng.integers(1, 8, n).astype(float)),
+         "key": jnp.arange(n)},
+        prob=jnp.asarray(rng.uniform(0.05, 0.95, n)))
+
+
+def test_select_masks_only(rng):
+    t = small_table(rng)
+    s = ops.select(t, lambda x: x["v"] > 3)
+    assert s.capacity == t.capacity
+    np.testing.assert_array_equal(
+        np.asarray(s.valid), np.asarray(t.valid & (t["v"] > 3)))
+
+
+def test_project_atleastone(rng):
+    t = small_table(rng)
+    out = ops.project(t, ["g"], max_groups=8)
+    g_np = np.asarray(t["g"])
+    p_np = np.asarray(t.prob)
+    live = np.asarray(out.valid)
+    for i in np.nonzero(live)[0]:
+        gval = int(np.asarray(out["g"])[i])
+        want = 1 - np.prod(1 - p_np[g_np == gval])
+        assert float(out.prob[i]) == pytest.approx(want, abs=1e-12)
+
+
+def test_fk_join_semantics(rng):
+    left = small_table(rng, n=30, groups=5)
+    right = Table.from_columns(
+        {"rkey": jnp.arange(5), "payload": jnp.asarray([10., 11, 12, 13, 14])},
+        prob=jnp.asarray(rng.uniform(0.2, 0.9, 5)))
+    j = ops.fk_join(left, right, "g", "rkey", ["payload"])
+    for i in range(left.capacity):
+        g = int(left["g"][i])
+        assert float(j["payload"][i]) == 10.0 + g
+        assert float(j.prob[i]) == pytest.approx(
+            float(left.prob[i]) * float(right.prob[g]), abs=1e-12)
+    # invalid right rows kill matches
+    right2 = right.with_valid(jnp.asarray([True, False, True, True, True]))
+    j2 = ops.fk_join(left, right2, "g", "rkey", ["payload"])
+    dead = np.asarray(left["g"]) == 1
+    assert not np.asarray(j2.valid)[dead].any()
+
+
+def test_general_join_cross_product(rng):
+    a = Table.from_columns({"x": jnp.asarray([1, 2])},
+                           prob=jnp.asarray([0.5, 0.6]))
+    b = Table.from_columns({"y": jnp.asarray([7, 8, 9])},
+                           prob=jnp.asarray([0.1, 0.2, 0.3]))
+    j = ops.general_join(a, b, lambda l, r, i, jj: jnp.ones_like(i, bool),
+                         ["y"])
+    assert j.capacity == 6
+    # p = px * py (Table I row IV)
+    want = np.outer([0.5, 0.6], [0.1, 0.2, 0.3]).reshape(-1)
+    np.testing.assert_allclose(np.asarray(j.prob), want, atol=1e-12)
+
+
+def test_group_normal_and_cumulants_consistent(rng):
+    t = small_table(rng, n=40, groups=4)
+    ids, _, _ = ops.group_ids(t, ["g"], 8)
+    v = t["v"].astype(t.prob.dtype)
+    mu, var = ops.group_normal_terms(t, v, ids, 8)
+    cum = ops.group_cumulant_terms(t, v, ids, 8)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(cum[:, 0]),
+                               atol=1e-10)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(cum[:, 1]),
+                               atol=1e-10)
+
+
+def test_group_logcf_exact_sum(rng):
+    t = small_table(rng, n=12, groups=2)
+    ids, codes, gvalid = ops.group_ids(t, ["g"], 4)
+    F = 64
+    la, an = ops.group_logcf(t, t["v"], ids, 4, F)
+    coeffs = np.asarray(ops.group_logcf_finalize(la, an))
+    g_np, v_np, p_np = (np.asarray(t["g"]), np.asarray(t["v"]),
+                        np.asarray(t.prob))
+    codes_np = np.asarray(codes)
+    for g in range(2):
+        gi = int(np.searchsorted(codes_np, g))
+        oracle = possible_worlds_pgf(p_np[g_np == g], v_np[g_np == g], "SUM")
+        for outcome, pr in oracle.items():
+            assert coeffs[gi, int(outcome)] == pytest.approx(pr, abs=1e-10)
+
+
+@pytest.mark.parametrize("sign,name", [(1.0, "MIN"), (-1.0, "MAX")])
+def test_group_minmax_vs_possible_worlds(rng, sign, name):
+    for seed in range(3):
+        r = np.random.default_rng(seed)
+        n, G = 18, 4
+        g_np = r.integers(0, G, n)
+        p_np = r.uniform(0.05, 0.95, n)
+        v_np = r.integers(1, 8, n).astype(float)
+        valid = r.uniform(0, 1, n) > 0.2
+        t = Table.from_columns({"g": jnp.asarray(g_np),
+                                "v": jnp.asarray(v_np)},
+                               prob=jnp.asarray(p_np),
+                               valid=jnp.asarray(valid))
+        ids, codes, _ = ops.group_ids(t, ["g"], G + 2)
+        res = ops.group_minmax(t, t["v"], ids, G + 2, sign=sign)
+        rg = np.asarray(res["run_group"])
+        rv = np.asarray(res["run_value"])
+        rm = np.asarray(res["run_mass"])
+        pe = np.asarray(res["p_empty"])
+        codes_np = np.asarray(codes)
+        for g in range(G):
+            sel = (g_np == g) & valid
+            if not sel.any():
+                continue
+            oracle = possible_worlds_pgf(p_np[sel], v_np[sel], name)
+            gi = int(np.searchsorted(codes_np, g))
+            for outcome, pr in oracle.items():
+                got = pe[gi] if np.isinf(outcome) \
+                    else rm[(rg == gi) & (rv == outcome)].sum()
+                assert got == pytest.approx(pr, abs=1e-12), (seed, g, outcome)
+
+
+def test_reweight_and_normal_greater(rng):
+    t = small_table(rng)
+    p_cond = jnp.asarray(rng.uniform(0, 1, t.capacity))
+    r = ops.reweight(t, p_cond)
+    np.testing.assert_allclose(np.asarray(r.prob),
+                               np.asarray(t.prob) * np.asarray(p_cond),
+                               atol=1e-12)
+    # normal_greater against scipy
+    from scipy.stats import norm
+    mu = jnp.asarray([10.0, 0.0])
+    var = jnp.asarray([4.0, 1.0])
+    got = np.asarray(ops.normal_greater(mu, var, jnp.asarray([11.0, 0.0])))
+    want = 1 - norm.cdf([11.0, 0.0], loc=[10, 0], scale=[2, 1])
+    np.testing.assert_allclose(got, want, atol=1e-7)
+
+
+def test_plan_dsl_matches_direct_operators(rng):
+    from repro.db import plans
+    from repro.db.plans import Scan, Select, GroupAgg
+    t = small_table(rng, n=30)
+    tables = {"t": t}
+    plan = GroupAgg(Select(Scan("t"), lambda x: x["v"] > 2),
+                    keys=("g",), value="v", agg="SUM", max_groups=8)
+    out = plans.compile_plan(plan)(tables)
+    s = ops.select(t, lambda x: x["v"] > 2)
+    ids, _, _ = ops.group_ids(s, ["g"], 8)
+    mu, var = ops.group_normal_terms(s, s["v"].astype(s.prob.dtype), ids, 8)
+    np.testing.assert_allclose(np.asarray(out["sum"][0]), np.asarray(mu),
+                               atol=1e-12)

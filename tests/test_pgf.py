@@ -1,0 +1,139 @@
+"""Dense PGF value type vs the possible-worlds oracle + hypothesis
+property tests on the polynomial-monoid invariants (paper §IV)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pgf as P
+from repro.core.config import default_float
+
+
+def mk(coeffs, offset=0, ppi=0.0, pni=0.0):
+    return P.PGF(jnp.asarray(coeffs, default_float()), offset, ppi, pni)
+
+
+# ----------------------------------------------------------- constructors
+def test_bernoulli_sum():
+    f = P.PGF.bernoulli(0.7, 3, "SUM")
+    np.testing.assert_allclose(np.asarray(f.coeffs),
+                               [0.3, 0, 0, 0.7], atol=1e-15)
+    assert f.offset == 0
+
+
+def test_bernoulli_min_carries_inf_mass():
+    f = P.PGF.bernoulli(0.7, 5, "MIN")
+    assert float(f.p_pos_inf) == pytest.approx(0.3)
+    assert float(f.total_mass()) == pytest.approx(1.0)
+
+
+def test_from_scalar_is_gamma_embedding():
+    f = P.PGF.from_scalar(4)
+    assert float(f.mass_at(4)) == 1.0
+
+
+# ------------------------------------------------------------- products
+@pytest.mark.parametrize("monoid", ["SUM", "MIN", "MAX"])
+def test_pairwise_products_match_possible_worlds(monoid, rng):
+    n = 6
+    probs = rng.uniform(0.05, 0.95, n)
+    values = rng.integers(1, 9, n)
+    oracle = P.possible_worlds_pgf(probs, values, monoid)
+    acc = P.PGF.bernoulli(probs[0], int(values[0]), monoid)
+    for i in range(1, n):
+        acc = acc.mul(P.PGF.bernoulli(probs[i], int(values[i]), monoid),
+                      monoid)
+    for outcome, pr in oracle.items():
+        if outcome == np.inf:
+            got = float(acc.p_pos_inf)
+        elif outcome == -np.inf:
+            got = float(acc.p_neg_inf)
+        else:
+            got = float(acc.mass_at(int(outcome)))
+        assert got == pytest.approx(pr, abs=1e-12), (monoid, outcome)
+
+
+def test_mul_sum_fft_vs_schoolbook(rng):
+    a = mk(rng.dirichlet(np.ones(1500)))
+    b = mk(rng.dirichlet(np.ones(1400)))
+    exact = np.convolve(np.asarray(a.coeffs), np.asarray(b.coeffs))
+    viafft = np.asarray(P.fft_convolve(a.coeffs, b.coeffs))
+    np.testing.assert_allclose(viafft, exact, atol=1e-12)
+
+
+def test_product_tree_matches_sequential(rng):
+    rows = rng.uniform(0.1, 0.9, (9, 2))
+    rows = rows / rows.sum(1, keepdims=True)
+    factors = jnp.asarray(rows, default_float())
+    tree = P.product_tree(factors)
+    seq = mk(rows[0])
+    for r in rows[1:]:
+        seq = seq.mul_sum(mk(r))
+    ct, cs = np.asarray(tree.coeffs), np.asarray(seq.coeffs)
+    n = min(len(ct), len(cs))      # tree output is zero-padded wider
+    np.testing.assert_allclose(ct[:n], cs[:n], atol=1e-12)
+    assert np.all(ct[n:] < 1e-12) and np.all(cs[n:] < 1e-12)
+
+
+def test_stretch_spreads_coefficients():
+    f = mk([0.5, 0.3, 0.2])
+    g = f.stretch(3)
+    assert g.coeffs.shape[0] == 7
+    assert float(g.mass_at(6)) == pytest.approx(0.2)
+    assert float(g.mass_at(3)) == pytest.approx(0.3)
+    assert float(g.mass_at(1)) == 0.0
+
+
+def test_truncate_smallest_moves_mass_to_inf():
+    f = mk([0.5, 0.3, 0.2])
+    g = f.truncate_smallest(2)
+    assert float(g.p_pos_inf) == pytest.approx(0.2)
+    assert float(g.total_mass()) == pytest.approx(1.0)
+
+
+# ----------------------------------------------------- hypothesis invariants
+probs_arrays = st.lists(st.floats(0.01, 0.99), min_size=1, max_size=8)
+
+
+@settings(max_examples=50, deadline=None)
+@given(probs_arrays, probs_arrays)
+def test_mass_conservation_under_mul(p1, p2):
+    """Polynomial-monoid closure (Prop. 1): coefficient sums stay 1."""
+    a = mk(np.asarray(p1) / np.sum(p1))
+    b = mk(np.asarray(p2) / np.sum(p2))
+    for prod in (a.mul_sum(b), a.mul_min(b), a.mul_max(b)):
+        assert float(prod.total_mass()) == pytest.approx(1.0, abs=1e-9)
+        assert np.all(np.asarray(prod.coeffs) >= -1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(probs_arrays, probs_arrays, probs_arrays)
+def test_mul_sum_associative_commutative(p1, p2, p3):
+    a = mk(np.asarray(p1) / np.sum(p1))
+    b = mk(np.asarray(p2) / np.sum(p2))
+    c = mk(np.asarray(p3) / np.sum(p3))
+    ab_c = a.mul_sum(b).mul_sum(c)
+    a_bc = a.mul_sum(b.mul_sum(c))
+    ba_c = b.mul_sum(a).mul_sum(c)
+    np.testing.assert_allclose(np.asarray(ab_c.coeffs),
+                               np.asarray(a_bc.coeffs), atol=1e-9)
+    np.testing.assert_allclose(np.asarray(ab_c.coeffs),
+                               np.asarray(ba_c.coeffs), atol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.01, 0.99), min_size=2, max_size=10))
+def test_mean_of_count_is_sum_of_probs(ps):
+    from repro.core import poisson_binomial as pb
+    f = pb.count_pgf(jnp.asarray(ps, default_float()))
+    assert float(f.mean()) == pytest.approx(float(np.sum(ps)), abs=1e-8)
+
+
+def test_cdf_and_confidence_interval(rng):
+    f = mk(rng.dirichlet(np.ones(30)))
+    cdf = np.cumsum(np.asarray(f.coeffs))
+    for v in [0, 7, 29]:
+        assert float(f.cdf(v)) == pytest.approx(cdf[v], abs=1e-12)
+    lo, hi = f.confidence_interval(0.9)
+    assert 0 <= int(lo) <= int(hi) <= 29
+    assert float(f.cdf(hi) - f.cdf(lo) + f.mass_at(lo)) >= 0.9 - 1e-9

@@ -1,0 +1,69 @@
+"""Log-CF exact COUNT/SUM (the TPU adaptation) vs oracles (paper §V-A/C)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pgf as P
+from repro.core import poisson_binomial as pb
+from repro.core.config import default_float
+
+
+def test_count_matches_possible_worlds(rng):
+    probs = rng.uniform(0.05, 0.95, 14)
+    oracle = P.possible_worlds_pgf(probs, np.ones(14), "COUNT")
+    f = pb.count_pgf(jnp.asarray(probs, default_float()))
+    for k, pr in oracle.items():
+        assert float(f.coeffs[int(k)]) == pytest.approx(pr, abs=1e-12)
+
+
+def test_sum_matches_possible_worlds(rng):
+    probs = rng.uniform(0.05, 0.95, 12)
+    values = rng.integers(0, 7, 12)
+    oracle = P.possible_worlds_pgf(probs, values, "SUM")
+    f = pb.sum_pgf(jnp.asarray(probs, default_float()),
+                   jnp.asarray(values, default_float()))
+    for k, pr in oracle.items():
+        assert float(f.coeffs[int(k)]) == pytest.approx(pr, abs=1e-12)
+
+
+def test_grouped_sum_equals_cf_sum(rng):
+    """Paper-faithful grouped/stretch/FFT path == log-CF path (§V-C)."""
+    probs = rng.uniform(0.05, 0.95, 40)
+    values = rng.integers(0, 9, 40)
+    a = pb.sum_pgf(jnp.asarray(probs, default_float()),
+                   jnp.asarray(values, default_float()))
+    b = pb.sum_pgf_grouped(jnp.asarray(probs, default_float()),
+                           jnp.asarray(values))
+    ka = np.asarray(a.coeffs)
+    kb = np.asarray(b.coeffs)
+    n = min(len(ka), len(kb))
+    np.testing.assert_allclose(ka[:n], kb[:n], atol=1e-10)
+    assert np.all(ka[n:] < 1e-10) and np.all(kb[n:] < 1e-10)
+
+
+def test_count_binomial_closed_form():
+    """All p equal: Poisson binomial == Binomial(n, p)."""
+    import math
+    n, p = 25, 0.3
+    f = pb.count_pgf(jnp.full((n,), p, default_float()))
+    for k in range(n + 1):
+        want = math.comb(n, k) * p ** k * (1 - p) ** (n - k)
+        assert float(f.coeffs[k]) == pytest.approx(want, rel=1e-9, abs=1e-13)
+
+
+def test_blocked_scan_equals_unblocked(rng):
+    probs = jnp.asarray(rng.uniform(0.01, 0.99, 1000), default_float())
+    values = jnp.asarray(rng.integers(0, 5, 1000), default_float())
+    la1, an1 = pb.logcf_terms(probs, values, 301, block=64)
+    la2, an2 = pb.logcf_terms(probs, values, 301, block=4096)
+    np.testing.assert_allclose(np.asarray(la1), np.asarray(la2), atol=1e-9)
+
+
+def test_zero_and_one_probability_tuples():
+    """p=0 is absent (no effect); p=1 shifts deterministically."""
+    probs = jnp.asarray([0.0, 1.0, 0.5], default_float())
+    values = jnp.asarray([3.0, 2.0, 4.0], default_float())
+    f = pb.sum_pgf(probs, values)
+    assert float(f.coeffs[2]) == pytest.approx(0.5, abs=1e-9)   # only p=1
+    assert float(f.coeffs[6]) == pytest.approx(0.5, abs=1e-9)   # 2 + 4
+    assert float(f.coeffs.sum()) == pytest.approx(1.0, abs=1e-9)

@@ -1,0 +1,79 @@
+"""Sharding rule table: divisibility-aware fallback, first-fit constraints."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import Rules, _spec_fits
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(1, 1)
+
+
+def test_param_rules_shard_matching_dims(mesh):
+    r = Rules(mesh, fsdp=True)
+    # 1x1 mesh: every axis has size 1, divisibility always holds
+    spec = r.param_spec("blocks/0/mixer/wq", (64, 128))
+    assert spec == P("data", "model")
+    spec = r.param_spec("blocks/0/mixer/wo", (128, 64))
+    assert spec == P("model", "data")
+    assert r.param_spec("blocks/0/norm1/gamma", (64,)) == P()
+    assert r.param_spec("embed", (512, 64)) == P("model", "data")
+    assert r.param_spec("blocks/0/ffn/experts_in", (8, 64, 96)) == \
+        P("model", "data", None)
+
+
+def test_param_rules_drop_non_dividing_axes():
+    import numpy as np
+    from jax.sharding import Mesh
+    # fake a (1, 16)-shaped logical mesh over 1 device repeated? Use the
+    # divisibility check directly instead.
+    mesh = make_host_mesh(1, 1)
+    r = Rules(mesh, fsdp=True)
+    # simulate: dim 7 is never divisible by >1 axes; on 1x1 everything
+    # divides, so exercise _resolve via a crafted mesh-shape view
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 16}
+    r.mesh = FakeMesh()
+    assert r.param_spec("blocks/0/mixer/wk", (64, 4 * 7)) == P("data", None)
+    assert r.param_spec("blocks/0/mixer/wk", (63, 32)) == P(None, "model")
+
+
+def test_stacked_leading_dim_gets_none(mesh):
+    r = Rules(mesh)
+    spec = r.param_spec("blocks/0/mixer/wq", (4, 64, 128))
+    assert spec == P(None, "data", "model")
+
+
+def test_fsdp_off_drops_dp(mesh):
+    r = Rules(mesh, fsdp=False)
+    assert r.param_spec("blocks/0/mixer/wq", (64, 128)) == P(None, "model")
+
+
+def test_spec_fits():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 16}
+    m = FakeMesh()
+    assert _spec_fits(m, P(None, "model"), (3, 32))
+    assert not _spec_fits(m, P(None, "model"), (3, 31))
+    assert not _spec_fits(m, P("pod", None), (8, 8))
+    assert _spec_fits(m, P(("data",), "model"), (8, 16))
+
+
+def test_constrain_noop_outside_context():
+    import jax.numpy as jnp
+    from repro import sharding
+    x = jnp.ones((4, 4))
+    assert sharding.constrain(x, "residual") is x
+    assert sharding.constrain_first_fit(x, [P("model", None)]) is x
+
+
+def test_act_spec_sp_mode(mesh):
+    r = Rules(mesh, sp=True)
+    assert r.act_spec("residual")[2] == "model"
+    r2 = Rules(mesh, sp=False)
+    assert r2.act_spec("residual")[2] is None

@@ -1,0 +1,109 @@
+"""End-to-end behaviour: the paper's pipeline from raw probabilistic table
+to finished distribution, and a short real training run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compare
+from repro.core.pgf import possible_worlds_pgf
+from repro.db import operators as ops, tpch
+from repro.db.table import Table
+
+
+def test_paper_worked_example_section_iv_a():
+    """The paper's own COUNT example (Fig. 1): p = .7/.8/.5 =>
+    F(X) = 0.28X^3 + 0.47X^2 + 0.22X + 0.03."""
+    from repro.core import poisson_binomial as pb
+    from repro.core.config import default_float
+    f = pb.count_pgf(jnp.asarray([0.7, 0.8, 0.5], default_float()))
+    c = np.asarray(f.coeffs)
+    np.testing.assert_allclose(c, [0.03, 0.22, 0.47, 0.28], atol=1e-12)
+
+
+def test_paper_worked_example_sum():
+    """§IV-A SUM example: values 3/8/5 => 0.28X^16 + 0.12X^13 + 0.28X^11 +
+    0.19X^8 + 0.03X^5 + 0.07X^3 + 0.03."""
+    from repro.core import poisson_binomial as pb
+    from repro.core.config import default_float
+    f = pb.sum_pgf(jnp.asarray([0.7, 0.8, 0.5], default_float()),
+                   jnp.asarray([3.0, 8.0, 5.0], default_float()))
+    c = np.asarray(f.coeffs)
+    want = {16: 0.28, 13: 0.12, 11: 0.28, 8: 0.19, 5: 0.03, 3: 0.07, 0: 0.03}
+    for k, v in want.items():
+        assert c[k] == pytest.approx(v, abs=1e-12)
+    # paper text lists 0.19 X^8; total must be 1
+    assert c.sum() == pytest.approx(1.0, abs=1e-12)
+
+
+def test_paper_min_example():
+    """§IV-A MIN of first two tuples: 0.06X^inf + 0.24X^8 + 0.7X^3."""
+    from repro.core.pgf import PGF
+    f1 = PGF.bernoulli(0.7, 3, "MIN")
+    f2 = PGF.bernoulli(0.8, 8, "MIN")
+    f = f1.mul_min(f2)
+    assert float(f.p_pos_inf) == pytest.approx(0.06, abs=1e-12)
+    assert float(f.mass_at(8)) == pytest.approx(0.24, abs=1e-12)
+    assert float(f.mass_at(3)) == pytest.approx(0.70, abs=1e-12)
+
+
+def test_query_pipeline_vs_possible_worlds():
+    """Full mini-pipeline (select -> group -> SUM dist -> compare) against
+    brute-force possible-worlds enumeration of the whole query."""
+    rng = np.random.default_rng(11)
+    n = 10
+    g = rng.integers(0, 2, n)
+    v = rng.integers(1, 5, n).astype(float)
+    p = rng.uniform(0.1, 0.9, n)
+    t = Table.from_columns({"g": jnp.asarray(g), "v": jnp.asarray(v)},
+                           prob=jnp.asarray(p))
+    sel = ops.select(t, lambda x: x["v"] >= 2)
+    ids, codes, _ = ops.group_ids(sel, ["g"], 4)
+    F = 64
+    la, an = ops.group_logcf(sel, sel["v"], ids, 4, F)
+    coeffs = np.asarray(ops.group_logcf_finalize(la, an))
+    keep = (v >= 2)
+    for gv in (0, 1):
+        m = keep & (g == gv)
+        oracle = possible_worlds_pgf(p[m], v[m], "SUM")
+        gi = int(np.searchsorted(np.asarray(codes), gv))
+        for outcome, pr in oracle.items():
+            assert coeffs[gi, int(outcome)] == pytest.approx(pr, abs=1e-10)
+
+
+def test_training_loss_decreases_e2e(tmp_path):
+    from repro.configs import get_reduced
+    from repro.train.data import TokenStream
+    from repro.train.optimizer import AdamW
+    from repro.train.trainer import Trainer
+    cfg = get_reduced("yi_6b")
+    # tiny vocab so 30 steps show real learning signal
+    stream = TokenStream(cfg.vocab_size, seq_len=32, global_batch=8, seed=0)
+    trainer = Trainer(cfg, AdamW(lr=3e-3, warmup=10), stream,
+                      str(tmp_path / "ck"), ckpt_every=100)
+    _, _, hist = trainer.run(30)
+    assert np.mean(hist[-5:]) < np.mean(hist[:5]) - 0.05
+
+
+def test_serve_generates_tokens():
+    from repro.launch.serve import generate
+    from repro.configs import get_reduced
+    from repro.models import api
+    cfg = get_reduced("yi_6b")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    toks = generate(cfg, params, prompt, 32, 5)
+    assert toks.shape == (2, 5)
+    assert (np.asarray(toks) >= 0).all()
+    assert (np.asarray(toks) < cfg.vocab_size).all()
+
+
+def test_tpch_modes_are_consistent():
+    """group_confidence probabilities multiply up to the confidence mode."""
+    db = tpch.generate(n_orders=60, seed=9)
+    gc = tpch.q18(db, "group_confidence")
+    conf = tpch.q18(db, "confidence")["confidence"]
+    peach = np.asarray(gc["confidence"])[np.asarray(gc["valid"])]
+    want = 1 - np.prod(1 - peach)
+    assert float(conf) == pytest.approx(want, rel=1e-6)

@@ -1,0 +1,158 @@
+"""Training substrate: optimizer math, checkpoint-restart fault tolerance,
+data determinism, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.train import checkpoint as ck
+from repro.train.data import ProbabilisticSampler, TokenStream
+from repro.train.optimizer import (AdamW, clip_by_global_norm, compress_int8,
+                                   decompress_int8, global_norm)
+from repro.train.trainer import Trainer, make_train_step, run_with_failures
+
+
+def test_adamw_decreases_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, warmup=1)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adamw_bf16_moments_roundtrip():
+    opt = AdamW(lr=1e-2, moment_dtype="bfloat16", warmup=1)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.mu["w"].dtype == jnp.bfloat16
+    params, state = opt.update({"w": jnp.ones((4,), jnp.bfloat16)},
+                               state, params)
+    assert params["w"].dtype == jnp.bfloat16
+    assert float(params["w"][0]) < 1.0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, n = clip_by_global_norm(tree, 1.0)
+    assert float(n) == pytest.approx(5.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-6)
+
+
+def test_int8_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 1, 1000), jnp.float32)
+    err = jnp.zeros_like(g)
+    # accumulated decompressed signal converges to accumulated g
+    total_sent = jnp.zeros_like(g)
+    total_true = jnp.zeros_like(g)
+    for _ in range(20):
+        q, scale, err = compress_int8(g, err)
+        total_sent = total_sent + decompress_int8(q, scale)
+        total_true = total_true + g
+    rel = float(jnp.abs(total_sent - total_true).max()
+                / jnp.abs(total_true).max())
+    assert rel < 1e-2
+
+
+def test_checkpoint_atomic_and_verified(tmp_path):
+    tree = {"w": jnp.arange(10.0), "b": {"x": jnp.ones((3,))}}
+    d = str(tmp_path / "ck")
+    ck.save(d, 7, tree)
+    assert ck.latest_step(d) == 7
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+    restored, manifest = ck.restore(d, 7, like)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    # corruption detection
+    shard = os.path.join(d, "step_00000007", "shard_00000.npz")
+    with open(shard, "r+b") as f:
+        f.seek(50)
+        f.write(b"\x00\x01\x02")
+    with pytest.raises(IOError, match="corruption"):
+        ck.restore(d, 7, like)
+
+
+def test_checkpoint_restart_bit_identical(tmp_path):
+    cfg = get_reduced("yi_6b")
+    stream = TokenStream(cfg.vocab_size, seq_len=16, global_batch=4)
+    opt = AdamW(lr=1e-3, warmup=5)
+    t1 = Trainer(cfg, opt, stream, str(tmp_path / "a"), ckpt_every=3)
+    p1, _, h1 = t1.run(8)
+    t2 = Trainer(cfg, opt, stream, str(tmp_path / "b"), ckpt_every=3)
+    p2, _, h2, attempts = run_with_failures(t2, 8, {4})
+    assert attempts == 2
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        assert bool(jnp.array_equal(a, b))
+
+
+def test_grad_accumulation_equivalence():
+    """accum=2 == accum=1 on the same global batch (linearity of grads)."""
+    cfg = get_reduced("yi_6b")
+    opt = AdamW(lr=0.0, weight_decay=0.0, warmup=1)   # lr=0: compare grads?
+    # instead compare one step with lr>0
+    opt = AdamW(lr=1e-2, weight_decay=0.0, warmup=1)
+    step1 = make_train_step(cfg, opt, accum=1, donate=False)
+    step2 = make_train_step(cfg, opt, accum=2, donate=False)
+    from repro.models import api
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    state = opt.init(params)
+    key = jax.random.PRNGKey(1)
+    batch = dict(tokens=jax.random.randint(key, (4, 16), 0, cfg.vocab_size),
+                 labels=jax.random.randint(key, (4, 16), 0, cfg.vocab_size))
+    p1, _, m1 = step1(params, state, batch)
+    p2, _, m2 = step2(params, state, batch)
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 1e-4, d    # f32 association-order noise through AdamW
+
+
+def test_token_stream_deterministic_and_shardable():
+    s = TokenStream(1000, seq_len=8, global_batch=8, seed=3)
+    b1 = s.batch(5)
+    b2 = s.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    sh0 = s.batch(5, shard=0, num_shards=2)
+    assert sh0["tokens"].shape[0] == 4
+    assert not np.array_equal(np.asarray(sh0["tokens"]),
+                              np.asarray(s.batch(5, shard=1,
+                                                 num_shards=2)["tokens"]))
+
+
+def test_probabilistic_sampler_capacity():
+    """The PGF-backed capacity bound is sound: simulate inclusion draws."""
+    rng = np.random.default_rng(0)
+    probs = rng.uniform(0.2, 0.9, 128)
+    s = ProbabilisticSampler(probs, seed=1)
+    cap = s.capacity_for(1e-4)
+    draws = np.array([s.draw(i).sum() for i in range(500)])
+    assert (draws > cap).mean() < 0.01
+    mean = float(s.batch_size_pgf().mean())
+    assert mean == pytest.approx(probs.sum(), rel=1e-6)
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Save under implicit single-device, restore + reshard to a 1x1 mesh
+    (degenerate on CPU but exercises the code path end-to-end)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import Rules
+    from repro.train import elastic
+    cfg = get_reduced("yi_6b")
+    from repro.models import api
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    d = str(tmp_path / "ck")
+    ck.save(d, 1, {"params": params})
+    mesh = make_host_mesh()
+    rules = Rules(mesh)
+    like = {"params": jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)}
+    tree, _ = ck.restore(d, 1, like)
+    resharded = elastic.reshard(tree["params"], rules)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(resharded)):
+        assert bool(jnp.array_equal(a, b))
