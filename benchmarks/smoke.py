@@ -1,0 +1,71 @@
+"""Per-PR perf smoke: one tiny planner-compiled TPC-H query per UDA method.
+
+Runs Q3-shaped GroupAgg plans through ``compile_plan`` (the unified
+segment-UDA path) for every aggregation method — normal, cumulants,
+min/max — plus the ReweightGreater plan shape, and prints wall times, so
+refactors of the UDA subsystem show perf regressions per-PR.
+
+    PYTHONPATH=src python benchmarks/smoke.py [--mesh]
+
+--mesh additionally compiles the same plans against a host-device mesh and
+reports the distributed timings (requires >1 device or XLA_FLAGS host
+device count).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.db import tpch
+from repro.db.plans import GroupAgg, ReweightGreater, Scan, Select, compile_plan
+
+
+def _plans(max_groups: int = 256):
+    li = Select(Scan("lineitem"), lambda t: t["l_shipdate"] > tpch.DAY0_1995)
+    keys = ("l_orderkey",)
+    return {
+        "normal": GroupAgg(li, keys, "l_quantity", "SUM", max_groups,
+                           "normal"),
+        "cumulants": GroupAgg(li, keys, "l_quantity", "SUM", max_groups,
+                              "cumulants"),
+        "min": GroupAgg(li, keys, "l_quantity", "MIN", max_groups, kappa=32),
+        "max": GroupAgg(li, keys, "l_quantity", "MAX", max_groups, kappa=32),
+        "reweight": ReweightGreater(li, keys, "l_quantity", "", max_groups,
+                                    threshold=60.0),
+    }
+
+
+def bench(n_orders: int = 1000, repeat: int = 3, mesh=None):
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    tables = db.tables()
+    rows = []
+    for method, plan in _plans().items():
+        fn = jax.jit(compile_plan(plan, mesh))
+        out = fn(tables)                             # compile + warm
+        jax.block_until_ready(jax.tree.leaves(out))
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            out = fn(tables)
+            jax.block_until_ready(jax.tree.leaves(out))
+        dt = (time.perf_counter() - t0) / repeat
+        tag = "mesh" if mesh is not None else "1dev"
+        rows.append((f"smoke/{method}/{tag}", dt * 1e6,
+                     f"n_orders={n_orders}"))
+    return rows
+
+
+def main():
+    for name, us, extra in bench():
+        print(f"{name},{us:.1f},{extra}")
+    if "--mesh" in sys.argv and len(jax.devices()) > 1:
+        from repro.launch.mesh import make_host_mesh
+        for name, us, extra in bench(mesh=make_host_mesh()):
+            print(f"{name},{us:.1f},{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Version-tolerant shims over the moving parts of the JAX API.
+
+The repo targets whatever jax the container bakes in; the three surfaces
+that have churned across 0.4.x -> 0.5+ are wrapped here once so every
+other module (and the tests) can import them from a single place:
+
+    shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)
+        `jax.shard_map` when it exists, else
+        `jax.experimental.shard_map.shard_map`; the replication-check
+        kwarg is renamed (check_vma <-> check_rep) as needed.
+
+    make_mesh(shape, axis_names)
+        `jax.make_mesh`, passing `axis_types=(AxisType.Auto, ...)` only
+        on versions that accept it (explicit-sharding-era jax).
+
+    AxisType
+        the real `jax.sharding.AxisType` when present, else a stand-in
+        enum so call sites can spell `AxisType.Auto` unconditionally.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Sequence
+
+import jax
+
+__all__ = ["AxisType", "make_mesh", "shard_map"]
+
+
+# ----------------------------------------------------------------- shard_map
+try:  # jax >= 0.6-ish: top-level export with check_vma
+    from jax import shard_map as _shard_map
+except ImportError:  # 0.4.x: experimental module with check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None,
+              **kwargs):
+    """`shard_map` with the replication-check kwarg translated per version."""
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kwargs["check_rep"] = check_vma
+        # else: the installed jax has no replication check knob; drop it.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+# ------------------------------------------------------------------- meshes
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):  # stand-in: pre-explicit-sharding jax
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_MAKE_MESH_PARAMS = frozenset(inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              **kwargs):
+    """`jax.make_mesh` with Auto axis types where the API supports them."""
+    if "axis_types" in _MAKE_MESH_PARAMS and "axis_types" not in kwargs \
+            and hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

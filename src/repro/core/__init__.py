@@ -4,15 +4,17 @@ Layout (DESIGN.md §3):
     monoids.py            aggregation monoids + the T_AGG translation
     pgf.py                dense PGF value type, exact products, product tree
     poisson_binomial.py   log-CF exact COUNT/SUM (the TPU adaptation)
-    aggregates.py         UDA layer (Initialize/Accumulate/Merge/Finalize)
+    uda.py                THE grouped segment-UDA subsystem (one accumulate/
+                          merge implementation per aggregate, registry)
+    aggregates.py         scalar UDA facade over uda.py
     approx.py             Normal + Lindsay gamma-mixture approximations
     compare.py            PGF ADT comparisons (paper Fig. 5)
 """
-from . import aggregates, approx, compare, monoids, pgf, poisson_binomial
+from . import aggregates, approx, compare, monoids, pgf, poisson_binomial, uda
 from .config import default_float, enable_x64
 from .pgf import PGF
 
 __all__ = [
     "PGF", "aggregates", "approx", "compare", "monoids", "pgf",
-    "poisson_binomial", "default_float", "enable_x64",
+    "poisson_binomial", "uda", "default_float", "enable_x64",
 ]

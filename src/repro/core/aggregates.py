@@ -1,13 +1,14 @@
-"""User-defined aggregates (paper §VI-A): Initialize / Accumulate / Merge /
+"""Scalar UDA facade (paper §VI-A): Initialize / Accumulate / Merge /
 Finalize over JAX pytree states.
 
-The paper packages every probabilistic aggregate as a Glade UDA so that a
-deterministic engine can run probabilistic plans.  Here the same four-phase
-contract is expressed as pure functions over pytree states, which makes the
-*engine* be XLA: `Accumulate` maps over locally-sharded tuple chunks,
-`Merge` is an elementwise reduction that lowers to one `psum` inside
-shard_map (DESIGN.md §2, Glade row of the adaptation table), and `Finalize`
-is a single device (FFT) or host (mixture solve) epilogue.
+The actual aggregate math lives ONCE in :mod:`repro.core.uda`, vectorised
+over groups; this module is the scalar (max_groups == 1) view of it, kept
+for the paper-shaped single-stream API: lift the scalar state to one group,
+run the canonical blocked accumulation loop, drop the group axis again.
+`Accumulate` maps over locally-sharded tuple chunks, `Merge` is an
+elementwise reduction that lowers to one `psum` inside shard_map (DESIGN.md
+§2, Glade row of the adaptation table), and `Finalize` is a single device
+(FFT) or host (mixture solve) epilogue.
 
 Every UDA also accepts a `mask` so that fixed-shape relations with validity
 masks (selection pushdown) aggregate only live tuples: a masked-out tuple is
@@ -31,15 +32,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import approx, poisson_binomial as pb
+from . import approx, uda
 from .config import default_float
 from .pgf import PGF
 
+_masked_probs = uda.masked_probs
 
-def _masked_probs(probs, mask):
-    if mask is None:
-        return probs
-    return jnp.where(mask, probs, 0.0)
+
+def _run(u: uda.UDA, state, probs, values=None, mask=None):
+    """One-group accumulate through the canonical loop in core/uda.py.
+
+    `values` is passed uncast: the loop casts to the probs dtype itself and
+    uses the ORIGINAL dtype to decide Pallas-kernel eligibility (the exact
+    CF kernel only applies to integer-typed values)."""
+    p = _masked_probs(jnp.asarray(probs), mask)
+    vals = None if values is None else jnp.asarray(values)
+    return uda.accumulate({"u": u}, p, vals, None, max_groups=1,
+                          states={"u": state})["u"]
 
 
 # ------------------------------------------------------------- AtLeastOne
@@ -50,14 +59,17 @@ class AtLeastOneState(NamedTuple):
 class AtLeastOne:
     """P(at least one tuple present) = 1 - prod (1 - p_i)  (§VI row V)."""
 
+    _U = uda.AtLeastOne()
+
     @staticmethod
     def init(dtype=None) -> AtLeastOneState:
         return AtLeastOneState(jnp.zeros((), dtype or default_float()))
 
     @staticmethod
     def accumulate(state: AtLeastOneState, probs, mask=None) -> AtLeastOneState:
-        p = _masked_probs(probs, mask)
-        return AtLeastOneState(state.log_none + jnp.sum(jnp.log1p(-p)))
+        st = _run(AtLeastOne._U, uda.AtLeastOneState(state.log_none[None]),
+                  probs, mask=mask)
+        return AtLeastOneState(st.log_none[0])
 
     @staticmethod
     def merge(a: AtLeastOneState, b: AtLeastOneState) -> AtLeastOneState:
@@ -82,6 +94,7 @@ class SumCF:
 
     def __init__(self, num_freq: int):
         self.num_freq = int(num_freq)
+        self._u = uda.SumCF(self.num_freq)
 
     def init(self, dtype=None) -> CFState:
         dtype = dtype or default_float()
@@ -89,10 +102,9 @@ class SumCF:
         return CFState(z, z)
 
     def accumulate(self, state: CFState, probs, values=None, mask=None) -> CFState:
-        p = _masked_probs(probs, mask)
-        v = jnp.ones_like(p) if values is None else values
-        la, an = pb.logcf_terms(p, v, self.num_freq)
-        return CFState(state.log_abs + la, state.angle + an)
+        st = _run(self._u, uda.CFState(state.log_abs[None], state.angle[None]),
+                  probs, values, mask)
+        return CFState(st.log_abs[0], st.angle[0])
 
     @staticmethod
     def merge(a: CFState, b: CFState) -> CFState:
@@ -103,9 +115,10 @@ class SumCF:
         return CFState(jax.lax.psum(state.log_abs, axis_name),
                        jax.lax.psum(state.angle, axis_name))
 
-    @staticmethod
-    def finalize(state: CFState) -> PGF:
-        return PGF(pb.logcf_finalize(state.log_abs, state.angle), 0)
+    def finalize(self, state: CFState) -> PGF:
+        coeffs = self._u.finalize(uda.CFState(state.log_abs[None],
+                                              state.angle[None]))
+        return PGF(coeffs[0], 0)
 
 
 def CountCF(capacity: int) -> SumCF:
@@ -123,14 +136,15 @@ class SumCumulants:
 
     def __init__(self, p_components: int = 3):
         self.p = int(p_components)
+        self._u = uda.SumCumulants(2 * self.p)
 
     def init(self, dtype=None) -> CumulantState:
         return CumulantState(jnp.zeros((2 * self.p,), dtype or default_float()))
 
     def accumulate(self, state, probs, values=None, mask=None) -> CumulantState:
-        pr = _masked_probs(probs, mask)
-        v = jnp.ones_like(pr) if values is None else values
-        return CumulantState(state.terms + approx.cumulant_terms(pr, v, 2 * self.p))
+        st = _run(self._u, uda.CumulantState(state.terms[None]),
+                  probs, values, mask)
+        return CumulantState(st.terms[0])
 
     @staticmethod
     def merge(a, b) -> CumulantState:
@@ -149,15 +163,17 @@ class NormalState(NamedTuple):
 
 
 class SumNormal:
+    _U = uda.SumNormal()
+
     @staticmethod
     def init(dtype=None) -> NormalState:
         return NormalState(jnp.zeros((2,), dtype or default_float()))
 
     @staticmethod
     def accumulate(state, probs, values=None, mask=None) -> NormalState:
-        pr = _masked_probs(probs, mask)
-        v = jnp.ones_like(pr) if values is None else values
-        return NormalState(state.terms + approx.normal_terms(pr, v))
+        st = _run(SumNormal._U, uda.NormalState(state.terms[None]),
+                  probs, values, mask)
+        return NormalState(st.terms[0])
 
     @staticmethod
     def merge(a, b) -> NormalState:
@@ -181,11 +197,21 @@ class MinMaxState(NamedTuple):
     total_log_none: jnp.ndarray  # () log prod(1-p) over all tuples seen
 
 
+def _lift_minmax(s: MinMaxState) -> uda.MinMaxState:
+    return uda.MinMaxState(s.values[None], s.log_none[None],
+                           s.tail_log_none[None], s.total_log_none[None])
+
+
+def _drop_minmax(s: uda.MinMaxState) -> MinMaxState:
+    return MinMaxState(s.values[0], s.log_none[0],
+                       s.tail_log_none[0], s.total_log_none[0])
+
+
 @dataclasses.dataclass(frozen=True)
 class MinUDA:
     """The paper's ordered (value, AtLeastOne) list with capacity kappa
-    (§VII-C), as fixed-shape arrays: JAX needs static shapes, so the linked
-    list becomes a sorted top-kappa buffer merged by sort (DESIGN.md §2).
+    (§VII-C); the scalar view of :class:`repro.core.uda.MinMax`, which keeps
+    fixed-shape sorted top-kappa buffers merged by sort (DESIGN.md §2).
 
     `sign` = +1 for MIN (keep smallest), -1 for MAX (keep largest, stored
     negated so the merge logic is shared).
@@ -194,59 +220,32 @@ class MinUDA:
     kappa: int = 64
     sign: float = 1.0
 
+    @property
+    def _u(self) -> uda.MinMax:
+        return uda.MinMax(kappa=self.kappa, sign=self.sign)
+
     def init(self, dtype=None) -> MinMaxState:
-        dtype = dtype or default_float()
-        z = jnp.zeros((), dtype)
-        return MinMaxState(jnp.full((self.kappa,), jnp.inf, dtype),
-                           jnp.zeros((self.kappa,), dtype), z, z)
+        return _drop_minmax(self._u.init(1, dtype))
 
     def accumulate(self, state, probs, values, mask=None) -> MinMaxState:
         dtype = state.values.dtype
         p = _masked_probs(jnp.asarray(probs, dtype), mask)
-        v = jnp.asarray(values, dtype) * self.sign
-        v = jnp.where(p > 0, v, jnp.inf)  # masked/p=0 tuples never matter
-        logq = jnp.log1p(-p)
-        # Combine duplicates within the chunk on a fixed-size grid.
-        uniq, inv = jnp.unique(v, size=v.shape[0], fill_value=jnp.inf,
-                               return_inverse=True)
-        combined = jax.ops.segment_sum(logq, inv, num_segments=v.shape[0])
-        chunk = MinMaxState(uniq, combined, jnp.zeros((), dtype),
-                            jnp.sum(logq))
-        return self.merge(state, chunk)
+        st = uda.accumulate({"u": self._u}, p, jnp.asarray(values, dtype),
+                            None, max_groups=1, states={"u": _lift_minmax(state)})
+        return _drop_minmax(st["u"])
 
     def merge(self, a: MinMaxState, b: MinMaxState) -> MinMaxState:
-        dtype = a.values.dtype
-        v = jnp.concatenate([a.values, b.values])
-        lq = jnp.concatenate([a.log_none, b.log_none])
-        uniq, inv = jnp.unique(v, size=v.shape[0], fill_value=jnp.inf,
-                               return_inverse=True)
-        lq = jax.ops.segment_sum(lq, inv, num_segments=v.shape[0])
-        kept_v = uniq[: self.kappa]
-        kept_lq = lq[: self.kappa]
-        evicted = jnp.where(jnp.isfinite(uniq[self.kappa:]), lq[self.kappa:], 0.0)
-        return MinMaxState(kept_v, kept_lq,
-                           a.tail_log_none + b.tail_log_none + evicted.sum(),
-                           a.total_log_none + b.total_log_none)
+        return _drop_minmax(self._u.merge(_lift_minmax(a), _lift_minmax(b)))
 
     def finalize(self, state: MinMaxState):
-        """P(min = v_j) = prod_{v_l < v_j} Q_l * (1 - Q_{v_j})  (§V-B.1),
-        where Q_l = prod over tuples at value v_l of (1 - p).
-
-        Returns (values, masses, p_tail): values are un-negated (true MAX
-        values for sign = -1); p_tail is the probability that the aggregate
-        falls beyond the kept support — evicted values *or* the empty world
-        (the paper's X^inf term plus its §V-B.2 truncation remainder).
-        """
-        finite = jnp.isfinite(state.values)
-        lq = jnp.where(finite, state.log_none, 0.0)
-        prefix = jnp.concatenate([jnp.zeros((1,), lq.dtype), jnp.cumsum(lq)[:-1]])
-        mass = jnp.exp(prefix) * (1.0 - jnp.exp(lq)) * finite
-        p_tail = jnp.exp(jnp.sum(lq))  # all kept absent: evicted or empty
-        return state.values * self.sign, mass, p_tail
+        """Per-value masses and the beyond-support tail (§V-B.1/.2); see
+        :meth:`repro.core.uda.MinMax.finalize`."""
+        values, mass, p_tail = self._u.finalize(_lift_minmax(state))
+        return values[0], mass[0], p_tail[0]
 
     def p_empty(self, state: MinMaxState):
         """Exact P(aggregate undefined) = prod over all tuples of (1-p)."""
-        return jnp.exp(state.total_log_none)
+        return self._u.p_empty(_lift_minmax(state))[0]
 
     def to_pgf(self, state: MinMaxState, lo: int, hi: int) -> PGF:
         """Densify onto integer grid [lo, hi); truncation tail -> inf mass."""

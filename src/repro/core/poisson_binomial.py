@@ -27,7 +27,6 @@ and tested against each other and the possible-worlds oracle.
 """
 from __future__ import annotations
 
-import math
 from functools import partial
 
 import jax
@@ -38,58 +37,26 @@ from .config import default_float
 from .pgf import PGF, product_tree
 
 
-def _log_factor(p, cos_t, sin_t):
-    """(log|z|, arg z) for z = (1-p) + p * e^{i t}, elementwise.
-
-    Stable form: |z|^2 = q^2 + 2 q p cos t + p^2.
-    """
-    q = 1.0 - p
-    re = q + p * cos_t
-    im = p * sin_t
-    log_abs = 0.5 * jnp.log(jnp.maximum(re * re + im * im, 1e-300))
-    ang = jnp.arctan2(im, re)
-    return log_abs, ang
-
-
 def logcf_terms(probs: jnp.ndarray, values: jnp.ndarray, num_freq: int,
                 block: int = 4096):
     """Accumulated (sum over tuples) log CF at the num_freq DFT frequencies.
 
     Returns (log_abs_sum, angle_sum), each (num_freq,).  This is the
-    `Accumulate` half of the CF UDA; `Merge` is elementwise `+` / `psum`.
-    Blocked over tuples so the (block, num_freq) intermediate stays bounded.
+    `Accumulate` half of the CF UDA — the scalar view of the ONE
+    implementation in :class:`repro.core.uda.SumCF`, run through the
+    canonical blocked loop; `Merge` is elementwise `+` / `psum`.
     """
-    dtype = probs.dtype
-    n = probs.shape[0]
-    # Bound the (num_freq, block) intermediate to ~2^24 elements so the scan
-    # body's working set stays cache/VMEM sized regardless of distribution
-    # width.  (The Pallas kernel does the same with its grid.)
-    block = max(64, min(block, (1 << 24) // max(1, num_freq)))
-    nfull = ((n + block - 1) // block) * block
-    probs = jnp.pad(probs, (0, nfull - n))          # p=0 pads contribute log(1)=0
-    values = jnp.pad(values, (0, nfull - n))
-    k = jnp.arange(num_freq, dtype=dtype)
-
-    def body(carry, chunk):
-        la, an = carry
-        p, a = chunk
-        # theta[k, i] = 2 pi k a_i / N  (mod 2 pi for accuracy at large k*a)
-        phase = (k[:, None] * a[None, :]) % num_freq
-        theta = (2.0 * math.pi / num_freq) * phase
-        l, t = _log_factor(p[None, :], jnp.cos(theta), jnp.sin(theta))
-        return (la + l.sum(-1), an + t.sum(-1)), None
-
-    init = (jnp.zeros((num_freq,), dtype), jnp.zeros((num_freq,), dtype))
-    chunks = (probs.reshape(-1, block), values.reshape(-1, block))
-    (log_abs, angle), _ = jax.lax.scan(body, init, chunks)
-    return log_abs, angle
+    from . import uda
+    st = uda.accumulate({"cf": uda.SumCF(num_freq)}, probs, values, None,
+                        max_groups=1, block=block)["cf"]
+    return st.log_abs[0], st.angle[0]
 
 
 def logcf_finalize(log_abs: jnp.ndarray, angle: jnp.ndarray) -> jnp.ndarray:
     """exp + FFT: recover the coefficient vector from summed log CF."""
-    q = jnp.exp(log_abs) * jax.lax.complex(jnp.cos(angle), jnp.sin(angle))
-    coeffs = jnp.fft.fft(q).real / log_abs.shape[0]
-    return jnp.clip(coeffs, 0.0, None)
+    from . import uda
+    return uda.SumCF(log_abs.shape[-1]).finalize(
+        uda.CFState(log_abs[None], angle[None]))[0]
 
 
 # Above this size the O(n log^2 n) FFT product tree beats the O(n*F)

@@ -1,0 +1,590 @@
+"""Grouped segment-UDA subsystem: the ONE implementation of every
+probabilistic aggregate (paper §VI-A, Glade Initialize/Accumulate/Merge/
+Finalize).
+
+Before this module the same UDA math lived three times (scalar classes in
+``core/aggregates.py``, grouped segment reductions in ``db/operators.py``,
+and inline again in ``db/distributed.py``), each copy with its own blocking
+heuristics and tail handling.  Here each aggregate is defined once as
+
+    init(max_groups, dtype)      -> pytree state, leaves lead with (G, ...)
+    update(state, p, v, g)       -> state   (one tuple block; streaming UDAs)
+    merge(a, b)                  -> state   (additive for streaming UDAs,
+                                             hence one `psum` inside shard_map)
+    finalize(state)              -> per-group device-side results
+
+vectorised over ``max_groups`` groups — the scalar case is just
+``max_groups == 1`` with all-zero group ids, which is how the thin wrappers
+in :mod:`repro.core.aggregates` and the delegating helpers in
+:mod:`repro.core.poisson_binomial` / :mod:`repro.core.approx` use it.
+
+:func:`accumulate` below is the single canonical accumulation loop (the
+blocked-scan tiling previously private to ``db/distributed.py``): ONE
+``lax.scan`` over tuple blocks feeds every streaming UDA at once, so a
+multi-aggregate query reads its tuples exactly once, and the (block, F)
+phase tile of the exact-CF path is the only large live intermediate.  On
+TPU the scalar CF / cumulant accumulations dispatch to the Pallas kernels
+(:mod:`repro.kernels.pb_cf`, :mod:`repro.kernels.cumulants`).
+
+Registered UDAs (paper §V / §VI / §VII):
+
+    atleastone   P(group non-empty) = 1 - prod(1-p)        (§VI row V)
+    normal       (sum v p, sum v^2 p (1-p)) terms          (§V-C.3)
+    cumulants    sum v^j kappa_j(p) moment terms           (§V-C.3, Lindsay)
+    cf           exact SUM/COUNT log-characteristic fn     (§V-A/C)
+    min / max    top-kappa ordered (value, survival) list  (§V-B, §VII-C)
+
+Distributed execution (``db/distributed.py``) is generic over this
+protocol: Accumulate per shard, ``reduce_data`` = one psum over the tuple
+sharding axes, ``reduce_model`` reassembles model-axis frequency slices,
+Finalize replicated.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .approx import MAX_ORDER, _bernoulli_cumulant_polys
+from .config import default_float
+
+# The canonical tiling constants: bound the scan body's working set to
+# ~2^23 elements so the (block, F) tile stays cache/VMEM sized regardless
+# of distribution width; the floor of 64 keeps even num_freq ~ 2^20 tiles
+# within budget (a higher floor would override the budget at large F).
+_BLOCK_FLOOR = 64
+_ELEM_BUDGET = 1 << 23
+
+
+def _tiny(dtype):
+    """Log-underflow guard, unified across all former copies."""
+    return 1e-30 if dtype == jnp.float32 else 1e-300
+
+
+def _scatter_add(acc, g, contrib):
+    """acc[g] += contrib with the G == 1 (scalar) fast path."""
+    if acc.shape[0] == 1:
+        return acc + jnp.sum(contrib, axis=0, keepdims=True)
+    return acc.at[g].add(contrib)
+
+
+def masked_probs(probs, mask):
+    """A masked-out tuple is exactly a p = 0 tuple for every UDA."""
+    if mask is None:
+        return probs
+    return jnp.where(mask, probs, jnp.zeros_like(probs))
+
+
+# ======================================================================
+# protocol
+# ======================================================================
+class UDA:
+    """Base grouped UDA.  Subclasses define init/update (or accumulate_full)
+    /finalize; merge and the collective reductions default to the additive
+    behaviour shared by every streaming UDA."""
+
+    #: streaming UDAs accumulate block-by-block inside the canonical scan;
+    #: non-streaming ones (MinMax) consume the full column at once.
+    streaming: bool = True
+    #: a scalar UDA ignores group ids and keeps one global group (e.g. the
+    #: exact global CF of the canonical query step).
+    scalar: bool = False
+
+    def init(self, max_groups: int, dtype=None):
+        raise NotImplementedError
+
+    def update(self, state, probs, values, gids):
+        """Fold one block of (already masked) tuples into the state."""
+        raise NotImplementedError
+
+    def accumulate_full(self, state, probs, values, gids, max_groups):
+        """Whole-column accumulate for non-streaming UDAs."""
+        raise NotImplementedError
+
+    def merge(self, a, b):
+        """Combine two partial states; additive => psum-able."""
+        return jax.tree.map(jnp.add, a, b)
+
+    def reduce_data(self, state, axis_names):
+        """Merge across the tuple-sharding mesh axes (inside shard_map)."""
+        axis_names = tuple(axis_names)
+        if not axis_names:
+            return state
+        return jax.tree.map(lambda x: jax.lax.psum(x, axis_names), state)
+
+    def reduce_model(self, state, axis_name):
+        """Reconcile model-axis replicas (tuples are replicated there)."""
+        return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), state)
+
+    def finalize(self, state):
+        raise NotImplementedError
+
+    #: per-tuple-row working-set width, used by the canonical block sizing.
+    def row_budget(self) -> int:
+        return 1
+
+
+# ======================================================================
+# AtLeastOne — group confidence (§VI row V)
+# ======================================================================
+class AtLeastOneState(NamedTuple):
+    log_none: jnp.ndarray        # (G,) sum log(1-p) over accumulated tuples
+
+
+class AtLeastOne(UDA):
+    """P(at least one tuple present) per group: 1 - prod(1 - p)."""
+
+    def init(self, max_groups: int, dtype=None) -> AtLeastOneState:
+        return AtLeastOneState(
+            jnp.zeros((max_groups,), dtype or default_float()))
+
+    def update(self, state, probs, values, gids) -> AtLeastOneState:
+        return AtLeastOneState(
+            _scatter_add(state.log_none, gids, jnp.log1p(-probs)))
+
+    def finalize(self, state):
+        return 1.0 - jnp.exp(state.log_none)
+
+
+# ======================================================================
+# SumNormal — (mean, variance) terms (§V-C.3, with the variance erratum fix)
+# ======================================================================
+class NormalState(NamedTuple):
+    terms: jnp.ndarray           # (G, 2) = (sum v p, sum v^2 p (1-p))
+
+
+class SumNormal(UDA):
+    def init(self, max_groups: int, dtype=None) -> NormalState:
+        return NormalState(jnp.zeros((max_groups, 2),
+                                     dtype or default_float()))
+
+    def update(self, state, probs, values, gids) -> NormalState:
+        mu_t = values * probs
+        var_t = values * values * probs * (1.0 - probs)
+        return NormalState(_scatter_add(state.terms, gids,
+                                        jnp.stack([mu_t, var_t], axis=-1)))
+
+    def finalize(self, state):
+        return state.terms[:, 0], state.terms[:, 1]
+
+
+# ======================================================================
+# SumCumulants — moment terms for the Lindsay gamma mixture (§V-C.3)
+# ======================================================================
+class CumulantState(NamedTuple):
+    terms: jnp.ndarray           # (G, orders) partial cumulant sums
+
+
+class SumCumulants(UDA):
+    """s_j[g] = sum_{i in g} v_i^j kappa_j(p_i), j = 1..orders."""
+
+    def __init__(self, orders: int = 8):
+        assert orders <= MAX_ORDER
+        self.orders = int(orders)
+
+    def init(self, max_groups: int, dtype=None) -> CumulantState:
+        return CumulantState(jnp.zeros((max_groups, self.orders),
+                                       dtype or default_float()))
+
+    def update(self, state, probs, values, gids) -> CumulantState:
+        dtype = probs.dtype
+        table = jnp.asarray(_bernoulli_cumulant_polys()[1:self.orders + 1],
+                            dtype)
+        powers = probs[None, :] ** jnp.arange(MAX_ORDER + 1,
+                                              dtype=dtype)[:, None]
+        kappas = table @ powers                         # (orders, B)
+        vpow = values[None, :] ** jnp.arange(1, self.orders + 1,
+                                             dtype=dtype)[:, None]
+        return CumulantState(_scatter_add(state.terms, gids,
+                                          (kappas * vpow).T))
+
+    def finalize(self, state):
+        return state.terms
+
+    def row_budget(self) -> int:
+        return MAX_ORDER + 1
+
+
+# ======================================================================
+# SumCF — exact SUM/COUNT via the log characteristic function (§V-A/C)
+# ======================================================================
+class CFState(NamedTuple):
+    log_abs: jnp.ndarray         # (G, F_loc)
+    angle: jnp.ndarray           # (G, F_loc)
+
+
+class SumCF(UDA):
+    """log Q(w^k) = sum_i log((1-p_i) + p_i w^{k v_i}), w = e^{2 pi i / N}.
+
+    ``num_freq`` (= max_sum + 1) is the static distribution capacity.  For
+    model-axis frequency sharding, ``freq_cnt`` frequencies starting at
+    ``freq_lo`` are accumulated locally (``freq_lo`` may be a traced
+    ``axis_index`` expression inside shard_map); ``reduce_model``
+    reassembles the slices with one tiled all-gather.
+    """
+
+    def __init__(self, num_freq: int, freq_lo=0, freq_cnt: int | None = None):
+        self.num_freq = int(num_freq)
+        self.freq_lo = freq_lo
+        self.freq_cnt = int(freq_cnt) if freq_cnt is not None else self.num_freq
+
+    def init(self, max_groups: int, dtype=None) -> CFState:
+        z = jnp.zeros((max_groups, self.freq_cnt), dtype or default_float())
+        return CFState(z, z)
+
+    def update(self, state, probs, values, gids) -> CFState:
+        dtype = probs.dtype
+        k = self.freq_lo + jnp.arange(self.freq_cnt, dtype=dtype)
+        # (B, F_loc) phase tile — the one large live intermediate of the
+        # canonical loop; mod num_freq keeps theta exact at large k*v.
+        phase = (values[:, None] * k[None, :]) % self.num_freq
+        theta = (2.0 * math.pi / self.num_freq) * phase
+        q = 1.0 - probs[:, None]
+        re = q + probs[:, None] * jnp.cos(theta)
+        im = probs[:, None] * jnp.sin(theta)
+        la = 0.5 * jnp.log(jnp.maximum(re * re + im * im, _tiny(dtype)))
+        an = jnp.arctan2(im, re)
+        return CFState(_scatter_add(state.log_abs, gids, la),
+                       _scatter_add(state.angle, gids, an))
+
+    def reduce_model(self, state, axis_name):
+        return CFState(
+            jax.lax.all_gather(state.log_abs, axis_name, axis=-1, tiled=True),
+            jax.lax.all_gather(state.angle, axis_name, axis=-1, tiled=True))
+
+    def finalize(self, state):
+        """(G, F) summed log CF -> (G, F) coefficient rows, one batched FFT."""
+        q = jnp.exp(state.log_abs) * jax.lax.complex(jnp.cos(state.angle),
+                                                     jnp.sin(state.angle))
+        coeffs = jnp.fft.fft(q, axis=-1).real / state.log_abs.shape[-1]
+        return jnp.clip(coeffs, 0.0, None)
+
+    def row_budget(self) -> int:
+        return self.freq_cnt
+
+
+def CountCF(capacity: int) -> SumCF:
+    """COUNT = SUM of T_COUNT-translated all-ones values (§IV-F step 1)."""
+    return SumCF(capacity + 1)
+
+
+# ======================================================================
+# MinMax — grouped top-kappa (value, survival) lists (§V-B, §VII-C)
+# ======================================================================
+class MinMaxState(NamedTuple):
+    values: jnp.ndarray          # (G, kappa) sign-folded values, sorted, pad +inf
+    log_none: jnp.ndarray        # (G, kappa) sum log(1-p) of tuples at value
+    tail_log_none: jnp.ndarray   # (G,) log prod(1-p) over *evicted* values
+    total_log_none: jnp.ndarray  # (G,) log prod(1-p) over all tuples seen
+
+
+class MinMax(UDA):
+    """The paper's ordered (value, AtLeastOne) list with capacity kappa, as
+    fixed-shape (G, kappa) buffers: JAX needs static shapes, so the linked
+    list becomes a sorted top-kappa buffer merged by row-wise sort + run
+    folding.  ``sign`` = +1 for MIN (keep smallest), -1 for MAX (values
+    stored negated so the merge logic is shared).
+
+    Not additive: ``reduce_data`` all-gathers shard states and folds
+    ``merge`` over the (static) shard count instead of psum-ing.
+    """
+
+    streaming = False
+
+    def __init__(self, kappa: int = 64, sign: float = 1.0):
+        self.kappa = int(kappa)
+        self.sign = float(sign)
+
+    def init(self, max_groups: int, dtype=None) -> MinMaxState:
+        dtype = dtype or default_float()
+        return MinMaxState(
+            jnp.full((max_groups, self.kappa), jnp.inf, dtype),
+            jnp.zeros((max_groups, self.kappa), dtype),
+            jnp.zeros((max_groups,), dtype),
+            jnp.zeros((max_groups,), dtype))
+
+    def accumulate_full(self, state, probs, values, gids, max_groups):
+        dtype = state.values.dtype
+        p = jnp.asarray(probs, dtype)
+        v = jnp.asarray(values, dtype) * self.sign
+        v = jnp.where(p > 0, v, jnp.inf)     # masked / p=0 tuples never matter
+        logq = jnp.log1p(-p)
+        n = p.shape[0]
+        # Lexsort rows by (group, folded value) via two stable argsorts — a
+        # combined float key would lose value bits to ULP at large group ids.
+        ord1 = jnp.argsort(v, stable=True)
+        ord2 = jnp.argsort(gids[ord1], stable=True)
+        order = ord1[ord2]
+        gs, vs, lqs = gids[order], v[order], logq[order]
+
+        # Fold duplicate (group, value) runs.
+        head = jnp.concatenate([jnp.ones((1,), bool),
+                                (gs[1:] != gs[:-1]) | (vs[1:] != vs[:-1])])
+        seg = jnp.cumsum(head) - 1
+        run_idx = jnp.arange(n)
+        exists = run_idx < seg[-1] + 1
+        run_lq = jax.ops.segment_sum(lqs, seg, num_segments=n)
+        run_v = jax.ops.segment_min(vs, seg, num_segments=n)   # +inf if empty
+        run_g = jnp.clip(jax.ops.segment_max(gs, seg, num_segments=n),
+                         0, max_groups - 1)
+        run_g = jnp.where(exists, run_g, max_groups - 1)
+
+        # Rank of each run within its group = run index - group's first run.
+        grp_first = jax.ops.segment_min(jnp.where(exists, run_idx, n), run_g,
+                                        num_segments=max_groups)
+        rank = run_idx - grp_first[run_g]
+
+        keep = exists & jnp.isfinite(run_v) & (rank < self.kappa)
+        col = jnp.where(keep, rank, self.kappa)      # out-of-range -> dropped
+        chunk_v = jnp.full((max_groups, self.kappa), jnp.inf, dtype) \
+            .at[run_g, col].set(run_v, mode="drop")
+        chunk_lq = jnp.zeros((max_groups, self.kappa), dtype) \
+            .at[run_g, col].add(run_lq, mode="drop")
+        evicted = exists & jnp.isfinite(run_v) & (rank >= self.kappa)
+        chunk_tail = jnp.zeros((max_groups,), dtype) \
+            .at[run_g].add(jnp.where(evicted, run_lq, 0.0))
+        chunk_total = jnp.zeros((max_groups,), dtype).at[gids].add(logq)
+        return self.merge(state, MinMaxState(chunk_v, chunk_lq, chunk_tail,
+                                             chunk_total))
+
+    def merge(self, a: MinMaxState, b: MinMaxState) -> MinMaxState:
+        k = self.kappa
+        v = jnp.concatenate([a.values, b.values], axis=1)        # (G, 2k)
+        lq = jnp.concatenate([a.log_none, b.log_none], axis=1)
+        order = jnp.argsort(v, axis=1, stable=True)
+        vs = jnp.take_along_axis(v, order, axis=1)
+        lqs = jnp.take_along_axis(lq, order, axis=1)
+        # Row-wise run folding: duplicates combine their log(1-p) sums.
+        head = jnp.concatenate([jnp.ones_like(vs[:, :1], bool),
+                                vs[:, 1:] != vs[:, :-1]], axis=1)
+        seg = jnp.cumsum(head, axis=1) - 1
+        rows = jnp.broadcast_to(jnp.arange(vs.shape[0])[:, None], seg.shape)
+        run_lq = jnp.zeros_like(lqs).at[rows, seg].add(lqs)
+        run_v = jnp.full_like(vs, jnp.inf).at[rows, seg].min(vs)
+        evicted = jnp.where(jnp.isfinite(run_v[:, k:]), run_lq[:, k:], 0.0)
+        return MinMaxState(run_v[:, :k], run_lq[:, :k],
+                           a.tail_log_none + b.tail_log_none + evicted.sum(1),
+                           a.total_log_none + b.total_log_none)
+
+    def reduce_data(self, state, axis_names):
+        axis_names = tuple(axis_names)
+        if not axis_names:
+            return state
+        gathered = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axis_names, axis=0, tiled=False),
+            state)
+        shards = jax.tree.leaves(gathered)[0].shape[0]   # static
+        out = jax.tree.map(lambda x: x[0], gathered)
+        for s in range(1, shards):
+            out = self.merge(out, jax.tree.map(lambda x, s=s: x[s], gathered))
+        return out
+
+    def reduce_model(self, state, axis_name):
+        return state     # tuples are replicated over the model axis
+
+    def finalize(self, state: MinMaxState):
+        """P(agg = v_j) = prod_{v_l better} Q_l * (1 - Q_j)  (§V-B.1), with
+        Q_l = prod over tuples at value v_l of (1 - p).  Returns per-group
+        (values, masses, p_tail): values un-folded (true MAX values for
+        sign = -1); p_tail = P(aggregate beyond the kept support) — evicted
+        values *or* the empty world (the paper's X^inf term plus its §V-B.2
+        truncation remainder)."""
+        finite = jnp.isfinite(state.values)
+        lq = jnp.where(finite, state.log_none, 0.0)
+        prefix = jnp.concatenate(
+            [jnp.zeros_like(lq[:, :1]), jnp.cumsum(lq, axis=1)[:, :-1]],
+            axis=1)
+        mass = jnp.exp(prefix) * (1.0 - jnp.exp(lq)) * finite
+        p_tail = jnp.exp(jnp.sum(lq, axis=1))
+        return state.values * self.sign, mass, p_tail
+
+    def p_empty(self, state: MinMaxState):
+        """Exact P(aggregate undefined) = prod over all tuples of (1-p)."""
+        return jnp.exp(state.total_log_none)
+
+
+# ======================================================================
+# registry
+# ======================================================================
+REGISTRY = {
+    "atleastone": AtLeastOne,
+    "normal": SumNormal,
+    "cumulants": SumCumulants,
+    "cf": SumCF,
+    "count_cf": CountCF,
+    "min": lambda **kw: MinMax(sign=1.0, **kw),
+    "max": lambda **kw: MinMax(sign=-1.0, **kw),
+}
+
+
+def make(name: str, **kwargs) -> UDA:
+    return REGISTRY[name](**kwargs)
+
+
+# ======================================================================
+# the canonical accumulation loop
+# ======================================================================
+def _block_size(udas, block: int) -> int:
+    budget = max([1] + [u.row_budget() for u in udas.values()])
+    return max(_BLOCK_FLOOR, min(block, _ELEM_BUDGET // max(1, budget)))
+
+
+def _groups_of(u: UDA, max_groups: int) -> int:
+    return 1 if u.scalar else max_groups
+
+
+def _kernel_eligible(u: UDA, max_groups: int, probs, values_integral: bool) \
+        -> bool:
+    """Scalar CF / cumulant accumulations can run on the Pallas kernels —
+    only under the same guards as kernels/ops.py (f32, enough tuples to
+    amortise block padding), and for CF only with integer-typed values
+    (the kernel's exact phase arithmetic truncates to int32)."""
+    from ..kernels import ops as kops
+    if _groups_of(u, max_groups) != 1:
+        return False
+    if probs.dtype != jnp.float32 or probs.shape[0] < kops.MIN_KERNEL_TUPLES:
+        return False
+    if isinstance(u, SumCF):
+        return values_integral and isinstance(u.freq_lo, int) \
+            and u.freq_lo == 0 and u.freq_cnt == u.num_freq
+    return isinstance(u, SumCumulants)
+
+
+def _kernel_accumulate(u: UDA, state, probs, values):
+    from ..kernels import ops as kops
+    if isinstance(u, SumCF):
+        la, an = kops.logcf(probs, values, u.num_freq)
+        return CFState(state.log_abs + la[None], state.angle + an[None])
+    sums = kops.cumulant_sums(probs, values, orders=u.orders)
+    return CumulantState(state.terms + sums[None])
+
+
+def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
+               states=None, block: int = 8192, kernel: str = "auto"):
+    """Accumulate every UDA in ``udas`` over one column of tuples.
+
+    udas:    {name: UDA}.  Streaming UDAs share ONE blocked ``lax.scan``
+             (each tuple block is read once and fed to every update);
+             non-streaming UDAs (MinMax) consume the full column.
+    probs:   (n,) tuple probabilities, already masked (invalid rows p = 0).
+    values:  (n,) array shared by all UDAs, or {name: (n,) array} for
+             per-aggregate value columns; None means all-ones (COUNT).
+    gids:    (n,) int group ids in [0, max_groups); None = all group 0.
+    states:  optional prior states to continue from (default: init).
+    kernel:  'auto' | 'pallas' | 'xla' — 'auto' dispatches eligible scalar
+             accumulations to the Pallas kernels on TPU backends.
+
+    Returns {name: state}.
+    """
+    probs = jnp.asarray(probs)
+    dtype = probs.dtype
+    n = probs.shape[0]
+    gids_full = (jnp.zeros((n,), jnp.int32) if gids is None
+                 else jnp.asarray(gids))
+
+    # Normalise values to one array per UDA, deduplicated by identity so the
+    # scan carries each distinct column once.
+    if not isinstance(values, dict):
+        values = {name: values for name in udas}
+    ones = None
+    val_arrays, val_index, val_integral = [], {}, []
+    for name in udas:
+        v = values.get(name)
+        if v is None:
+            if ones is None:
+                ones = jnp.ones((n,), dtype)
+            v = ones
+            integral = True        # COUNT: all-ones
+        else:
+            src = jnp.asarray(v)
+            integral = jnp.issubdtype(src.dtype, jnp.integer) \
+                or src.dtype == jnp.bool_
+            v = src.astype(dtype) if src.dtype != dtype else src
+        for i, existing in enumerate(val_arrays):
+            if existing is v:
+                val_index[name] = i
+                break
+        else:
+            val_index[name] = len(val_arrays)
+            val_arrays.append(v)
+            val_integral.append(integral)
+
+    if states is None:
+        states = {}
+    states = dict(states)
+    for name, u in udas.items():
+        if name not in states:
+            states[name] = u.init(_groups_of(u, max_groups), dtype)
+
+    use_pallas = kernel == "pallas" or (
+        kernel == "auto" and jax.default_backend() == "tpu")
+
+    scan_udas, full_udas, kernel_udas = {}, {}, {}
+    for name, u in udas.items():
+        if not u.streaming:
+            full_udas[name] = u
+        elif use_pallas and _kernel_eligible(
+                u, max_groups, probs, val_integral[val_index[name]]):
+            kernel_udas[name] = u
+        else:
+            scan_udas[name] = u
+
+    for name, u in full_udas.items():
+        g_u = jnp.zeros_like(gids_full) if u.scalar else gids_full
+        states[name] = u.accumulate_full(states[name], probs,
+                                         val_arrays[val_index[name]],
+                                         g_u, _groups_of(u, max_groups))
+    for name, u in kernel_udas.items():
+        states[name] = _kernel_accumulate(u, states[name], probs,
+                                          val_arrays[val_index[name]])
+    if not scan_udas:
+        return states
+
+    bsz = _block_size(scan_udas, block)
+    nfull = ((n + bsz - 1) // bsz) * bsz
+    pad = nfull - n
+    p = jnp.pad(probs, (0, pad))                    # p = 0: no contribution
+    g = jnp.pad(gids_full, (0, pad), constant_values=max_groups - 1)
+    vs = tuple(jnp.pad(v, (0, pad)) for v in val_arrays)
+
+    def body(carry, chunk):
+        pc, gc, vc = chunk
+        return {name: u.update(carry[name], pc, vc[val_index[name]], gc)
+                for name, u in scan_udas.items()}, None
+
+    init = {name: states[name] for name in scan_udas}
+    chunks = (p.reshape(-1, bsz), g.reshape(-1, bsz),
+              tuple(v.reshape(-1, bsz) for v in vs))
+    from ..models.runmode import unroll_mode
+    if unroll_mode():
+        carry = init
+        for i in range(nfull // bsz):
+            carry, _ = body(carry, jax.tree.map(lambda c: c[i], chunks))
+    else:
+        carry, _ = jax.lax.scan(body, init, chunks)
+    states.update(carry)
+    return states
+
+
+def merge(udas, a, b):
+    """Merge two state dicts UDA-wise (any merge tree gives the same result)."""
+    return {name: u.merge(a[name], b[name]) for name, u in udas.items()}
+
+
+def reduce_collective(udas, states, data_axes, model_axis=None):
+    """The distributed Merge: one psum (or gather-fold) per UDA over the
+    tuple-sharding axes, then model-axis reconciliation.  Call inside
+    shard_map."""
+    out = {}
+    for name, u in udas.items():
+        st = u.reduce_data(states[name], data_axes)
+        if model_axis is not None:
+            st = u.reduce_model(st, model_axis)
+        out[name] = st
+    return out
+
+
+def finalize(udas, states):
+    return {name: u.finalize(states[name]) for name, u in udas.items()}

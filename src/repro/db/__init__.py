@@ -1,10 +1,14 @@
 """Probabilistic relational layer (paper §IV-F, §VI, §VIII).
 
     table.py        columnar probabilistic tables with validity masks
-    operators.py    sigma / pi / join / grouped-UDA operators (Table I)
-    plans.py        probabilistic -> deterministic plan DSL
-    tpch.py         synthetic TPC-H workload + Q1/Q3/Q6/Q18/Q20 in 4 modes
-    distributed.py  shard_map query execution (psum UDA merge)
+    operators.py    sigma / pi / join operators (Table I) + grouped views
+                    over the segment-UDA registry (repro.core.uda)
+    plans.py        probabilistic -> deterministic plan DSL; compile_plan
+                    is mesh-aware (same plan, single-device or distributed)
+    tpch.py         synthetic TPC-H workload; Q1/Q3/Q6/Q18/Q20 in 4 modes,
+                    expressed as plans and run through compile_plan
+    distributed.py  generic shard_map glue over the UDA protocol
+                    (Accumulate per shard / one-psum Merge / Finalize)
 """
 from . import distributed, operators, plans, tpch
 from .table import Table

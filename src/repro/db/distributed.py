@@ -1,168 +1,145 @@
-"""Distributed query execution: shard_map over the mesh's data axes.
+"""Distributed query execution: generic shard_map glue over the segment-UDA
+protocol of :mod:`repro.core.uda`.
 
 The paper scales by streaming partitions through per-core UDAs and merging
 (Glade's Accumulate/Merge).  On a TPU pod the same structure is:
 
-    Accumulate  per-shard vectorised UDA over the local tuple partition
-    Merge       ONE psum over the data axes (log-CF / cumulants / log(1-p)
-                states are all additive — DESIGN.md §2)
+    Accumulate  per-shard: the ONE canonical blocked accumulation loop
+                (`uda.accumulate`) over the local tuple partition
+    Merge       `uda.reduce_collective`: one psum over the data axes per
+                additive state (log-CF / cumulants / log(1-p) are all
+                additive — DESIGN.md §2); MinMax gather-folds instead
     Finalize    replicated FFT / mixture solve epilogue
 
-``query_step`` below is the canonical distributed aggregate query — the
-paper's workload as a jit-able function over sharded columns.  It is what
-launch/dryrun.py lowers for the `pgf_tpch` cell and what the TPC-H
-benchmarks run multi-device.  Tuples are sharded over ('pod','data') — the
-(batch-like) scale axis — and replicated over 'model'; frequency grids of
-the exact CF path are sharded over 'model' so the O(n*F) phase work splits
-both ways (the beyond-paper optimization validated in §Perf).
+``make_uda_step`` builds that pipeline for ANY dict of registered UDAs —
+it is what the mesh-aware plan compiler (`db/plans.py compile_plan(root,
+mesh)`) emits for `GroupAgg`/`ReweightGreater` nodes.  ``make_query_step``
+is the canonical fixed query shape (confidence + normal + cumulants +
+exact global CF) that launch/dryrun.py lowers for the `pgf_tpch` cell.
+Tuples are sharded over ('pod','data') — the (batch-like) scale axis — and
+replicated over 'model'; frequency grids of the exact CF path are sharded
+over 'model' so the O(n*F) phase work splits both ways (the beyond-paper
+optimization validated in §Perf).
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import poisson_binomial as pb
-from ..core.approx import MAX_ORDER, _bernoulli_cumulant_polys
+from ..compat import shard_map
+from ..core import uda
 
 
-def local_query_contrib(probs, values, gids, *, max_groups: int,
-                        num_freq: int, orders: int = 8,
-                        freq_lo: int = 0, freq_cnt: int | None = None,
-                        block: int = 8192):
-    """Per-shard UDA accumulation for a grouped aggregate query.
+def _tuple_axes(mesh: Mesh, data_axes: Sequence[str]) -> tuple:
+    return tuple(a for a in ("pod",) + tuple(data_axes)
+                 if a in mesh.axis_names)
 
-    ONE blocked pass over the local tuples (lax.scan), all accumulators
-    carried: the (freq_cnt, block) phase tile is the only large live
-    intermediate, mirroring the VMEM tiling of kernels/pb_cf.py.  An
-    unblocked formulation materialises an (F, n_local) matrix — hundreds
-    of GB per device at production scale (the §Perf baseline bug).
 
-    Returns the additive state tuple:
-      conf_logq   (G,)        sum log(1-p) per group          (AtLeastOne)
-      normal      (G, 2)      [sum v p, sum v^2 p (1-p)]      (Normal)
-      cumulants   (G, orders) sum v^j kappa_j(p)              (moments)
-      logcf       (2, F_loc)  global exact-CF accumulation over the
-                              [freq_lo, freq_lo+freq_cnt) frequency slice
+def make_uda_step(mesh: Mesh, uda_factory: Callable[[int, object], dict], *,
+                  max_groups: int, data_axes: Sequence[str] = ("data",),
+                  model_axis: str | None = "model", block: int = 8192,
+                  post=None):
+    """Build a jit-able distributed Accumulate/Merge/Finalize step.
+
+    uda_factory(model_size, model_rank) -> {name: UDA}; ``model_rank`` is a
+    traced axis index inside shard_map (0 without a model axis), so CF UDAs
+    can bind their per-shard frequency slice.
+
+    The returned step takes (probs, values, gids) with tuples sharded over
+    the data axes (values may be a dict of per-UDA columns) and returns the
+    replicated finalized results — or ``post(udas, states)`` if given.
     """
-    dtype = probs.dtype
-    if freq_cnt is None:
-        freq_cnt = num_freq
+    axes = _tuple_axes(mesh, data_axes)
+    model = model_axis if (model_axis and model_axis in mesh.axis_names) \
+        else None
+    model_size = mesh.shape[model] if model else 1
+    in_spec = P(axes)
+
+    def step(probs, values, gids):
+        def shard_fn(p, v, g):
+            rank = jax.lax.axis_index(model) if model else 0
+            udas = uda_factory(model_size, rank)
+            states = uda.accumulate(udas, p, v, g, max_groups=max_groups,
+                                    block=block)
+            states = uda.reduce_collective(udas, states, axes, model)
+            if post is not None:
+                return post(udas, states)
+            return uda.finalize(udas, states)
+
+        fn = shard_map(shard_fn, mesh=mesh,
+                       in_specs=(in_spec, in_spec, in_spec),
+                       out_specs=P(), check_vma=False)
+        return fn(probs, values, gids)
+
+    return jax.jit(step)
+
+
+def pad_for(mesh: Mesh, probs, values, gids, *, max_groups: int,
+            data_axes: Sequence[str] = ("data",)):
+    """Zero-pad tuple columns so the shard count divides them (p = 0 pads
+    contribute nothing to any UDA; they land in the overflow group)."""
+    shards = 1
+    for a in _tuple_axes(mesh, data_axes):
+        shards *= mesh.shape[a]
     n = probs.shape[0]
-    block = max(256, min(block, (1 << 23) // max(1, freq_cnt)))
-    nfull = ((n + block - 1) // block) * block
-    pad = nfull - n
-    probs = jnp.pad(probs, (0, pad))            # p=0: no contribution
-    values = jnp.pad(values, (0, pad))
+    pad = (-n) % shards
+    if pad == 0:
+        return probs, values, gids
+    probs = jnp.pad(probs, (0, pad))
     gids = jnp.pad(gids, (0, pad), constant_values=max_groups - 1)
-
-    table_c = jnp.asarray(_bernoulli_cumulant_polys()[1:orders + 1], dtype)
-    k = (freq_lo + jnp.arange(freq_cnt, dtype=dtype))
-    tiny = 1e-30 if dtype == jnp.float32 else 1e-300
-
-    def body(carry, chunk):
-        conf, normal, cum, la_acc, an_acc = carry
-        p, v, g = chunk
-        logq = jnp.log1p(-p)
-        conf = conf.at[g].add(logq)
-        mu_t = v * p
-        var_t = v * v * p * (1 - p)
-        normal = normal.at[g].add(jnp.stack([mu_t, var_t], axis=-1))
-        powers = p[None, :] ** jnp.arange(MAX_ORDER + 1, dtype=dtype)[:, None]
-        kappas = table_c @ powers                       # (orders, B)
-        vpow = v[None, :] ** jnp.arange(1, orders + 1, dtype=dtype)[:, None]
-        cum = cum.at[g].add((kappas * vpow).T)
-        # exact log-CF over this shard's frequency slice
-        phase = (k[:, None] * v[None, :]) % num_freq    # (F_loc, B)
-        theta = (2.0 * math.pi / num_freq) * phase
-        q = 1.0 - p[None, :]
-        re = q + p[None, :] * jnp.cos(theta)
-        im = p[None, :] * jnp.sin(theta)
-        la = 0.5 * jnp.log(jnp.maximum(re * re + im * im, tiny))
-        an = jnp.arctan2(im, re)
-        return (conf, normal, cum, la_acc + la.sum(-1),
-                an_acc + an.sum(-1)), None
-
-    init = (jnp.zeros((max_groups,), dtype),
-            jnp.zeros((max_groups, 2), dtype),
-            jnp.zeros((max_groups, orders), dtype),
-            jnp.zeros((freq_cnt,), dtype),
-            jnp.zeros((freq_cnt,), dtype))
-    chunks = (probs.reshape(-1, block), values.reshape(-1, block),
-              gids.reshape(-1, block))
-    from ..models.runmode import unroll_mode
-    if unroll_mode():
-        carry = init
-        for i in range(nfull // block):
-            carry, _ = body(carry, (chunks[0][i], chunks[1][i],
-                                    chunks[2][i]))
-        conf, normal, cum, la, an = carry
-    else:
-        (conf, normal, cum, la, an), _ = jax.lax.scan(body, init, chunks)
-    return conf, normal, cum, jnp.stack([la, an])
+    if isinstance(values, dict):
+        # Pad each distinct source array once so aggregates sharing a column
+        # keep sharing it (uda.accumulate dedups value columns by identity).
+        padded: dict = {}
+        values = {k: None if v is None
+                  else padded.setdefault(id(v), jnp.pad(v, (0, pad)))
+                  for k, v in values.items()}
+    elif values is not None:
+        values = jnp.pad(values, (0, pad))
+    return probs, values, gids
 
 
 def make_query_step(mesh: Mesh, *, max_groups: int = 1024,
                     num_freq: int = 4096, orders: int = 8,
                     data_axes: Sequence[str] = ("data",),
                     model_axis: str | None = "model"):
-    """Build the jit-able distributed aggregate-query step for `mesh`.
+    """The canonical distributed aggregate-query step for `mesh`.
 
     Inputs (sharded over data axes):
         probs  (n,) f32, values (n,) f32, gids (n,) int32
     Output (replicated): finalized per-group confidence, normal terms,
-    cumulant sums, and the exact global distribution (num_freq coeffs).
+    cumulant sums, and the exact global distribution (num_freq coeffs),
+    the latter accumulated over the model axis's frequency slices.
     """
-    data_axes = tuple(a for a in data_axes if a in mesh.axis_names)
-    axes = tuple(a for a in ("pod",) + tuple(data_axes) if a in mesh.axis_names)
-    model = model_axis if (model_axis and model_axis in mesh.axis_names) else None
+    model = model_axis if (model_axis and model_axis in mesh.axis_names) \
+        else None
     model_size = mesh.shape[model] if model else 1
     assert num_freq % model_size == 0
     f_loc = num_freq // model_size
 
-    in_spec = P(axes)                         # tuples sharded over data axes
-    out_spec = P()                            # replicated results
+    def factory(size, rank):
+        cf = uda.SumCF(num_freq, freq_lo=rank * f_loc, freq_cnt=f_loc)
+        cf.scalar = True          # global distribution: one group
+        return dict(conf=uda.AtLeastOne(), normal=uda.SumNormal(),
+                    cum=uda.SumCumulants(orders), cf=cf)
 
-    def step(probs, values, gids):
-        def shard_fn(p, v, g):
-            freq_lo = 0
-            if model:
-                freq_lo = jax.lax.axis_index(model) * f_loc
-            conf, normal, cum, logcf = local_query_contrib(
-                p, v, g, max_groups=max_groups, num_freq=num_freq,
-                orders=orders, freq_lo=freq_lo, freq_cnt=f_loc)
-            # Merge = one psum per state over the tuple-sharding axes.
-            conf, normal, cum = jax.lax.psum((conf, normal, cum), axes)
-            logcf = jax.lax.psum(logcf, axes)
-            if model:
-                # Frequency slices live on different model shards;
-                # all-gather them for the replicated FFT epilogue.
-                logcf = jax.lax.all_gather(logcf, model, axis=1, tiled=True)
-                conf = jax.lax.pmean(conf, model)
-                normal = jax.lax.pmean(normal, model)
-                cum = jax.lax.pmean(cum, model)
-            coeffs = pb.logcf_finalize(logcf[0], logcf[1])
-            confidence = 1.0 - jnp.exp(conf)
-            return confidence, normal, cum, coeffs
+    def post(udas, states):
+        confidence = udas["conf"].finalize(states["conf"])
+        coeffs = udas["cf"].finalize(states["cf"])[0]
+        return (confidence, states["normal"].terms, states["cum"].terms,
+                coeffs)
 
-        specs_in = (in_spec, in_spec, in_spec)
-        fn = shard_map(shard_fn, mesh=mesh, in_specs=specs_in,
-                       out_specs=(out_spec, out_spec, out_spec, out_spec),
-                       check_vma=False)
-        return fn(probs, values, gids)
-
-    return jax.jit(step)
+    return make_uda_step(mesh, factory, max_groups=max_groups,
+                         data_axes=data_axes, model_axis=model_axis,
+                         post=post)
 
 
 def shard_columns(mesh: Mesh, arrays, data_axes: Sequence[str] = ("data",)):
     """Place host arrays with tuple-sharded layout on the mesh."""
-    axes = tuple(a for a in ("pod",) + tuple(data_axes) if a in mesh.axis_names)
-    sharding = NamedSharding(mesh, P(axes))
+    sharding = NamedSharding(mesh, P(_tuple_axes(mesh, data_axes)))
     return tuple(jax.device_put(a, sharding) for a in arrays)
 
 

@@ -14,6 +14,10 @@ All operators run under jit with static capacities; liveness is carried by
 the validity mask (a dead tuple behaves exactly like p = 0 for every UDA).
 Grouping uses a fixed `max_groups`; overflows are detectable (group id ==
 max_groups-1 fill bucket is flagged invalid).
+
+The grouped aggregation functions below are thin views over the ONE
+segment-UDA subsystem in :mod:`repro.core.uda`: each `group_*` builds the
+matching registered UDA and runs the canonical blocked accumulation loop.
 """
 from __future__ import annotations
 
@@ -23,8 +27,7 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from ..core import poisson_binomial as pb
-from ..core.approx import MAX_ORDER, _bernoulli_cumulant_polys
+from ..core import uda
 from .table import Table
 
 # --------------------------------------------------------------- grouping
@@ -97,9 +100,7 @@ def project(table: Table, keys: Sequence[str], max_groups: int) -> Table:
     p_group = 1 - prod_{tuples in group} (1 - p).
     """
     ids, _, gvalid = group_ids(table, keys, max_groups)
-    logq = jnp.where(table.valid, jnp.log1p(-table.masked_prob()), 0.0)
-    acc = jax.ops.segment_sum(logq, ids, num_segments=max_groups)
-    prob = 1.0 - jnp.exp(acc)
+    prob = group_atleastone(table, ids, max_groups)
     cols = group_key_columns(table, keys, ids, max_groups)
     return Table(cols, prob, gvalid)
 
@@ -155,132 +156,75 @@ def general_join(left: Table, right: Table,
 # ------------------------------------------------- grouped aggregation UDAs
 def group_atleastone(table: Table, ids, max_groups: int) -> jnp.ndarray:
     """Per-group confidence 1 - prod(1-p) — the 'group confidence' query mode."""
-    logq = jnp.log1p(-table.masked_prob())
-    acc = jax.ops.segment_sum(logq, ids, num_segments=max_groups)
-    return 1.0 - jnp.exp(acc)
+    u = uda.AtLeastOne()
+    st = uda.accumulate({"a": u}, table.masked_prob(), None, ids,
+                        max_groups=max_groups)["a"]
+    return u.finalize(st)
 
 
 def group_normal_terms(table: Table, values, ids, max_groups: int):
     """Per-group (mean, var) of the probabilistic SUM (paper §V-C.3 Normal,
     with the variance erratum fixed: var = sum v^2 p (1-p))."""
-    p = table.masked_prob()
-    mu = jax.ops.segment_sum(values * p, ids, num_segments=max_groups)
-    var = jax.ops.segment_sum(values ** 2 * p * (1 - p), ids,
-                              num_segments=max_groups)
-    return mu, var
+    u = uda.SumNormal()
+    st = uda.accumulate({"n": u}, table.masked_prob(), values, ids,
+                        max_groups=max_groups)["n"]
+    return u.finalize(st)
 
 
 def group_cumulant_terms(table: Table, values, ids, max_groups: int,
                          orders: int = 8) -> jnp.ndarray:
     """Per-group cumulant partial sums (G, orders) for the moment method."""
-    p = table.masked_prob()
-    dtype = p.dtype
-    table_c = jnp.asarray(_bernoulli_cumulant_polys()[1:orders + 1], dtype)
-    powers = p[None, :] ** jnp.arange(MAX_ORDER + 1, dtype=dtype)[:, None]
-    kappas = table_c @ powers                               # (orders, n)
-    vpow = values[None, :] ** jnp.arange(1, orders + 1, dtype=dtype)[:, None]
-    terms = (kappas * vpow).T                               # (n, orders)
-    return jax.ops.segment_sum(terms, ids, num_segments=max_groups)
+    st = uda.accumulate({"c": uda.SumCumulants(orders)}, table.masked_prob(),
+                        values, ids, max_groups=max_groups)["c"]
+    return st.terms
 
 
 def group_logcf(table: Table, values, ids, max_groups: int, num_freq: int,
                 block: int = 512):
     """Per-group summed log CF -> (G, F) log_abs and angle (exact SUM/COUNT
-    per group).  Blocked over tuples so the (block, F) tile stays bounded —
-    the grouped twin of kernels/pb_cf.py.
-    """
-    p = table.masked_prob()
-    dtype = p.dtype
-    n = p.shape[0]
-    v = jnp.asarray(values, dtype)
-    block = max(64, min(block, (1 << 22) // max(1, num_freq)))
-    nfull = ((n + block - 1) // block) * block
-    p = jnp.pad(p, (0, nfull - n))
-    v = jnp.pad(v, (0, nfull - n))
-    ids_p = jnp.pad(ids, (0, nfull - n), constant_values=max_groups - 1)
-    k = jnp.arange(num_freq, dtype=dtype)
-
-    def body(carry, chunk):
-        la, an = carry
-        pc, vc, gc = chunk
-        phase = (k[None, :] * vc[:, None]) % num_freq
-        theta = (2.0 * math.pi / num_freq) * phase
-        q = 1.0 - pc[:, None]
-        re = q + pc[:, None] * jnp.cos(theta)
-        im = pc[:, None] * jnp.sin(theta)
-        tiny = 1e-30 if dtype == jnp.float32 else 1e-300
-        l = 0.5 * jnp.log(jnp.maximum(re * re + im * im, tiny))
-        t = jnp.arctan2(im, re)
-        la = la.at[gc].add(l)
-        an = an.at[gc].add(t)
-        return (la, an), None
-
-    init = (jnp.zeros((max_groups, num_freq), dtype),
-            jnp.zeros((max_groups, num_freq), dtype))
-    chunks = (p.reshape(-1, block), v.reshape(-1, block), ids_p.reshape(-1, block))
-    (la, an), _ = jax.lax.scan(body, init, chunks)
-    return la, an
+    per group), via the canonical blocked loop of core/uda.py."""
+    st = uda.accumulate({"cf": uda.SumCF(num_freq)}, table.masked_prob(),
+                        values, ids, max_groups=max_groups, block=block)["cf"]
+    return st.log_abs, st.angle
 
 
 def group_logcf_finalize(la: jnp.ndarray, an: jnp.ndarray) -> jnp.ndarray:
     """(G, F) log CF -> (G, F) coefficient rows via one batched FFT."""
-    q = jnp.exp(la) * jax.lax.complex(jnp.cos(an), jnp.sin(an))
-    coeffs = jnp.fft.fft(q, axis=-1).real / la.shape[-1]
-    return jnp.clip(coeffs, 0.0, None)
+    return uda.SumCF(la.shape[-1]).finalize(uda.CFState(la, an))
 
 
-def group_minmax(table: Table, values, ids, max_groups: int, sign: float = 1.0):
-    """Grouped MIN (sign=+1) / MAX (sign=-1) masses, fully vectorised.
+def minmax_runs(u: uda.MinMax, state: uda.MinMaxState) -> dict:
+    """Flatten a grouped MinMax state into the per-run dict consumed by the
+    query modes: (run_group, run_value, run_mass, run_valid) over the G*kappa
+    buffer grid, plus per-group p_empty and the truncation p_tail."""
+    values, mass, p_tail = u.finalize(state)
+    g, k = values.shape
+    finite = jnp.isfinite(values)
+    return dict(run_group=jnp.repeat(jnp.arange(g), k),
+                run_value=values.reshape(-1),
+                run_mass=jnp.where(finite, mass, 0.0).reshape(-1),
+                run_valid=finite.reshape(-1),
+                p_empty=u.p_empty(state), p_tail=p_tail)
 
-    Sort rows by (group, sign*value); fold duplicates; per-group prefix
-    survival products (paper §V-B.1):
+
+def group_minmax(table: Table, values, ids, max_groups: int, sign: float = 1.0,
+                 kappa: int | None = None):
+    """Grouped MIN (sign=+1) / MAX (sign=-1) masses via the MinMax UDA
+    (paper §V-B.1):
 
         P(agg = v_j) = prod_{v_l better than v_j} Q_l * (1 - Q_j),
         Q_l = prod_{tuples at v_l} (1 - p).
 
-    Returns per-row (sorted order) arrays: (gid, value, mass, is_seg_head)
-    plus per-group p_empty.  Densification/top-kappa happens downstream.
+    `kappa` bounds the per-group support kept (default: exact up to 128
+    distinct values; overflow mass is reported in `p_tail`, §V-B.2).
+    Returns the flattened run dict of :func:`minmax_runs`.
     """
-    p = table.masked_prob()
-    v = jnp.asarray(values, p.dtype) * sign
-    n = p.shape[0]
-    # Lexsort by (group, value) via two stable argsorts — a combined float
-    # key would lose the value bits to f64 ULP at large group ids.
-    ord1 = jnp.argsort(v, stable=True)
-    ord2 = jnp.argsort(ids[ord1], stable=True)
-    order = ord1[ord2]
-    gs, vs, ps = ids[order], v[order], p[order]
-    logq = jnp.log1p(-ps)
-
-    # Segment heads: first row of each (group, value) run.
-    head = jnp.concatenate([jnp.ones((1,), bool),
-                            (gs[1:] != gs[:-1]) | (vs[1:] != vs[:-1])])
-    seg = jnp.cumsum(head) - 1                         # (n,) run index
-    run_logq = jax.ops.segment_sum(logq, seg, num_segments=n)  # log Q per run
-
-    # prefix[r] = sum of log Q over same-group runs strictly better than r
-    #           = (row prefix sum at r's head row) - (at r's group head row).
-    cs = jnp.concatenate([jnp.zeros((1,), logq.dtype),
-                          jnp.cumsum(logq)[:-1]])      # sum before each row
-    grp_head = jnp.concatenate([jnp.ones((1,), bool), gs[1:] != gs[:-1]])
-    run_head_cs = jax.ops.segment_sum(jnp.where(head, cs, 0.0), seg,
-                                      num_segments=n)  # one head per run
-    grp_base = jax.ops.segment_sum(jnp.where(grp_head, cs, 0.0), gs,
-                                   num_segments=max_groups)
-    grp_of_run = jnp.clip(jax.ops.segment_max(gs, seg, num_segments=n),
-                          0, max_groups - 1)
-    prefix = run_head_cs - grp_base[grp_of_run]
-    mass_run = jnp.exp(prefix) * (1.0 - jnp.exp(run_logq))
-
-    total_logq = jax.ops.segment_sum(jnp.log1p(-p), ids,
-                                     num_segments=max_groups)
-    p_empty = jnp.exp(total_logq)
-
-    run_value = jax.ops.segment_min(vs, seg, num_segments=n) * sign
-    run_valid = jax.ops.segment_max(ps, seg, num_segments=n) > 0
-    return dict(run_group=grp_of_run, run_value=run_value,
-                run_mass=jnp.where(run_valid, mass_run, 0.0),
-                run_valid=run_valid, p_empty=p_empty)
+    if kappa is None:
+        kappa = min(table.capacity, 128)
+    u = uda.MinMax(kappa=kappa, sign=sign)
+    st = uda.accumulate({"m": u}, table.masked_prob(), values, ids,
+                        max_groups=max_groups)["m"]
+    return minmax_runs(u, st)
 
 
 # --------------------------------------------- scalar comparison epilogues

@@ -1,22 +1,30 @@
-"""Probabilistic -> deterministic plan mapping (paper §VI, Table I).
+"""Probabilistic -> deterministic plan mapping (paper §VI, Table I),
+mesh-aware.
 
 A Plan is a small dataflow DAG of operator nodes.  ``compile_plan`` walks
 the DAG and emits one jit-able function  tables -> results , realising the
 paper's central claim: probabilistic queries run on a *deterministic*
 engine (here: XLA) once every probabilistic operator is rewritten to a
-deterministic one + PGF UDA calls.
+deterministic one + segment-UDA calls (:mod:`repro.core.uda`).
+
+``compile_plan(root, mesh)`` compiles the SAME plan for a device mesh:
+the relational scaffolding (scan/select/join/group-id assignment) stays
+replicated, while every `GroupAgg` / `ReweightGreater` aggregation runs
+the distributed Accumulate -> one-psum Merge -> replicated Finalize path
+of :mod:`repro.db.distributed`, so any plan runs on any mesh with results
+identical to the single-device compile.
 
 Node zoo (Table I rows in brackets):
 
     Scan(name)                               [I]   R -> R^p
     Select(child, pred)                      [II]  sigma, deterministic cond
+    Map(child, name, fn)                     [--]  computed column
     FKJoin(l, r, lk, rk, cols)               [IV]  join, deterministic cond
     Project(child, keys, max_groups)         [V]   GROUP BY + AtLeastOne
-    GroupAgg(child, keys, agg, value, ...)   [VI]  GROUP BY + PGF UDA
+    GroupAgg(child, keys, agg, value, ...)   [VI]  GROUP BY + PGF UDAs
+                                                   (+ `extra` riders share
+                                                   ONE accumulation pass)
     ReweightGreater(child, agg_of, vs, ...)  [III] p *= P(SUM > threshold)
-
-This layer is deliberately small — the paper's queries are hand-planned in
-tpch.py; Plan exists so *new* queries compose without touching operators.
 """
 from __future__ import annotations
 
@@ -25,6 +33,7 @@ from typing import Callable, Dict, Sequence
 
 import jax.numpy as jnp
 
+from ..core import uda
 from . import operators as ops
 from .table import Table
 
@@ -42,6 +51,14 @@ class Scan(Node):
 class Select(Node):
     child: Node
     pred: Callable[[Table], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Map(Node):
+    """Attach a computed column `name` = fn(table) to the child relation."""
+    child: Node
+    name: str
+    fn: Callable[[Table], jnp.ndarray]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,34 +80,104 @@ class Project(Node):
 @dataclasses.dataclass(frozen=True)
 class GroupAgg(Node):
     """Returns a dict of per-group UDA results, not a Table (PGF-valued
-    columns live outside the 1NF Table, §VI-C)."""
+    columns live outside the 1NF Table, §VI-C).
+
+    The primary aggregate lands under "sum" / "cumulants" / "minmax" (by
+    method/agg); each `extra` entry (name, value_col, agg, method) rides the
+    SAME accumulation pass and lands under its own name.  Group confidence
+    (AtLeastOne) is always included.  `value` == "" means COUNT (all-ones).
+    """
     child: Node
     keys: tuple
     value: str            # column to aggregate ("" = COUNT)
     agg: str              # SUM | COUNT | MIN | MAX
     max_groups: int
-    method: str = "normal"  # normal | cumulants | exact
+    method: str = "normal"  # normal | cumulants  (exact: ROADMAP open item)
+    extra: tuple = ()
+    kappa: int = 64       # MIN/MAX support capacity per group
 
 
 @dataclasses.dataclass(frozen=True)
 class ReweightGreater(Node):
     """sigma_{AGG(B) > C}: group child by keys, SUM(value), then keep each
-    group with p = AtLeastOne * P(SUM > threshold_col) (Table I row III)."""
+    group with p = AtLeastOne * P(SUM > threshold) (Table I row III).
+    The threshold is `threshold_col` (per-group column) when set, else the
+    constant `threshold`; `carry_cols` are extra per-group columns kept on
+    the output Table (all valid writers of a group agree)."""
     child: Node
     keys: tuple
     value: str
     threshold_col: str
     max_groups: int
+    threshold: float | None = None
+    carry_cols: tuple = ()
 
 
-def compile_plan(root: Node) -> Callable[[Dict[str, Table]], object]:
-    """Emit a function tables -> result (Table or dict of arrays)."""
+def _agg_uda(agg: str, method: str, kappa: int) -> uda.UDA:
+    if agg in ("SUM", "COUNT"):
+        if method == "normal":
+            return uda.SumNormal()
+        if method == "cumulants":
+            return uda.SumCumulants()
+        raise ValueError(
+            f"GroupAgg method {method!r} is not supported by the planner "
+            "(grouped exact-CF is a ROADMAP open item; use "
+            "operators.group_logcf directly)")
+    if agg in ("MIN", "MAX"):
+        return uda.MinMax(kappa=kappa, sign=1.0 if agg == "MIN" else -1.0)
+    raise ValueError(agg)
+
+
+def _out_key(agg: str, method: str) -> str:
+    if agg in ("MIN", "MAX"):
+        return "minmax"
+    return "cumulants" if method == "cumulants" else "sum"
+
+
+_RESERVED_OUT_KEYS = frozenset({"valid", "keys", "confidence"})
+
+
+def compile_plan(root: Node, mesh=None, *,
+                 data_axes: Sequence[str] = ("data",),
+                 model_axis: str | None = "model"):
+    """Emit a function tables -> result (Table or dict of arrays).
+
+    With ``mesh``, `GroupAgg` / `ReweightGreater` aggregation runs under
+    shard_map on the mesh's data axes; results match the mesh=None compile.
+    """
+    # One jitted distributed step per aggregation node, built on first call
+    # (the step depends only on the node's static config, not its data).
+    dist_steps: dict = {}
+
+    def accumulate(node, udas, t, values, ids, max_groups):
+        """ONE pass over the child's tuples for every UDA of the node —
+        distributed Accumulate/Merge when a mesh is given."""
+        probs = t.masked_prob()
+        if mesh is None:
+            return uda.accumulate(udas, probs, values, ids,
+                                  max_groups=max_groups)
+        from . import distributed as dist
+        step = dist_steps.get(id(node))
+        if step is None:
+            step = dist.make_uda_step(mesh, lambda size, rank: udas,
+                                      max_groups=max_groups,
+                                      data_axes=data_axes,
+                                      model_axis=model_axis,
+                                      post=lambda _u, states: states)
+            dist_steps[id(node)] = step
+        probs, values, ids = dist.pad_for(mesh, probs, values, ids,
+                                          max_groups=max_groups,
+                                          data_axes=data_axes)
+        return step(probs, values, ids)
 
     def run(node: Node, tables: Dict[str, Table]):
         if isinstance(node, Scan):
             return tables[node.name]
         if isinstance(node, Select):
             return ops.select(run(node.child, tables), node.pred)
+        if isinstance(node, Map):
+            t = run(node.child, tables)
+            return t.with_column(node.name, node.fn(t))
         if isinstance(node, FKJoin):
             return ops.fk_join(run(node.left, tables),
                                run(node.right, tables),
@@ -103,42 +190,63 @@ def compile_plan(root: Node) -> Callable[[Dict[str, Table]], object]:
             t = run(node.child, tables)
             ids, codes, gvalid = ops.group_ids(t, list(node.keys),
                                                node.max_groups)
-            vals = (jnp.ones_like(t.prob) if node.agg == "COUNT" or not node.value
-                    else t[node.value].astype(t.prob.dtype))
+
+            specs = [(_out_key(node.agg, node.method), node.value, node.agg,
+                      node.method)] + list(node.extra)
+            names = [s[0] for s in specs]
+            clashes = set(names) & _RESERVED_OUT_KEYS
+            if clashes or len(set(names)) != len(names):
+                raise ValueError(
+                    f"GroupAgg aggregate names must be unique and avoid "
+                    f"{sorted(_RESERVED_OUT_KEYS)}; got {names}")
+            udas = {"confidence": uda.AtLeastOne()}
+            values: dict = {}
+            cols: dict = {}        # convert each source column exactly once
+            for name, value, agg, method in specs:
+                udas[name] = _agg_uda(agg, method, node.kappa)
+                if agg == "COUNT" or not value:
+                    values[name] = None
+                else:
+                    if value not in cols:
+                        cols[value] = t[value].astype(t.prob.dtype)
+                    values[name] = cols[value]
+            states = accumulate(node, udas, t, values, ids, node.max_groups)
+
             out = dict(valid=gvalid,
                        keys=ops.group_key_columns(t, list(node.keys), ids,
                                                   node.max_groups),
-                       confidence=ops.group_atleastone(t, ids,
-                                                       node.max_groups))
-            if node.agg in ("SUM", "COUNT"):
-                if node.method == "normal":
-                    out["sum"] = ops.group_normal_terms(t, vals, ids,
-                                                        node.max_groups)
-                elif node.method == "cumulants":
-                    out["cumulants"] = ops.group_cumulant_terms(
-                        t, vals, ids, node.max_groups)
+                       confidence=udas["confidence"].finalize(
+                           states["confidence"]))
+            for name, value, agg, method in specs:
+                u, st = udas[name], states[name]
+                if agg in ("MIN", "MAX"):
+                    out[name] = ops.minmax_runs(u, st)
                 else:
-                    raise ValueError(node.method)
-            elif node.agg in ("MIN", "MAX"):
-                out["minmax"] = ops.group_minmax(
-                    t, t[node.value].astype(t.prob.dtype), ids,
-                    node.max_groups, sign=1.0 if node.agg == "MIN" else -1.0)
-            else:
-                raise ValueError(node.agg)
+                    out[name] = u.finalize(st)
             return out
         if isinstance(node, ReweightGreater):
+            if not node.threshold_col and node.threshold is None:
+                raise ValueError("ReweightGreater needs threshold_col or a "
+                                 "constant threshold")
             t = run(node.child, tables)
             ids, codes, gvalid = ops.group_ids(t, list(node.keys),
                                                node.max_groups)
-            vals = t[node.value].astype(t.prob.dtype)
-            mu, var = ops.group_normal_terms(t, vals, ids, node.max_groups)
-            thr_cols = ops.group_key_columns(
-                t, list(node.keys) + [node.threshold_col], ids,
-                node.max_groups)
-            p_gt = ops.normal_greater(
-                mu, var, thr_cols[node.threshold_col].astype(mu.dtype))
-            conf = ops.group_atleastone(t, ids, node.max_groups)
-            cols = {k: thr_cols[k] for k in node.keys}
+            udas = {"confidence": uda.AtLeastOne(), "sum": uda.SumNormal()}
+            values = {"sum": t[node.value].astype(t.prob.dtype)}
+            states = accumulate(node, udas, t, values, ids, node.max_groups)
+            mu, var = udas["sum"].finalize(states["sum"])
+            conf = udas["confidence"].finalize(states["confidence"])
+
+            carry = list(node.keys) + list(node.carry_cols)
+            if node.threshold_col:
+                gcols = ops.group_key_columns(
+                    t, carry + [node.threshold_col], ids, node.max_groups)
+                thr = gcols[node.threshold_col].astype(mu.dtype)
+            else:
+                gcols = ops.group_key_columns(t, carry, ids, node.max_groups)
+                thr = jnp.asarray(node.threshold, mu.dtype)
+            p_gt = ops.normal_greater(mu, var, thr)
+            cols = {k: gcols[k] for k in carry}
             return Table(cols, conf * p_gt, gvalid)
         raise TypeError(node)
 

@@ -13,8 +13,12 @@ paper's four modes:
                        (exact log-CF / Normal / moment-based, §V)
 
 Queries: Q1, Q3, Q6, Q18 and the paper's worked example Q20 (Fig. 6).
-Dates are day numbers (int), prices/quantities integers — the paper's own
-integer-grid restriction (§V-C.2).
+Every probabilistic mode is expressed as a `Plan` DAG and executed through
+``compile_plan`` — pass ``mesh=`` to any query and the same plan runs its
+aggregations distributed (Accumulate / psum-Merge / replicated Finalize),
+which is how the TPC-H benchmarks exercise the planner end-to-end on one
+device and on a pod.  Dates are day numbers (int), prices/quantities
+integers — the paper's own integer-grid restriction (§V-C.2).
 """
 from __future__ import annotations
 
@@ -27,6 +31,8 @@ import numpy as np
 
 from ..core import poisson_binomial as pb
 from . import operators as ops
+from .plans import (FKJoin, GroupAgg, Map, Project, ReweightGreater, Scan,
+                    Select, compile_plan)
 from .table import Table
 
 DAY0_1995 = 9131          # days since epoch-ish origin for synthetic dates
@@ -56,6 +62,10 @@ class TPCH:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, scale=dict(aux[0]))
+
+    def tables(self) -> Dict[str, Table]:
+        """The plan-compiler catalogue view: name -> Table."""
+        return {t: getattr(self, t) for t in self._TABLES}
 
 
 def generate(n_orders: int = 2000, lines_per_order: int = 4,
@@ -136,123 +146,144 @@ def generate(n_orders: int = 2000, lines_per_order: int = 4,
 
 
 # --------------------------------------------------------------- queries
-def q1(db: TPCH, mode: str = "aggregate"):
+def _confidence_of(plan, db: TPCH, mesh):
+    """P(result non-empty): one-group AtLeastOne over the plan's output."""
+    agg = GroupAgg(plan, keys=(), value="", agg="COUNT", max_groups=1)
+    out = compile_plan(agg, mesh)(db.tables())
+    return dict(confidence=out["confidence"][0])
+
+
+def q1(db: TPCH, mode: str = "aggregate", mesh=None):
     """Pricing summary: GROUP BY (returnflag, linestatus); SUM(quantity),
     SUM(extendedprice), COUNT(*) over shipped lineitems."""
-    li = ops.select(db.lineitem,
-                    lambda t: t["l_shipdate"] <= DAY0_1995 + 500)
-    ids, _, gvalid = ops.group_ids(li, ["l_returnflag", "l_linestatus"], 8)
+    sel = Select(Scan("lineitem"),
+                 lambda t: t["l_shipdate"] <= DAY0_1995 + 500)
+    keys = ("l_returnflag", "l_linestatus")
     if mode == "deterministic":
+        li = compile_plan(sel)(db.tables())
+        ids, _, gvalid = ops.group_ids(li, list(keys), 8)
         m = li.valid
-        qty = jax.ops.segment_sum(jnp.where(m, li["l_quantity"], 0), ids, num_segments=8)
-        price = jax.ops.segment_sum(jnp.where(m, li["l_extendedprice"], 0), ids, num_segments=8)
+        qty = jax.ops.segment_sum(jnp.where(m, li["l_quantity"], 0), ids,
+                                  num_segments=8)
+        price = jax.ops.segment_sum(jnp.where(m, li["l_extendedprice"], 0),
+                                    ids, num_segments=8)
         cnt = jax.ops.segment_sum(m.astype(jnp.int32), ids, num_segments=8)
         return dict(valid=gvalid, sum_qty=qty, sum_price=price, count=cnt)
     if mode == "confidence":
-        from ..core.aggregates import AtLeastOne
-        st = AtLeastOne.accumulate(AtLeastOne.init(), li.masked_prob())
-        return dict(confidence=AtLeastOne.finalize(st))
+        return _confidence_of(sel, db, mesh)
     if mode == "group_confidence":
-        return dict(valid=gvalid, confidence=ops.group_atleastone(li, ids, 8))
-    # aggregate: Normal + moment terms per group; COUNT exactly via CF
-    qty = li["l_quantity"].astype(li.prob.dtype)
-    price = li["l_extendedprice"].astype(li.prob.dtype)
-    mu_q, var_q = ops.group_normal_terms(li, qty, ids, 8)
-    mu_p, var_p = ops.group_normal_terms(li, price, ids, 8)
-    cum_q = ops.group_cumulant_terms(li, qty, ids, 8)
-    ones = jnp.ones_like(qty)
-    mu_c, var_c = ops.group_normal_terms(li, ones, ids, 8)
-    return dict(valid=gvalid, qty=(mu_q, var_q), price=(mu_p, var_p),
-                count=(mu_c, var_c), cumulants_qty=cum_q)
+        out = compile_plan(GroupAgg(sel, keys, "", "COUNT", 8), mesh)(
+            db.tables())
+        return dict(valid=out["valid"], confidence=out["confidence"])
+    # aggregate: Normal + moment terms per group, all in ONE UDA pass
+    plan = GroupAgg(sel, keys, "l_quantity", "SUM", 8, "normal",
+                    extra=(("price", "l_extendedprice", "SUM", "normal"),
+                           ("count", "", "COUNT", "normal"),
+                           ("cumulants_qty", "l_quantity", "SUM",
+                            "cumulants")))
+    out = compile_plan(plan, mesh)(db.tables())
+    return dict(valid=out["valid"], qty=out["sum"], price=out["price"],
+                count=out["count"], cumulants_qty=out["cumulants_qty"])
 
 
 def q3(db: TPCH, mode: str = "aggregate", segment: int = 1,
-       max_groups: int = 512):
+       max_groups: int = 512, mesh=None):
     """Shipping priority: revenue per order for one market segment."""
-    cust = ops.select(db.customer, lambda t: t["c_mktsegment"] == segment)
-    orders = ops.select(db.orders, lambda t: t["o_orderdate"] < DAY0_1995)
-    o = ops.fk_join(orders, cust, "o_custkey", "c_custkey", ["c_mktsegment"])
-    li = ops.select(db.lineitem, lambda t: t["l_shipdate"] > DAY0_1995)
-    j = ops.fk_join(li, o, "l_orderkey", "o_orderkey",
-                    ["o_orderdate", "o_custkey"])
-    ids, codes, gvalid = ops.group_ids(j, ["l_orderkey"], max_groups)
+    cust = Select(Scan("customer"), lambda t: t["c_mktsegment"] == segment)
+    orders = Select(Scan("orders"), lambda t: t["o_orderdate"] < DAY0_1995)
+    o = FKJoin(orders, cust, "o_custkey", "c_custkey", ("c_mktsegment",))
+    li = Select(Scan("lineitem"), lambda t: t["l_shipdate"] > DAY0_1995)
+    j = FKJoin(li, o, "l_orderkey", "o_orderkey",
+               ("o_orderdate", "o_custkey"))
     if mode == "deterministic":
+        jt = compile_plan(j)(db.tables())
+        ids, _, gvalid = ops.group_ids(jt, ["l_orderkey"], max_groups)
         rev = jax.ops.segment_sum(
-            jnp.where(j.valid, j["l_extendedprice"], 0), ids,
+            jnp.where(jt.valid, jt["l_extendedprice"], 0), ids,
             num_segments=max_groups)
         return dict(valid=gvalid, revenue=rev)
     if mode == "confidence":
-        from ..core.aggregates import AtLeastOne
-        st = AtLeastOne.accumulate(AtLeastOne.init(), j.masked_prob())
-        return dict(confidence=AtLeastOne.finalize(st))
+        return _confidence_of(j, db, mesh)
     if mode == "group_confidence":
-        return dict(valid=gvalid,
-                    confidence=ops.group_atleastone(j, ids, max_groups))
-    price = j["l_extendedprice"].astype(j.prob.dtype)
-    mu, var = ops.group_normal_terms(j, price, ids, max_groups)
-    cum = ops.group_cumulant_terms(j, price, ids, max_groups)
-    return dict(valid=gvalid, revenue=(mu, var), cumulants=cum)
+        out = compile_plan(GroupAgg(j, ("l_orderkey",), "", "COUNT",
+                                    max_groups), mesh)(db.tables())
+        return dict(valid=out["valid"], confidence=out["confidence"])
+    plan = GroupAgg(j, ("l_orderkey",), "l_extendedprice", "SUM", max_groups,
+                    "normal",
+                    extra=(("cumulants", "l_extendedprice", "SUM",
+                            "cumulants"),))
+    out = compile_plan(plan, mesh)(db.tables())
+    return dict(valid=out["valid"], revenue=out["sum"],
+                cumulants=out["cumulants"])
 
 
-def q6(db: TPCH, mode: str = "aggregate", num_freq: int | None = None):
+def q6(db: TPCH, mode: str = "aggregate", num_freq: int | None = None,
+       mesh=None):
     """Forecast revenue change: scalar SUM over filtered lineitem.
 
     The single-group scalar aggregate — the paper's Figure 9 COUNT(*)
     experiment is this query with values == 1.
     """
-    li = ops.select(
-        db.lineitem,
+    sel = Select(
+        Scan("lineitem"),
         lambda t: (t["l_shipdate"] >= DAY0_1995 - 400)
         & (t["l_shipdate"] < DAY0_1995)
         & (t["l_discount"] >= 5) & (t["l_discount"] <= 7)
         & (t["l_quantity"] < 24))
-    p = li.masked_prob()
     if mode == "deterministic":
+        li = compile_plan(sel)(db.tables())
         return dict(revenue=jnp.sum(jnp.where(li.valid, li["l_quantity"]
                                               * li["l_discount"], 0)))
     if mode in ("confidence", "group_confidence"):
-        from ..core.aggregates import AtLeastOne
-        st = AtLeastOne.accumulate(AtLeastOne.init(), p)
-        return dict(confidence=AtLeastOne.finalize(st))
-    v = (li["l_quantity"] * li["l_discount"]).astype(p.dtype)
-    from ..core import approx
-    terms = approx.cumulant_terms(p, v, 8)
-    mu = jnp.sum(v * p)
-    var = jnp.sum(v * v * p * (1 - p))
-    out = dict(normal=(mu, var), cumulants=terms)
+        return _confidence_of(sel, db, mesh)
+    val = Map(sel, "q6_value",
+              lambda t: (t["l_quantity"] * t["l_discount"])
+              .astype(t.prob.dtype))
+    plan = GroupAgg(val, (), "q6_value", "SUM", 1, "normal",
+                    extra=(("cumulants", "q6_value", "SUM", "cumulants"),))
+    r = compile_plan(plan, mesh)(db.tables())
+    mu, var = r["sum"]
+    out = dict(normal=(mu[0], var[0]), cumulants=r["cumulants"][0])
     if num_freq:  # exact distribution on request (Figure 9's exact path)
+        li = compile_plan(sel)(db.tables())
+        p = li.masked_prob()
+        v = (li["l_quantity"] * li["l_discount"]).astype(p.dtype)
         la, an = pb.logcf_terms(p, v, num_freq)
         out["exact_coeffs"] = pb.logcf_finalize(la, an)
     return out
 
 
 def q18(db: TPCH, mode: str = "aggregate", qty_threshold: int = 150,
-        max_groups: int = 2048):
+        max_groups: int = 2048, mesh=None):
     """Large-volume customers: orders whose SUM(l_quantity) > threshold.
 
     The probabilistic version keeps every order with
     p = p_order * P(SUM > threshold)  (Table I row III reweight)."""
-    li = db.lineitem
-    ids, codes, gvalid = ops.group_ids(li, ["l_orderkey"], max_groups)
+    li = Scan("lineitem")
     if mode == "deterministic":
-        qty = jax.ops.segment_sum(jnp.where(li.valid, li["l_quantity"], 0),
+        t = db.lineitem
+        ids, _, gvalid = ops.group_ids(t, ["l_orderkey"], max_groups)
+        qty = jax.ops.segment_sum(jnp.where(t.valid, t["l_quantity"], 0),
                                   ids, num_segments=max_groups)
         return dict(valid=gvalid & (qty > qty_threshold), sum_qty=qty)
-    qty = li["l_quantity"].astype(li.prob.dtype)
-    mu, var = ops.group_normal_terms(li, qty, ids, max_groups)
-    p_gt = ops.normal_greater(mu, var, jnp.asarray(qty_threshold, mu.dtype))
-    conf = ops.group_atleastone(li, ids, max_groups)
+    rew = ReweightGreater(li, ("l_orderkey",), "l_quantity", "", max_groups,
+                          threshold=float(qty_threshold))
     if mode == "confidence":
         # P(at least one order qualifies) = 1 - prod_g (1 - conf_g * p_gt_g)
-        peach = jnp.where(gvalid, conf * p_gt, 0.0)
-        return dict(confidence=1.0 - jnp.exp(jnp.sum(jnp.log1p(-peach))))
+        return _confidence_of(rew, db, mesh)
     if mode == "group_confidence":
-        return dict(valid=gvalid, confidence=conf * p_gt)
-    return dict(valid=gvalid, sum_qty=(mu, var), p_qualifies=p_gt)
+        t = compile_plan(rew, mesh)(db.tables())
+        return dict(valid=t.valid, confidence=t.prob)
+    plan = GroupAgg(li, ("l_orderkey",), "l_quantity", "SUM", max_groups,
+                    "normal")
+    out = compile_plan(plan, mesh)(db.tables())
+    mu, var = out["sum"]
+    p_gt = ops.normal_greater(mu, var, jnp.asarray(qty_threshold, mu.dtype))
+    return dict(valid=out["valid"], sum_qty=(mu, var), p_qualifies=p_gt)
 
 
 def q20(db: TPCH, mode: str = "aggregate", nation_name: int = 3,
-        max_groups: int = 1024, avail_frac: float = 0.05):
+        max_groups: int = 1024, avail_frac: float = 0.05, mesh=None):
     """The paper's Fig. 6 plan: suppliers in one nation with excess stock of
     'forest' parts.
 
@@ -265,40 +296,29 @@ def q20(db: TPCH, mode: str = "aggregate", nation_name: int = 3,
         R9 = supplier |x| sigma_CANADA(nation)
         Q  = project(s_name) of R7 |x| R9
     """
-    r1 = ops.select(db.part, lambda t: t["p_name_forest"])
-    r2 = ops.fk_join(db.partsupp, r1, "ps_partkey", "p_partkey",
-                     ["p_name_forest"])
-    r3 = ops.select(db.lineitem,
-                    lambda t: (t["l_shipdate"] >= DAY0_1995 - 365)
-                    & (t["l_shipdate"] < DAY0_1995))
-    r4 = ops.fk_join(r3, r2, "l_pskey", "ps_pskey",
-                     ["ps_availqty", "ps_suppkey", "ps_pskey"])
-    ids, codes, gvalid = ops.group_ids(r4, ["ps_pskey"], max_groups)
-    qty = r4["l_quantity"].astype(r4.prob.dtype)
-    mu, var = ops.group_normal_terms(r4, qty, ids, max_groups)
-
-    # availqty / suppkey per group (all valid rows in a group agree).
-    gcols = ops.group_key_columns(
-        r4, ["ps_pskey", "ps_availqty", "ps_suppkey"], ids, max_groups)
-    avail, suppk = gcols["ps_availqty"], gcols["ps_suppkey"]
-
-    p_excess = ops.normal_greater(mu, var, avail.astype(mu.dtype) * avail_frac)
-    conf = ops.group_atleastone(r4, ids, max_groups)
-    r7 = Table({"ps_suppkey": suppk, "ps_pskey": gcols["ps_pskey"]},
-               conf * p_excess, gvalid)
-
-    nat = ops.select(db.nation, lambda t: t["n_name"] == nation_name)
-    r9 = ops.fk_join(db.supplier, nat, "s_nationkey", "n_nationkey",
-                     ["n_name"])
-    r10 = ops.fk_join(r7, r9, "ps_suppkey", "s_suppkey",
-                      ["s_name", "s_address"])
+    r1 = Select(Scan("part"), lambda t: t["p_name_forest"])
+    r2 = FKJoin(Scan("partsupp"), r1, "ps_partkey", "p_partkey",
+                ("p_name_forest",))
+    r3 = Select(Scan("lineitem"),
+                lambda t: (t["l_shipdate"] >= DAY0_1995 - 365)
+                & (t["l_shipdate"] < DAY0_1995))
+    r4 = FKJoin(r3, r2, "l_pskey", "ps_pskey",
+                ("ps_availqty", "ps_suppkey", "ps_pskey"))
+    r4t = Map(r4, "q20_thresh",
+              lambda t: t["ps_availqty"].astype(t.prob.dtype) * avail_frac)
+    r7 = ReweightGreater(r4t, ("ps_pskey",), "l_quantity", "q20_thresh",
+                         max_groups, carry_cols=("ps_suppkey",))
+    nat = Select(Scan("nation"), lambda t: t["n_name"] == nation_name)
+    r9 = FKJoin(Scan("supplier"), nat, "s_nationkey", "n_nationkey",
+                ("n_name",))
+    r10 = FKJoin(r7, r9, "ps_suppkey", "s_suppkey", ("s_name", "s_address"))
     if mode == "deterministic":
-        return dict(valid=r10.valid & (r10.prob > 0.5), s_name=r10["s_name"])
-    result = ops.project(r10, ["s_name"], max_groups=64)
+        t = compile_plan(r10, mesh)(db.tables())
+        return dict(valid=t.valid & (t.prob > 0.5), s_name=t["s_name"])
+    proj = Project(r10, ("s_name",), 64)
     if mode == "confidence":
-        from ..core.aggregates import AtLeastOne
-        st = AtLeastOne.accumulate(AtLeastOne.init(), result.masked_prob())
-        return dict(confidence=AtLeastOne.finalize(st))
+        return _confidence_of(proj, db, mesh)
+    result = compile_plan(proj, mesh)(db.tables())
     if mode == "group_confidence":
         return dict(valid=result.valid, s_name=result["s_name"],
                     confidence=result.prob)

@@ -46,15 +46,23 @@ def cumulants_ref(probs: jnp.ndarray, values: jnp.ndarray,
     """Partial cumulant sums s_j = sum_i v_i^j kappa_j(p_i), j = 1..orders.
 
     kappa_j(p) follows the paper's recursion kappa_{j+1} = p(1-p) dk_j/dp.
-    """
-    from repro.core.approx import cumulant_terms
-    return cumulant_terms(probs, values, orders)
+    Computed unblocked, directly from the polynomial table — independent of
+    the repro.core.uda accumulation (which may itself dispatch to the kernel
+    under test)."""
+    from repro.core.approx import MAX_ORDER, _bernoulli_cumulant_polys
+    dtype = probs.dtype
+    table = jnp.asarray(_bernoulli_cumulant_polys()[1:orders + 1], dtype)
+    powers = probs[None, :] ** jnp.arange(MAX_ORDER + 1, dtype=dtype)[:, None]
+    kappas = table @ powers                      # (orders, n)
+    vpow = values[None, :] ** jnp.arange(1, orders + 1, dtype=dtype)[:, None]
+    return jnp.sum(kappas * vpow, axis=-1)       # (orders,)
 
 
 def atleastone_ref(probs: jnp.ndarray, segment_ids: jnp.ndarray,
                    num_segments: int) -> jnp.ndarray:
-    """Per-group 1 - prod(1 - p) (paper Table I row V)."""
-    logq = jnp.log1p(-probs)
+    """Per-group 1 - prod(1 - p) (paper Table I row V), as a direct product
+    — independent of the log-domain accumulation in repro.core.uda."""
     import jax
-    acc = jax.ops.segment_sum(logq, segment_ids, num_segments=num_segments)
-    return 1.0 - jnp.exp(acc)
+    q = jax.ops.segment_prod(1.0 - probs, segment_ids,
+                             num_segments=num_segments)
+    return 1.0 - q

@@ -170,7 +170,7 @@ def calibrate(arch: str, shape: str, mesh) -> dict:
         for a in ("pod", "data"):
             if a in mesh.axis_names:
                 shards *= mesh.shape[a]
-        block = 2048                      # matches local_query_contrib cap
+        block = 2048                      # uda._block_size cap at qc.num_freq
         u1 = _lower_costs(C.build_pgf_cell(mesh, n_tuples=shards * block,
                                            unroll=True), mesh)
         u2 = _lower_costs(C.build_pgf_cell(mesh, n_tuples=2 * shards * block,

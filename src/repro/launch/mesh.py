@@ -7,12 +7,13 @@ from __future__ import annotations
 
 import jax
 
+from ..compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int | None = None, model: int | None = None):
@@ -23,5 +24,4 @@ def make_host_mesh(data: int | None = None, model: int | None = None):
         while model * 2 <= min(4, n) and n % (model * 2) == 0:
             model *= 2
         data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

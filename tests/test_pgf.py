@@ -1,9 +1,12 @@
-"""Dense PGF value type vs the possible-worlds oracle + hypothesis
-property tests on the polynomial-monoid invariants (paper §IV)."""
+"""Dense PGF value type vs the possible-worlds oracle + property tests on
+the polynomial-monoid invariants (paper §IV).
+
+The property tests run twice: under `hypothesis` when it is installed, and
+always via seeded `pytest.mark.parametrize` fallbacks so the invariants
+stay covered in offline/no-network environments."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import pgf as P
 from repro.core.config import default_float
@@ -91,13 +94,10 @@ def test_truncate_smallest_moves_mass_to_inf():
     assert float(g.total_mass()) == pytest.approx(1.0)
 
 
-# ----------------------------------------------------- hypothesis invariants
-probs_arrays = st.lists(st.floats(0.01, 0.99), min_size=1, max_size=8)
-
-
-@settings(max_examples=50, deadline=None)
-@given(probs_arrays, probs_arrays)
-def test_mass_conservation_under_mul(p1, p2):
+# ------------------------------------------------- property-test invariants
+# Each invariant is a plain checker; hypothesis (when importable) explores
+# the space, and the seeded parametrize fallbacks below always run.
+def _check_mass_conservation(p1, p2):
     """Polynomial-monoid closure (Prop. 1): coefficient sums stay 1."""
     a = mk(np.asarray(p1) / np.sum(p1))
     b = mk(np.asarray(p2) / np.sum(p2))
@@ -106,9 +106,7 @@ def test_mass_conservation_under_mul(p1, p2):
         assert np.all(np.asarray(prod.coeffs) >= -1e-12)
 
 
-@settings(max_examples=30, deadline=None)
-@given(probs_arrays, probs_arrays, probs_arrays)
-def test_mul_sum_associative_commutative(p1, p2, p3):
+def _check_mul_sum_associative_commutative(p1, p2, p3):
     a = mk(np.asarray(p1) / np.sum(p1))
     b = mk(np.asarray(p2) / np.sum(p2))
     c = mk(np.asarray(p3) / np.sum(p3))
@@ -121,12 +119,59 @@ def test_mul_sum_associative_commutative(p1, p2, p3):
                                np.asarray(ba_c.coeffs), atol=1e-9)
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.floats(0.01, 0.99), min_size=2, max_size=10))
-def test_mean_of_count_is_sum_of_probs(ps):
+def _check_mean_of_count_is_sum_of_probs(ps):
     from repro.core import poisson_binomial as pb
     f = pb.count_pgf(jnp.asarray(ps, default_float()))
     assert float(f.mean()) == pytest.approx(float(np.sum(ps)), abs=1e-8)
+
+
+def _rand_probs(rng, max_size=8, min_size=1):
+    return rng.uniform(0.01, 0.99,
+                       int(rng.integers(min_size, max_size + 1))).tolist()
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_mass_conservation_under_mul_seeded(seed):
+    r = np.random.default_rng(seed)
+    _check_mass_conservation(_rand_probs(r), _rand_probs(r))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_mul_sum_associative_commutative_seeded(seed):
+    r = np.random.default_rng(100 + seed)
+    _check_mul_sum_associative_commutative(_rand_probs(r), _rand_probs(r),
+                                           _rand_probs(r))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_mean_of_count_is_sum_of_probs_seeded(seed):
+    r = np.random.default_rng(200 + seed)
+    _check_mean_of_count_is_sum_of_probs(_rand_probs(r, max_size=10,
+                                                     min_size=2))
+
+
+def test_mass_conservation_under_mul_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    arrays = st.lists(st.floats(0.01, 0.99), min_size=1, max_size=8)
+    settings(max_examples=50, deadline=None)(
+        given(arrays, arrays)(_check_mass_conservation))()
+
+
+def test_mul_sum_associative_commutative_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    arrays = st.lists(st.floats(0.01, 0.99), min_size=1, max_size=8)
+    settings(max_examples=30, deadline=None)(
+        given(arrays, arrays, arrays)(_check_mul_sum_associative_commutative))()
+
+
+def test_mean_of_count_is_sum_of_probs_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    settings(max_examples=30, deadline=None)(
+        given(st.lists(st.floats(0.01, 0.99), min_size=2, max_size=10))(
+            _check_mean_of_count_is_sum_of_probs))()
 
 
 def test_cdf_and_confidence_interval(rng):

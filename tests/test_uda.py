@@ -1,0 +1,252 @@
+"""The grouped segment-UDA subsystem vs the 2^n possible-worlds oracle.
+
+Every registered UDA is checked grouped, masked, and with its state merged
+in two halves (any partition + any merge tree must give the same final
+distribution — that's what makes the shard_map/psum execution valid), plus
+a compile_plan(mesh) == compile_plan(None) equivalence on a 2-device CPU
+mesh (subprocess, own XLA_FLAGS)."""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import uda
+from repro.core.config import default_float
+from repro.core.pgf import possible_worlds_pgf
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+G = 4
+
+
+def _data(seed, n=14):
+    r = np.random.default_rng(seed)
+    p = r.uniform(0.05, 0.95, n)
+    v = r.integers(1, 8, n).astype(float)
+    g = r.integers(0, G, n)
+    mask = r.uniform(0, 1, n) > 0.25
+    return p, v, g, mask
+
+
+def _states(u, p, v, g):
+    """(one-shot state, merged-in-two-halves state) through the canonical
+    accumulation loop."""
+    dt = default_float()
+    pj, vj, gj = (jnp.asarray(p, dt), jnp.asarray(v, dt), jnp.asarray(g))
+    one = uda.accumulate({"u": u}, pj, vj, gj, max_groups=G)["u"]
+    h = p.shape[0] // 2
+    a = uda.accumulate({"u": u}, pj[:h], vj[:h], gj[:h], max_groups=G)["u"]
+    b = uda.accumulate({"u": u}, pj[h:], vj[h:], gj[h:], max_groups=G)["u"]
+    return one, u.merge(a, b)
+
+
+def _oracles(p, v, g, mask, monoid):
+    p = np.where(mask, p, 0.0)
+    return {gi: possible_worlds_pgf(p[g == gi], v[g == gi], monoid)
+            for gi in range(G)}
+
+
+def _moment(oracle, k, mu=0.0):
+    return sum(pr * (x - mu) ** k for x, pr in oracle.items()
+               if np.isfinite(x))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_atleastone_parity(seed):
+    p, v, g, mask = _data(seed)
+    pm = np.where(mask, p, 0.0)
+    for st in _states(uda.AtLeastOne(), pm, v, g):
+        conf = np.asarray(uda.AtLeastOne().finalize(st))
+        for gi, oracle in _oracles(p, v, g, mask, "COUNT").items():
+            want = 1.0 - oracle.get(0.0, 0.0)
+            assert conf[gi] == pytest.approx(want, abs=1e-12), (seed, gi)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_normal_parity(seed):
+    p, v, g, mask = _data(seed)
+    pm = np.where(mask, p, 0.0)
+    u = uda.SumNormal()
+    for st in _states(u, pm, v, g):
+        mu, var = map(np.asarray, u.finalize(st))
+        for gi, oracle in _oracles(p, v, g, mask, "SUM").items():
+            m1 = _moment(oracle, 1)
+            assert mu[gi] == pytest.approx(m1, abs=1e-10)
+            assert var[gi] == pytest.approx(_moment(oracle, 2, m1), abs=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_cumulants_parity(seed):
+    p, v, g, mask = _data(seed)
+    pm = np.where(mask, p, 0.0)
+    u = uda.SumCumulants(6)
+    for st in _states(u, pm, v, g):
+        terms = np.asarray(u.finalize(st))
+        for gi, oracle in _oracles(p, v, g, mask, "SUM").items():
+            m1 = _moment(oracle, 1)
+            m2 = _moment(oracle, 2, m1)
+            m3 = _moment(oracle, 3, m1)      # 3rd central == 3rd cumulant
+            assert terms[gi, 0] == pytest.approx(m1, abs=1e-10)
+            assert terms[gi, 1] == pytest.approx(m2, abs=1e-9)
+            assert terms[gi, 2] == pytest.approx(m3, abs=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_cf_parity(seed):
+    p, v, g, mask = _data(seed)
+    pm = np.where(mask, p, 0.0)
+    num_freq = int(v.sum()) + 1
+    u = uda.SumCF(num_freq)
+    for st in _states(u, pm, v, g):
+        coeffs = np.asarray(u.finalize(st))
+        for gi, oracle in _oracles(p, v, g, mask, "SUM").items():
+            for outcome, pr in oracle.items():
+                assert coeffs[gi, int(outcome)] == pytest.approx(
+                    pr, abs=1e-10), (seed, gi, outcome)
+
+
+@pytest.mark.parametrize("name,monoid", [("min", "MIN"), ("max", "MAX")])
+@pytest.mark.parametrize("seed", range(3))
+def test_minmax_parity(name, monoid, seed):
+    p, v, g, mask = _data(seed)
+    pm = np.where(mask, p, 0.0)
+    u = uda.make(name, kappa=16)
+    for st in _states(u, pm, v, g):
+        vals, mass, p_tail = map(np.asarray, u.finalize(st))
+        pe = np.asarray(u.p_empty(st))
+        for gi, oracle in _oracles(p, v, g, mask, monoid).items():
+            for outcome, pr in oracle.items():
+                if np.isinf(outcome):
+                    assert p_tail[gi] == pytest.approx(pr, abs=1e-12)
+                    assert pe[gi] == pytest.approx(pr, abs=1e-12)
+                else:
+                    got = mass[gi][vals[gi] == outcome].sum()
+                    assert got == pytest.approx(pr, abs=1e-12), \
+                        (name, seed, gi, outcome)
+
+
+def test_minmax_truncation_tail():
+    """kappa smaller than the support: dropped mass lands in the tail and
+    the kept+tail masses stay a distribution (§V-B.2)."""
+    n = 10
+    p = np.full(n, 0.5)
+    v = np.arange(n, dtype=float)
+    u = uda.MinMax(kappa=4)
+    st = uda.accumulate({"u": u}, jnp.asarray(p, default_float()),
+                        jnp.asarray(v, default_float()), None,
+                        max_groups=1)["u"]
+    _, mass, p_tail = u.finalize(st)
+    assert float(np.asarray(mass).sum() + p_tail[0]) == pytest.approx(1.0)
+    assert float(p_tail[0]) == pytest.approx(0.5 ** 4)
+    assert float(u.p_empty(st)[0]) == pytest.approx(0.5 ** n)
+
+
+def test_scalar_is_one_group(rng):
+    """gids=None (the scalar facade's path) == explicit single group."""
+    p = jnp.asarray(rng.uniform(0.1, 0.9, 20), default_float())
+    v = jnp.asarray(rng.integers(1, 5, 20), default_float())
+    u = uda.SumCF(int(np.asarray(v).sum()) + 1)
+    a = uda.accumulate({"u": u}, p, v, None, max_groups=1)["u"]
+    b = uda.accumulate({"u": u}, p, v, jnp.zeros((20,), jnp.int32),
+                       max_groups=1)["u"]
+    np.testing.assert_allclose(np.asarray(a.log_abs), np.asarray(b.log_abs),
+                               atol=1e-12)
+
+
+def test_every_registered_uda_constructs():
+    import jax
+    args = {"cf": dict(num_freq=8), "count_cf": dict(capacity=7)}
+    for name in uda.REGISTRY:
+        u = uda.make(name, **args.get(name, {}))
+        st = u.init(3)
+        for leaf in jax.tree.leaves(st):
+            assert leaf.shape[0] == 3, name     # vectorised over groups
+        m = u.merge(st, st)                     # merge preserves shapes
+        assert jax.tree.map(jnp.shape, m) == jax.tree.map(jnp.shape, st)
+
+
+# --------------------------------------------------- mesh-aware compilation
+def run_sub(script: str, devices: int = 2) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.multidevice
+def test_compile_plan_mesh_equivalence():
+    """compile_plan(root, mesh) == compile_plan(root) on a 2-device CPU
+    mesh, across GroupAgg methods, MIN/MAX, and ReweightGreater."""
+    out = run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
+from repro.core import enable_x64
+enable_x64()
+from repro.db import tpch
+from repro.db.plans import GroupAgg, ReweightGreater, Scan, compile_plan
+mesh = make_mesh((2,), ("data",))
+db = tpch.generate(n_orders=64, seed=5)
+tables = db.tables()
+plans = [
+    GroupAgg(Scan("lineitem"), ("l_returnflag", "l_linestatus"),
+             "l_quantity", "SUM", 8, "normal",
+             extra=(("c", "l_quantity", "SUM", "cumulants"),
+                    ("n", "", "COUNT", "normal"))),
+    GroupAgg(Scan("lineitem"), ("l_returnflag",), "l_quantity", "MIN", 8,
+             kappa=64),
+    GroupAgg(Scan("lineitem"), ("l_returnflag",), "l_quantity", "MAX", 8,
+             kappa=64),
+    ReweightGreater(Scan("lineitem"), ("l_orderkey",), "l_quantity", "",
+                    128, threshold=80.0),
+]
+def check(ref, got, ctx):
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        a = jnp.asarray(a, jnp.float64)
+        b = jnp.asarray(b, jnp.float64)
+        # MIN/MAX value buffers carry +/-inf pads: masks must agree exactly,
+        # finite entries to 1e-6 (relative for the ~1e13 cumulant terms,
+        # where psum reordering noise scales with magnitude).
+        fa, fb = jnp.isfinite(a), jnp.isfinite(b)
+        assert bool(jnp.all(fa == fb)), ctx
+        af = jnp.where(fa, a, 0.0)
+        d = float(jnp.max(jnp.abs(af - jnp.where(fb, b, 0.0))))
+        assert d < 1e-6 * (1.0 + float(jnp.max(jnp.abs(af)))), (ctx, d)
+
+for plan in plans:
+    check(compile_plan(plan, None)(tables),
+          compile_plan(plan, mesh)(tables), plan)
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.multidevice
+@pytest.mark.slow
+def test_tpch_queries_mesh_equivalence():
+    """Every TPC-H query/mode through the planner on a mesh matches the
+    single-device compile to 1e-6 (the fig7 benchmark contract)."""
+    out = run_sub("""
+import jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core import enable_x64
+enable_x64()
+from repro.db import tpch
+mesh = make_mesh((2,), ("data",))
+db = tpch.generate(n_orders=48, seed=3)
+for qname, fn in tpch.QUERIES.items():
+    for mode in ("confidence", "group_confidence", "aggregate"):
+        ref = fn(db, mode)
+        got = fn(db, mode, mesh=mesh)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            a = jnp.asarray(a, jnp.float64)
+            d = float(jnp.max(jnp.abs(a - jnp.asarray(b, jnp.float64))))
+            assert d < 1e-6 * (1.0 + float(jnp.max(jnp.abs(a)))), \
+                (qname, mode, d)
+print("OK")
+""")
+    assert "OK" in out
