@@ -1,5 +1,6 @@
 """Roofline table builder: reads the dry-run artifacts and emits the
-per-(arch x shape x mesh) analysis (EXPERIMENTS.md §Roofline).
+per-(arch x shape x mesh) analysis (EXPERIMENTS.md §Roofline), plus the
+grouped-CF kernel tile sweep.
 
     compute term    = HLO_FLOPs / peak_FLOPs            (per chip)
     memory term     = HLO_bytes / HBM_bw                (per chip)
@@ -7,16 +8,82 @@ per-(arch x shape x mesh) analysis (EXPERIMENTS.md §Roofline).
 
 plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) and the useful-compute
 ratio MODEL_FLOPS / (chips * HLO_FLOPs).
+
+The sweep (``--sweep-group-cf``, also part of ``bench()``) times the
+(G, F)-tiled grouped log-CF kernel (`repro.kernels.group_cf`) across
+(gb, fb, tb) block shapes so tile choices are measured, not guessed —
+on CPU the kernel runs in interpret mode at reduced problem sizes (the
+numbers rank tilings; absolute throughput only means something on TPU).
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import sys
+import time
 
 from repro.configs import SHAPES, base as cfgs
 
 ARTIFACT_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+#: (gb, fb, tb) grouped-CF tilings worth comparing: the default, wider and
+#: narrower frequency tiles (lane multiples), deeper tuple streaming, and a
+#: taller group tile (two f32 sublane quanta).
+GROUP_CF_TILES = ((8, 256, 512), (8, 128, 512), (8, 512, 512),
+                  (8, 256, 1024), (16, 256, 512))
+
+
+def group_cf_flops(n: int, num_freq: int, gb: int) -> float:
+    """Analytic flop count of one grouped log-CF accumulation: ~46
+    flop-equivalents per (tuple, frequency) pair for the phase tile
+    (modmult, cos/sin, |z|^2, log, atan2) plus the 2*gb-wide mask-matmul
+    scatter each tuple block pays for the one group block it intersects
+    (inputs are sorted by group, so non-intersecting blocks are skipped)."""
+    return (46.0 + 2.0 * gb) * n * num_freq
+
+
+def sweep_group_cf(n: int | None = None, num_groups: int = 64,
+                   num_freq: int | None = None, tiles=GROUP_CF_TILES,
+                   repeat: int = 3):
+    """Time the grouped-CF kernel per (gb, fb, tb) tiling; returns rows."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import group_cf
+
+    on_cpu = jax.default_backend() == "cpu"
+    if n is None:
+        n = 4096 if on_cpu else 1 << 18
+    if num_freq is None:
+        # Keep F >= the widest fb in `tiles` even at the reduced CPU size:
+        # a frequency grid smaller than a tile's fb would time that tiling
+        # with pure padding lanes and mis-rank it.
+        num_freq = 512 if on_cpu else 2048
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.uniform(0.01, 0.99, n), jnp.float32)
+    v = jnp.asarray(rng.integers(0, 50, n), jnp.int32)
+    g = jnp.asarray(rng.integers(0, num_groups, n), jnp.int32)
+
+    rows = []
+    for gb, fb, tb in tiles:
+        flops = group_cf_flops(n, num_freq, gb)
+        def run(gb=gb, fb=fb, tb=tb):
+            return jax.block_until_ready(group_cf.group_logcf(
+                p, v, g, num_groups=num_groups, num_freq=num_freq,
+                gb=gb, fb=fb, tb=tb))
+        run()                                        # compile + warm
+        best = float("inf")
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            run()
+            best = min(best, time.perf_counter() - t0)
+        rows.append((
+            f"roofline/group_cf/gb{gb}xfb{fb}xtb{tb}", best * 1e6,
+            f"n={n};G={num_groups};F={num_freq};"
+            f"{flops / best / 1e9:.2f}GFLOP/s"
+            + (";interpret" if on_cpu else "")))
+    return rows
 
 
 def model_flops(arch: str, shape: str) -> float:
@@ -84,7 +151,7 @@ def _mem_gb(res) -> float:
 
 def bench():
     rows = load_rows()
-    out = []
+    out = sweep_group_cf()
     for r in rows:
         if r.get("error"):
             out.append((f"roofline/{r['cell']}", float("nan"), "ERROR"))
@@ -115,5 +182,9 @@ def markdown_table(rows) -> str:
 
 
 if __name__ == "__main__":
-    rows = load_rows()
-    print(markdown_table(rows))
+    if "--sweep-group-cf" in sys.argv:
+        for name, us, extra in sweep_group_cf():
+            print(f"{name},{us:.1f},{extra}")
+    else:
+        rows = load_rows()
+        print(markdown_table(rows))

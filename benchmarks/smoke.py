@@ -1,27 +1,47 @@
-"""Per-PR perf smoke: one tiny planner-compiled TPC-H query per UDA method.
+"""Per-PR perf smoke: one tiny planner-compiled TPC-H query per UDA method,
+gated against a checked-in baseline.
 
 Runs Q3-shaped GroupAgg plans through ``compile_plan`` (the unified
-segment-UDA path) for every aggregation method — normal, cumulants,
-min/max — plus the ReweightGreater plan shape, and prints wall times, so
-refactors of the UDA subsystem show perf regressions per-PR.
+segment-UDA path) for every aggregation method — normal, cumulants, exact
+(grouped log-CF), min/max — plus the ReweightGreater plan shape, and prints
+wall times, so refactors of the UDA subsystem show perf regressions per-PR.
+It also measures the grouped-exact planner path against a per-group scalar
+``logcf`` loop (the pre-kernel execution strategy) at G >= 64.
 
-    PYTHONPATH=src python benchmarks/smoke.py [--mesh]
+    PYTHONPATH=src python benchmarks/smoke.py [--mesh] [--check] [--update]
 
---mesh additionally compiles the same plans against a host-device mesh and
-reports the distributed timings (requires >1 device or XLA_FLAGS host
-device count).
+--check  compares against benchmarks/BENCH_smoke_baseline.json and exits
+         nonzero on a > ``TOLERANCE``x per-method regression (or on a
+         grouped-exact speedup below ``MIN_EXACT_SPEEDUP``x).
+--update rewrites the baseline from this run.
+--mesh   additionally compiles the same plans against a host-device mesh and
+         reports the distributed timings (requires >1 device or XLA_FLAGS
+         host device count).
+
+Timings are best-of-``repeat`` (not mean): the gate needs the low-noise
+floor of each method, not its scheduler-jitter average.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
 
 from repro.db import tpch
 from repro.db.plans import GroupAgg, ReweightGreater, Scan, Select, compile_plan
+
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_smoke_baseline.json")
+TOLERANCE = 1.3             # per-method regression gate (cur <= tol * base)
+MIN_EXACT_SPEEDUP = 5.0     # grouped exact vs per-group scalar loop floor
 
 
 def _plans(max_groups: int = 256):
@@ -32,6 +52,11 @@ def _plans(max_groups: int = 256):
                            "normal"),
         "cumulants": GroupAgg(li, keys, "l_quantity", "SUM", max_groups,
                               "cumulants"),
+        # exact grouped SUM + COUNT distributions sharing one pass; per-order
+        # quantity sums fit the 256-frequency grid of the synthetic data.
+        "exact": GroupAgg(li, keys, "l_quantity", "SUM", max_groups,
+                          "exact", num_freq=256,
+                          extra=(("count", "", "COUNT", "exact"),)),
         "min": GroupAgg(li, keys, "l_quantity", "MIN", max_groups, kappa=32),
         "max": GroupAgg(li, keys, "l_quantity", "MAX", max_groups, kappa=32),
         "reweight": ReweightGreater(li, keys, "l_quantity", "", max_groups,
@@ -39,33 +64,120 @@ def _plans(max_groups: int = 256):
     }
 
 
-def bench(n_orders: int = 1000, repeat: int = 3, mesh=None):
+def _time(fn, args, repeat):
+    out = fn(*args)                                  # compile + warm
+    jax.block_until_ready(jax.tree.leaves(out))
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(jax.tree.leaves(out))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench(n_orders: int = 1000, repeat: int = 5, mesh=None):
     db = tpch.generate(n_orders=n_orders, seed=0)
     tables = db.tables()
     rows = []
     for method, plan in _plans().items():
         fn = jax.jit(compile_plan(plan, mesh))
-        out = fn(tables)                             # compile + warm
-        jax.block_until_ready(jax.tree.leaves(out))
-        t0 = time.perf_counter()
-        for _ in range(repeat):
-            out = fn(tables)
-            jax.block_until_ready(jax.tree.leaves(out))
-        dt = (time.perf_counter() - t0) / repeat
+        dt = _time(fn, (tables,), repeat)
         tag = "mesh" if mesh is not None else "1dev"
         rows.append((f"smoke/{method}/{tag}", dt * 1e6,
                      f"n_orders={n_orders}"))
     return rows
 
 
-def main():
-    for name, us, extra in bench():
-        print(f"{name},{us:.1f},{extra}")
+def bench_exact_speedup(G: int = 64, tuples_per_group: int = 64,
+                        num_freq: int = 256, repeat: int = 3):
+    """Grouped-exact planner path vs the per-group scalar logcf loop it
+    replaces: G separate single-group CF accumulations over the full
+    (masked) tuple column, i.e. the only way to run grouped exact before
+    the (G, F)-tiled path existed."""
+    from repro.core import uda
+    from repro.db.table import Table
+
+    rng = np.random.default_rng(0)
+    n = G * tuples_per_group
+    gids = jnp.asarray(rng.integers(0, G, n), jnp.int32)
+    probs = jnp.asarray(rng.uniform(0.0, 1.0, n), jnp.float32)
+    vals = jnp.asarray(rng.integers(1, 4, n), jnp.int32)
+    t = Table.from_columns({"g": gids, "v": vals}, prob=probs)
+    plan = GroupAgg(Scan("t"), ("g",), "v", "SUM", G, "exact",
+                    num_freq=num_freq)
+    grouped = jax.jit(compile_plan(plan))
+    t_grouped = _time(grouped, ({"t": t},), repeat)
+
+    @jax.jit
+    def loop(p, v):
+        rows = []
+        for g in range(G):
+            pg = jnp.where(gids == g, p, 0.0)
+            st = uda.accumulate({"cf": uda.SumCF(num_freq)}, pg, v, None,
+                                max_groups=1)["cf"]
+            rows.append(uda.SumCF(num_freq).finalize(st)[0])
+        return jnp.stack(rows)
+    t_loop = _time(loop, (probs, vals), repeat)
+    return [(f"smoke/exact_speedup/G{G}", t_loop / max(t_grouped, 1e-12),
+             f"grouped={t_grouped * 1e6:.1f}us,loop={t_loop * 1e6:.1f}us")]
+
+
+def _check(rows) -> int:
+    if not os.path.exists(BASELINE_PATH):
+        print(f"FAIL: no baseline at {BASELINE_PATH}; run --update first")
+        return 1
+    with open(BASELINE_PATH) as f:
+        base = json.load(f)["rows"]
+    failures = 0
+    missing = set(base) - {name for name, _, _ in rows}
+    for name in sorted(missing):   # a dropped/renamed method is a failure,
+        print(f"FAIL {name}: in baseline but not measured "
+              "(renamed or broken method? run --update to drop it)")
+        failures += 1              # not a silently disarmed gate
+    for name, value, _ in rows:
+        if name.startswith("smoke/exact_speedup"):
+            if value < MIN_EXACT_SPEEDUP:
+                print(f"FAIL {name}: speedup {value:.2f}x < "
+                      f"{MIN_EXACT_SPEEDUP}x floor")
+                failures += 1
+            continue
+        if name not in base:
+            print(f"WARN {name}: not in baseline (run --update to record)")
+            continue
+        if value > TOLERANCE * base[name]:
+            print(f"FAIL {name}: {value:.1f}us > {TOLERANCE} x "
+                  f"{base[name]:.1f}us baseline")
+            failures += 1
+    print("CHECK " + ("FAILED" if failures else "PASSED")
+          + f" ({len(rows)} rows, tol {TOLERANCE}x)")
+    return 1 if failures else 0
+
+
+def _update(rows):
+    recorded = {name: us for name, us, _ in rows
+                if not name.startswith("smoke/exact_speedup")}
+    with open(BASELINE_PATH, "w") as f:
+        json.dump({"tolerance": TOLERANCE, "repeat": "best-of",
+                   "rows": recorded}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {BASELINE_PATH} ({len(recorded)} rows)")
+
+
+def main() -> int:
+    rows = bench()
+    rows += bench_exact_speedup()
     if "--mesh" in sys.argv and len(jax.devices()) > 1:
         from repro.launch.mesh import make_host_mesh
-        for name, us, extra in bench(mesh=make_host_mesh()):
-            print(f"{name},{us:.1f},{extra}")
+        rows += bench(mesh=make_host_mesh())
+    for name, v, extra in rows:
+        print(f"{name},{v:.1f},{extra}")
+    if "--update" in sys.argv:
+        _update(rows)
+    if "--check" in sys.argv:
+        return _check(rows)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -23,8 +23,10 @@ blocked-scan tiling previously private to ``db/distributed.py``): ONE
 ``lax.scan`` over tuple blocks feeds every streaming UDA at once, so a
 multi-aggregate query reads its tuples exactly once, and the (block, F)
 phase tile of the exact-CF path is the only large live intermediate.  On
-TPU the scalar CF / cumulant accumulations dispatch to the Pallas kernels
-(:mod:`repro.kernels.pb_cf`, :mod:`repro.kernels.cumulants`).
+TPU the CF / cumulant accumulations dispatch to the Pallas kernels: scalar
+states to :mod:`repro.kernels.pb_cf` / :mod:`repro.kernels.cumulants`,
+grouped CF states to the (G, F)-tiled :mod:`repro.kernels.group_cf`
+(``SumCF.accumulate_full``), with the pure-JAX oracles as CPU fallback.
 
 Registered UDAs (paper §V / §VI / §VII):
 
@@ -234,6 +236,28 @@ class SumCF(UDA):
         z = jnp.zeros((max_groups, self.freq_cnt), dtype or default_float())
         return CFState(z, z)
 
+    def accumulate_full(self, state, probs, values, gids, max_groups,
+                        use_kernel: bool | None = None) -> CFState:
+        """Whole-column accumulate, dispatching to the (G, F)-tiled Pallas
+        kernel (:mod:`repro.kernels.group_cf`) when eligible; the pure-JAX
+        oracle handles small inputs and non-f32 dtypes, and the kernel
+        itself runs in interpret mode on CPU backends.  Requires a static
+        int ``freq_lo`` (the model-sharded traced case stays on the blocked
+        scan path) and integer-valued ``values``.
+        """
+        from ..kernels import ops as kops
+        if max_groups == 1 and use_kernel and self.freq_lo == 0 \
+                and self.freq_cnt == self.num_freq:
+            la, an = kops.logcf(probs, values, self.num_freq)
+            return CFState(state.log_abs + la[None], state.angle + an[None])
+        if gids is None:
+            gids = jnp.zeros(probs.shape, jnp.int32)
+        la, an = kops.group_logcf(probs, values, gids, max_groups,
+                                  self.num_freq, freq_lo=self.freq_lo,
+                                  freq_cnt=self.freq_cnt,
+                                  use_kernel=use_kernel)
+        return CFState(state.log_abs + la, state.angle + an)
+
     def update(self, state, probs, values, gids) -> CFState:
         dtype = probs.dtype
         k = self.freq_lo + jnp.arange(self.freq_cnt, dtype=dtype)
@@ -437,26 +461,29 @@ def _groups_of(u: UDA, max_groups: int) -> int:
 
 def _kernel_eligible(u: UDA, max_groups: int, probs, values_integral: bool) \
         -> bool:
-    """Scalar CF / cumulant accumulations can run on the Pallas kernels —
-    only under the same guards as kernels/ops.py (f32, enough tuples to
-    amortise block padding), and for CF only with integer-typed values
-    (the kernel's exact phase arithmetic truncates to int32)."""
+    """CF / cumulant accumulations can run on the Pallas kernels — only
+    under the same guards as kernels/ops.py (f32, enough tuples to amortise
+    block padding), and for CF only with integer-typed values and a static
+    frequency window (the kernel's exact phase arithmetic truncates to
+    int32; a traced model-sharded freq_lo can't parameterise the static
+    grid).  Grouped CF states dispatch to the (G, F)-tiled group_cf kernel;
+    cumulants stay scalar-only."""
     from ..kernels import ops as kops
-    if _groups_of(u, max_groups) != 1:
-        return False
     if probs.dtype != jnp.float32 or probs.shape[0] < kops.MIN_KERNEL_TUPLES:
         return False
     if isinstance(u, SumCF):
         return values_integral and isinstance(u.freq_lo, int) \
-            and u.freq_lo == 0 and u.freq_cnt == u.num_freq
-    return isinstance(u, SumCumulants)
+            and u.num_freq <= kops.MAX_KERNEL_FREQ
+    return isinstance(u, SumCumulants) and _groups_of(u, max_groups) == 1
 
 
-def _kernel_accumulate(u: UDA, state, probs, values):
+def _kernel_accumulate(u: UDA, state, probs, values, gids, max_groups):
     from ..kernels import ops as kops
     if isinstance(u, SumCF):
-        la, an = kops.logcf(probs, values, u.num_freq)
-        return CFState(state.log_abs + la[None], state.angle + an[None])
+        g = _groups_of(u, max_groups)
+        return u.accumulate_full(state, probs, values,
+                                 None if g == 1 else gids, g,
+                                 use_kernel=True)
     sums = kops.cumulant_sums(probs, values, orders=u.orders)
     return CumulantState(state.terms + sums[None])
 
@@ -473,8 +500,9 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
              per-aggregate value columns; None means all-ones (COUNT).
     gids:    (n,) int group ids in [0, max_groups); None = all group 0.
     states:  optional prior states to continue from (default: init).
-    kernel:  'auto' | 'pallas' | 'xla' — 'auto' dispatches eligible scalar
-             accumulations to the Pallas kernels on TPU backends.
+    kernel:  'auto' | 'pallas' | 'xla' — 'auto' dispatches eligible
+             accumulations (scalar CF / cumulants, grouped CF) to the
+             Pallas kernels on TPU backends.
 
     Returns {name: state}.
     """
@@ -489,19 +517,30 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
     if not isinstance(values, dict):
         values = {name: values for name in udas}
     ones = None
-    val_arrays, val_index, val_integral = [], {}, []
+    # Convert each distinct source column exactly once, keyed on the
+    # caller's object (alive in `values` for the whole call, so ids are
+    # stable): a column shared by several UDAs keeps one scan-carried copy
+    # even when the cast to the prob dtype would otherwise fork it.  The
+    # pre-cast source rides along in `val_sources` — the exact-CF kernels
+    # consume integer columns directly (a float32 round-trip would corrupt
+    # values above 2^24).
+    casts: dict = {}
+    val_arrays, val_index, val_integral, val_sources = [], {}, [], []
     for name in udas:
         v = values.get(name)
         if v is None:
             if ones is None:
                 ones = jnp.ones((n,), dtype)
-            v = ones
+            v = src = ones
             integral = True        # COUNT: all-ones
         else:
-            src = jnp.asarray(v)
-            integral = jnp.issubdtype(src.dtype, jnp.integer) \
-                or src.dtype == jnp.bool_
-            v = src.astype(dtype) if src.dtype != dtype else src
+            if id(v) not in casts:
+                s = jnp.asarray(v)
+                casts[id(v)] = (
+                    s.astype(dtype) if s.dtype != dtype else s,
+                    jnp.issubdtype(s.dtype, jnp.integer)
+                    or s.dtype == jnp.bool_, s)
+            v, integral, src = casts[id(v)]
         for i, existing in enumerate(val_arrays):
             if existing is v:
                 val_index[name] = i
@@ -510,6 +549,7 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
             val_index[name] = len(val_arrays)
             val_arrays.append(v)
             val_integral.append(integral)
+            val_sources.append(src)
 
     if states is None:
         states = {}
@@ -537,8 +577,12 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
                                          val_arrays[val_index[name]],
                                          g_u, _groups_of(u, max_groups))
     for name, u in kernel_udas.items():
-        states[name] = _kernel_accumulate(u, states[name], probs,
-                                          val_arrays[val_index[name]])
+        # CF kernels take the pre-cast (integer) source; the cumulant
+        # kernel computes float value powers and takes the cast column.
+        i = val_index[name]
+        vals = val_sources[i] if isinstance(u, SumCF) else val_arrays[i]
+        states[name] = _kernel_accumulate(u, states[name], probs, vals,
+                                          gids_full, max_groups)
     if not scan_udas:
         return states
 

@@ -182,7 +182,11 @@ def group_cumulant_terms(table: Table, values, ids, max_groups: int,
 def group_logcf(table: Table, values, ids, max_groups: int, num_freq: int,
                 block: int = 512):
     """Per-group summed log CF -> (G, F) log_abs and angle (exact SUM/COUNT
-    per group), via the canonical blocked loop of core/uda.py."""
+    per group), via the canonical loop of core/uda.py — which dispatches
+    grouped CF states to the (G, F)-tiled Pallas kernel
+    (:mod:`repro.kernels.group_cf`) on TPU backends and to the blocked scan
+    elsewhere.  Plans reach the same path as ``GroupAgg(method="exact")``,
+    which additionally chunks the (G, F) state over frequency slabs."""
     st = uda.accumulate({"cf": uda.SumCF(num_freq)}, table.masked_prob(),
                         values, ids, max_groups=max_groups, block=block)["cf"]
     return st.log_abs, st.angle

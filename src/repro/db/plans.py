@@ -82,19 +82,29 @@ class GroupAgg(Node):
     """Returns a dict of per-group UDA results, not a Table (PGF-valued
     columns live outside the 1NF Table, §VI-C).
 
-    The primary aggregate lands under "sum" / "cumulants" / "minmax" (by
-    method/agg); each `extra` entry (name, value_col, agg, method) rides the
-    SAME accumulation pass and lands under its own name.  Group confidence
-    (AtLeastOne) is always included.  `value` == "" means COUNT (all-ones).
+    The primary aggregate lands under "sum" / "cumulants" / "exact" /
+    "minmax" (by method/agg); each `extra` entry (name, value_col, agg,
+    method) rides the SAME accumulation pass and lands under its own name.
+    Group confidence (AtLeastOne) is always included.  `value` == "" means
+    COUNT (all-ones).
+
+    ``method="exact"`` computes the full per-group SUM/COUNT distribution
+    via the grouped log-CF UDA (Pallas-accelerated on TPU) and requires
+    ``num_freq`` = max aggregate value + 1; the result is a (max_groups,
+    num_freq) row-stochastic coefficient matrix.  When max_groups *
+    num_freq exceeds the planner's ``cf_budget_elems``, the compiler
+    accumulates the state in multiple passes over frequency slabs (each
+    slab additively psum-merged on a mesh) — see ``compile_plan``.
     """
     child: Node
     keys: tuple
     value: str            # column to aggregate ("" = COUNT)
     agg: str              # SUM | COUNT | MIN | MAX
     max_groups: int
-    method: str = "normal"  # normal | cumulants  (exact: ROADMAP open item)
+    method: str = "normal"  # normal | cumulants | exact
     extra: tuple = ()
     kappa: int = 64       # MIN/MAX support capacity per group
+    num_freq: int = 0     # exact: distribution capacity (max sum + 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,17 +123,27 @@ class ReweightGreater(Node):
     carry_cols: tuple = ()
 
 
-def _agg_uda(agg: str, method: str, kappa: int) -> uda.UDA:
+def _agg_uda(agg: str, method: str, kappa: int, num_freq: int = 0,
+             freq_lo: int = 0, freq_cnt: int | None = None) -> uda.UDA:
     if agg in ("SUM", "COUNT"):
         if method == "normal":
             return uda.SumNormal()
         if method == "cumulants":
             return uda.SumCumulants()
+        if method == "exact":
+            if num_freq <= 0:
+                raise ValueError(
+                    "GroupAgg(method='exact') needs num_freq = max "
+                    "aggregate value + 1 (the static distribution capacity)")
+            return uda.SumCF(num_freq, freq_lo=freq_lo, freq_cnt=freq_cnt)
         raise ValueError(
             f"GroupAgg method {method!r} is not supported by the planner "
-            "(grouped exact-CF is a ROADMAP open item; use "
-            "operators.group_logcf directly)")
+            "(expected 'normal', 'cumulants' or 'exact')")
     if agg in ("MIN", "MAX"):
+        if method == "exact":
+            raise ValueError(
+                "GroupAgg method 'exact' applies to SUM/COUNT only; MIN/MAX "
+                "distributions come from the MinMax UDA (kappa support)")
         return uda.MinMax(kappa=kappa, sign=1.0 if agg == "MIN" else -1.0)
     raise ValueError(agg)
 
@@ -131,7 +151,20 @@ def _agg_uda(agg: str, method: str, kappa: int) -> uda.UDA:
 def _out_key(agg: str, method: str) -> str:
     if agg in ("MIN", "MAX"):
         return "minmax"
-    return "cumulants" if method == "cumulants" else "sum"
+    return {"cumulants": "cumulants", "exact": "exact"}.get(method, "sum")
+
+
+def _freq_slabs(num_freq: int, max_groups: int, budget: int) -> tuple:
+    """Split [0, num_freq) into slabs so each (max_groups, slab) exact-CF
+    state stays within ``budget`` elements; slab widths stay lane-aligned
+    (multiples of 128) so the Pallas kernel's frequency padding is bounded."""
+    f_slab = max(1, budget // max(1, max_groups))
+    if f_slab >= num_freq:
+        return ((0, num_freq),)
+    if f_slab > 128:
+        f_slab -= f_slab % 128
+    return tuple((lo, min(f_slab, num_freq - lo))
+                 for lo in range(0, num_freq, f_slab))
 
 
 _RESERVED_OUT_KEYS = frozenset({"valid", "keys", "confidence"})
@@ -139,17 +172,26 @@ _RESERVED_OUT_KEYS = frozenset({"valid", "keys", "confidence"})
 
 def compile_plan(root: Node, mesh=None, *,
                  data_axes: Sequence[str] = ("data",),
-                 model_axis: str | None = "model"):
+                 model_axis: str | None = "model",
+                 cf_budget_elems: int = 1 << 22):
     """Emit a function tables -> result (Table or dict of arrays).
 
     With ``mesh``, `GroupAgg` / `ReweightGreater` aggregation runs under
     shard_map on the mesh's data axes; results match the mesh=None compile.
+
+    ``cf_budget_elems`` bounds the total live exact-CF state elements of a
+    `GroupAgg(method="exact")` node — counting both the log-abs and angle
+    (max_groups, slab) arrays of every exact aggregate on the node.  When
+    the full (max_groups, num_freq) state would exceed it, the compiler
+    runs multiple accumulation passes over frequency slabs (additively
+    psum-merged per slab on a mesh) and concatenates the slab states
+    before the one batched-FFT Finalize.
     """
-    # One jitted distributed step per aggregation node, built on first call
-    # (the step depends only on the node's static config, not its data).
+    # One jitted distributed step per (aggregation node, slab), built on
+    # first call (a step depends only on static config, not data).
     dist_steps: dict = {}
 
-    def accumulate(node, udas, t, values, ids, max_groups):
+    def accumulate(node, udas, t, values, ids, max_groups, step_key=0):
         """ONE pass over the child's tuples for every UDA of the node —
         distributed Accumulate/Merge when a mesh is given."""
         probs = t.masked_prob()
@@ -157,14 +199,21 @@ def compile_plan(root: Node, mesh=None, *,
             return uda.accumulate(udas, probs, values, ids,
                                   max_groups=max_groups)
         from . import distributed as dist
-        step = dist_steps.get(id(node))
+        step = dist_steps.get((id(node), step_key))
         if step is None:
+            # Grouped exact-CF states keep their frequency window replicated
+            # over the model axis (the kernel needs a static freq_lo); the
+            # psum over the data axes is the only cross-shard Merge, and
+            # model replicas stay bit-identical, so model-axis
+            # reconciliation is skipped for passes that carry a CF state.
+            m_axis = None if any(isinstance(u, uda.SumCF)
+                                 for u in udas.values()) else model_axis
             step = dist.make_uda_step(mesh, lambda size, rank: udas,
                                       max_groups=max_groups,
                                       data_axes=data_axes,
-                                      model_axis=model_axis,
+                                      model_axis=m_axis,
                                       post=lambda _u, states: states)
-            dist_steps[id(node)] = step
+            dist_steps[(id(node), step_key)] = step
         probs, values, ids = dist.pad_for(mesh, probs, values, ids,
                                           max_groups=max_groups,
                                           data_axes=data_axes)
@@ -199,18 +248,61 @@ def compile_plan(root: Node, mesh=None, *,
                 raise ValueError(
                     f"GroupAgg aggregate names must be unique and avoid "
                     f"{sorted(_RESERVED_OUT_KEYS)}; got {names}")
-            udas = {"confidence": uda.AtLeastOne()}
             values: dict = {}
-            cols: dict = {}        # convert each source column exactly once
+            cols: dict = {}        # fetch each source column exactly once
             for name, value, agg, method in specs:
-                udas[name] = _agg_uda(agg, method, node.kappa)
                 if agg == "COUNT" or not value:
                     values[name] = None
                 else:
+                    # Keep the raw column (uda.accumulate casts to the prob
+                    # dtype itself): an integer source dtype is what makes
+                    # an exact-CF aggregate eligible for the Pallas kernel.
                     if value not in cols:
-                        cols[value] = t[value].astype(t.prob.dtype)
+                        cols[value] = t[value]
                     values[name] = cols[value]
-            states = accumulate(node, udas, t, values, ids, node.max_groups)
+
+            # Exact-CF states are (G, F) — chunk F against the memory
+            # budget.  Pass 0 carries every aggregate (the riders share ONE
+            # accumulation); later passes re-stream the tuples for the
+            # remaining frequency slabs of the exact aggregates only.
+            exact_names = [s[0] for s in specs if s[3] == "exact"]
+            # The budget bounds TOTAL live exact-state elements: each exact
+            # aggregate carries two (G, slab) arrays (log-abs + angle) and
+            # every exact aggregate rides the same slab pass.
+            slabs = (_freq_slabs(node.num_freq, node.max_groups,
+                                 cf_budget_elems // (2 * len(exact_names)))
+                     if exact_names else ((0, node.num_freq),))
+            udas: dict = {}
+            states: dict = {}
+            for si, (lo, cnt) in enumerate(slabs):
+                udas_i: dict = {}
+                vals_i: dict = {}
+                if si == 0:
+                    udas_i["confidence"] = uda.AtLeastOne()
+                    vals_i["confidence"] = None
+                    for name, value, agg, method in specs:
+                        if method != "exact":
+                            udas_i[name] = _agg_uda(agg, method, node.kappa)
+                            vals_i[name] = values[name]
+                for name, value, agg, method in specs:
+                    if method == "exact":
+                        udas_i[name] = _agg_uda(agg, method, node.kappa,
+                                                node.num_freq, lo, cnt)
+                        vals_i[name] = values[name]
+                sts = accumulate(node, udas_i, t, vals_i, ids,
+                                 node.max_groups, step_key=si)
+                for name, st in sts.items():
+                    if name in states:          # append the frequency slab
+                        prev = states[name]
+                        states[name] = uda.CFState(
+                            jnp.concatenate([prev.log_abs, st.log_abs], -1),
+                            jnp.concatenate([prev.angle, st.angle], -1))
+                    else:
+                        states[name] = st
+                        udas[name] = udas_i[name]
+            for name in exact_names:            # full-range Finalize UDA
+                udas[name] = _agg_uda("SUM", "exact", node.kappa,
+                                      node.num_freq)
 
             out = dict(valid=gvalid,
                        keys=ops.group_key_columns(t, list(node.keys), ids,

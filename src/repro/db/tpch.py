@@ -29,7 +29,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import poisson_binomial as pb
 from . import operators as ops
 from .plans import (FKJoin, GroupAgg, Map, Project, ReweightGreater, Scan,
                     Select, compile_plan)
@@ -236,29 +235,35 @@ def q6(db: TPCH, mode: str = "aggregate", num_freq: int | None = None,
                                               * li["l_discount"], 0)))
     if mode in ("confidence", "group_confidence"):
         return _confidence_of(sel, db, mesh)
-    val = Map(sel, "q6_value",
-              lambda t: (t["l_quantity"] * t["l_discount"])
-              .astype(t.prob.dtype))
-    plan = GroupAgg(val, (), "q6_value", "SUM", 1, "normal",
-                    extra=(("cumulants", "q6_value", "SUM", "cumulants"),))
+    # Integer-typed computed column: keeps the exact-CF aggregate eligible
+    # for the Pallas kernel's integer-phase arithmetic (uda.accumulate
+    # casts to the prob dtype itself and tracks source integrality).
+    val = Map(sel, "q6_value", lambda t: t["l_quantity"] * t["l_discount"])
+    extra = (("cumulants", "q6_value", "SUM", "cumulants"),)
+    if num_freq:  # exact distribution on request (Figure 9's exact path)
+        extra += (("exact", "q6_value", "SUM", "exact"),)
+    plan = GroupAgg(val, (), "q6_value", "SUM", 1, "normal", extra=extra,
+                    num_freq=num_freq or 0)
     r = compile_plan(plan, mesh)(db.tables())
     mu, var = r["sum"]
     out = dict(normal=(mu[0], var[0]), cumulants=r["cumulants"][0])
-    if num_freq:  # exact distribution on request (Figure 9's exact path)
-        li = compile_plan(sel)(db.tables())
-        p = li.masked_prob()
-        v = (li["l_quantity"] * li["l_discount"]).astype(p.dtype)
-        la, an = pb.logcf_terms(p, v, num_freq)
-        out["exact_coeffs"] = pb.logcf_finalize(la, an)
+    if num_freq:
+        out["exact_coeffs"] = r["exact"][0]
     return out
 
 
 def q18(db: TPCH, mode: str = "aggregate", qty_threshold: int = 150,
-        max_groups: int = 2048, mesh=None):
+        max_groups: int = 2048, mesh=None, method: str = "normal",
+        num_freq: int = 256):
     """Large-volume customers: orders whose SUM(l_quantity) > threshold.
 
     The probabilistic version keeps every order with
-    p = p_order * P(SUM > threshold)  (Table I row III reweight)."""
+    p = p_order * P(SUM > threshold)  (Table I row III reweight).
+    ``method="exact"`` (aggregate mode) computes the per-order quantity
+    distribution with the grouped exact-CF planner path — ``num_freq``
+    must exceed the max per-order quantity sum (lines_per_order * 50 for
+    the synthetic generator) — and derives P(SUM > threshold) from the
+    exact tail mass instead of the Normal approximation."""
     li = Scan("lineitem")
     if mode == "deterministic":
         t = db.lineitem
@@ -274,6 +279,14 @@ def q18(db: TPCH, mode: str = "aggregate", qty_threshold: int = 150,
     if mode == "group_confidence":
         t = compile_plan(rew, mesh)(db.tables())
         return dict(valid=t.valid, confidence=t.prob)
+    if method == "exact":
+        plan = GroupAgg(li, ("l_orderkey",), "l_quantity", "SUM", max_groups,
+                        "exact", num_freq=num_freq)
+        out = compile_plan(plan, mesh)(db.tables())
+        coeffs = out["exact"]                        # (G, num_freq) rows
+        gt = jnp.arange(num_freq) > qty_threshold
+        p_gt = jnp.sum(coeffs * gt[None, :], axis=-1)
+        return dict(valid=out["valid"], sum_dist=coeffs, p_qualifies=p_gt)
     plan = GroupAgg(li, ("l_orderkey",), "l_quantity", "SUM", max_groups,
                     "normal")
     out = compile_plan(plan, mesh)(db.tables())

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the PGF engine's compute hot spots.
 
-    pb_cf.py       blocked log-CF accumulation (exact COUNT/SUM)
+    pb_cf.py       blocked log-CF accumulation (exact COUNT/SUM, one group)
+    group_cf.py    (G, F)-tiled grouped log-CF accumulation with in-kernel
+                   segment-mask scatter (grouped exact SUM/COUNT)
     polymul.py     blocked schoolbook polynomial multiply (small-degree path)
     cumulants.py   fused one-pass cumulant accumulation (moment method)
     ops.py         jit'd public wrappers with size/dtype dispatch

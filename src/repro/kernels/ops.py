@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from . import cumulants as _cum
+from . import group_cf as _gcf
 from . import pb_cf as _cf
 from . import polymul as _pm
 from . import ref
@@ -18,6 +19,9 @@ from . import ref
 # Below these sizes, block padding exceeds useful work — use the oracle.
 MIN_KERNEL_TUPLES = 256
 MIN_KERNEL_DEGREE = 128
+# Above this frequency-grid size the CF kernels' int32 split-modmult phase
+# would overflow (exact only for num_freq <= 2^20) — use the oracle.
+MAX_KERNEL_FREQ = 1 << 20
 
 
 def logcf(probs: jnp.ndarray, values: jnp.ndarray, num_freq: int,
@@ -25,10 +29,34 @@ def logcf(probs: jnp.ndarray, values: jnp.ndarray, num_freq: int,
     """Summed log CF at num_freq DFT frequencies. Kernel or oracle."""
     if use_kernel is None:
         use_kernel = (probs.shape[0] >= MIN_KERNEL_TUPLES
-                      and probs.dtype == jnp.float32)
+                      and probs.dtype == jnp.float32
+                      and num_freq <= MAX_KERNEL_FREQ)
     if use_kernel:
         return _cf.logcf(probs, values, num_freq=num_freq)
     return ref.logcf_ref(probs, values, num_freq)
+
+
+def group_logcf(probs: jnp.ndarray, values: jnp.ndarray, gids: jnp.ndarray,
+                num_groups: int, num_freq: int, *, freq_lo: int = 0,
+                freq_cnt: int | None = None, use_kernel: bool | None = None):
+    """Per-group summed log CF -> (G, F) log_abs/angle. Kernel or oracle.
+
+    The kernel truncates values to int32 for its exact integer-phase
+    arithmetic, so the auto guard additionally requires an integer-typed
+    values array; callers that know their float column is integral (e.g.
+    the UDA layer, which tracks source dtypes) pass ``use_kernel=True``.
+    """
+    if use_kernel is None:
+        use_kernel = (probs.shape[0] >= MIN_KERNEL_TUPLES
+                      and probs.dtype == jnp.float32
+                      and num_freq <= MAX_KERNEL_FREQ
+                      and jnp.issubdtype(values.dtype, jnp.integer))
+    if use_kernel:
+        return _gcf.group_logcf(probs, values, gids, num_groups=num_groups,
+                                num_freq=num_freq, freq_lo=freq_lo,
+                                freq_cnt=freq_cnt)
+    return ref.group_logcf_ref(probs, values, gids, num_groups, num_freq,
+                               freq_lo, freq_cnt)
 
 
 def polymul(a: jnp.ndarray, b: jnp.ndarray,

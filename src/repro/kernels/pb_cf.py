@@ -24,8 +24,9 @@ supplies a2 = (a << S) mod N.  Then
 
     (k*a) mod N = ((k_hi * a2) mod N + (k_lo * a) mod N) mod N
 
-with both products < 2^31 for N < 2^(31-S)/... (S = ceil(log2 N / 2) keeps
-them in range for any N <= 2^30).  Integer-exact on the VPU.
+with k_lo*a < 2^(S + b) and k_hi*a2 < 2^(2b - S) (b = bit length of N-1)
+both below 2^31 — S = b//2 + 1 satisfies that exactly for N <= 2^20, the
+bound the ops.py dispatch guard enforces.  Integer-exact on the VPU.
 """
 from __future__ import annotations
 
@@ -73,6 +74,31 @@ def _logcf_kernel(p_ref, a_ref, a2_ref, la_ref, an_ref, *,
     an_ref[...] += an.sum(axis=1)[None, :]
 
 
+def split_modmult_operands(values: jnp.ndarray, num_freq: int):
+    """Exact int32 phase operands shared by the CF kernels (this module and
+    :mod:`repro.kernels.group_cf`): reduce ``values`` mod N in the SOURCE
+    integer dtype (a 64-bit value truncated to int32 first would wrap mod
+    2^32, changing the residue for non-power-of-two N), narrow to int32,
+    and precompute a2 = (a << shift) mod N by repeated doubling —
+    int32-overflow-free for any N <= 2^30 (each intermediate < 2N <= 2^31).
+    Returns (a, a2, shift), asserting the N <= 2^20 split-modmult
+    exactness bound (see module docstring); zero-padding a/a2 afterwards
+    is safe (phase 0, and p = 0 pad rows contribute log(1) = 0 anyway).
+    """
+    n = num_freq
+    # int32 split-modmult exactness bound (see module docstring).
+    assert n <= 1 << 20, f"num_freq {n} > 2^20 overflows the exact phase"
+    shift = max(1, (n - 1).bit_length() // 2 + 1)
+    v = jnp.asarray(values)
+    if jnp.issubdtype(v.dtype, jnp.integer) or v.dtype == jnp.bool_:
+        v = v % n
+    a = v.astype(jnp.int32) % n
+    a2 = a
+    for _ in range(shift):
+        a2 = (a2 * 2) % n
+    return a, a2, shift
+
+
 @functools.partial(jax.jit, static_argnames=("num_freq", "fb", "tb", "interpret"))
 def logcf(probs: jnp.ndarray, values: jnp.ndarray, *, num_freq: int,
           fb: int = 256, tb: int = 1024, interpret: bool | None = None):
@@ -87,18 +113,14 @@ def logcf(probs: jnp.ndarray, values: jnp.ndarray, *, num_freq: int,
         interpret = jax.default_backend() == "cpu"
     n = num_freq
     dtype = probs.dtype
-    shift = max(1, (n - 1).bit_length() // 2 + 1)
+    a, a2, shift = split_modmult_operands(values, n)
 
     nt = probs.shape[0]
     ntp = pl.cdiv(nt, tb) * tb
     # p = 0 padding contributes log(1) = 0 to both outputs.
     p = jnp.pad(probs, (0, ntp - nt))
-    a = jnp.pad(values, (0, ntp - nt)).astype(jnp.int32) % n
-    # a2 = (a << shift) mod n by repeated doubling — int32-overflow-free for
-    # any n <= 2^30 (each intermediate < 2n <= 2^31).
-    a2 = a
-    for _ in range(shift):
-        a2 = (a2 * 2) % n
+    a = jnp.pad(a, (0, ntp - nt))
+    a2 = jnp.pad(a2, (0, ntp - nt))
 
     nfp = pl.cdiv(n, fb) * fb
     grid = (nfp // fb, ntp // tb)

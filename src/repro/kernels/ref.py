@@ -7,8 +7,33 @@ against the possible-worlds enumeration in ``tests/test_aggregates.py``.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _cf_terms(probs, values, k, num_freq):
+    """Per-(frequency, tuple) log-abs and angle of (1-p) + p w^{k v} on a
+    broadcastable (k, values, probs) grid — the one copy of the CF term
+    math both oracles below anchor their kernels to.
+
+    The phase (k*v) mod N runs at f64 exactness independent of the probs
+    dtype (integer values are pre-reduced mod N, so under x64 the product
+    stays below 2^53 for any N the kernels accept); only the trig epilogue
+    drops to the probs dtype, mirroring the kernels' f32 theta."""
+    dtype = probs.dtype
+    if jnp.issubdtype(values.dtype, jnp.integer) \
+            or values.dtype == jnp.bool_:
+        values = values % num_freq
+    ph_dtype = jnp.float64 if jax.config.jax_enable_x64 else dtype
+    phase = (k.astype(ph_dtype) * values.astype(ph_dtype)) % num_freq
+    theta = ((2.0 * np.pi / num_freq) * phase).astype(dtype)
+    q = 1.0 - probs
+    re = q + probs * jnp.cos(theta)
+    im = probs * jnp.sin(theta)
+    tiny = 1e-30 if dtype == jnp.float32 else 1e-300
+    la = 0.5 * jnp.log(jnp.maximum(re * re + im * im, tiny))
+    return la, jnp.arctan2(im, re)
 
 
 def logcf_ref(probs: jnp.ndarray, values: jnp.ndarray, num_freq: int):
@@ -23,17 +48,31 @@ def logcf_ref(probs: jnp.ndarray, values: jnp.ndarray, num_freq: int):
     compute, so the kernel contract is defined this way.
     """
     dtype = probs.dtype
-    n = num_freq
-    k = jnp.arange(n, dtype=dtype)
-    # phase[k, i] = (k * a_i) mod N, computed in f64-exactness range
-    phase = (k[:, None] * values[None, :]) % n
-    theta = (2.0 * np.pi / n) * phase
-    q = 1.0 - probs
-    re = q[None, :] + probs[None, :] * jnp.cos(theta)
-    im = probs[None, :] * jnp.sin(theta)
-    log_abs = 0.5 * jnp.log(jnp.maximum(re * re + im * im, 1e-300))
-    ang = jnp.arctan2(im, re)
-    return log_abs.sum(-1), ang.sum(-1)
+    # phase = (k * a_i) mod N, computed in f64-exactness range
+    k = jnp.arange(num_freq, dtype=dtype)
+    la, an = _cf_terms(probs[None, :], values[None, :], k[:, None], num_freq)
+    return la.sum(-1), an.sum(-1)
+
+
+def group_logcf_ref(probs: jnp.ndarray, values: jnp.ndarray,
+                    gids: jnp.ndarray, num_groups: int, num_freq: int,
+                    freq_lo: int = 0, freq_cnt: int | None = None):
+    """Grouped summed log CF: per-group log Q_g(w^k) over the tuples of each
+    group (the group_cf.py kernel contract).
+
+    Returns (log_abs, angle), each (num_groups, freq_cnt), for frequencies
+    [freq_lo, freq_lo + freq_cnt) of the num_freq-point DFT grid.  Computed
+    unblocked with a segment-sum scatter — independent of the blocked
+    repro.core.uda accumulation and of the Pallas kernel under test.
+    """
+    dtype = probs.dtype
+    f = num_freq - freq_lo if freq_cnt is None else freq_cnt
+    k = freq_lo + jnp.arange(f, dtype=dtype)
+    la, an = _cf_terms(probs[:, None], jnp.asarray(values)[:, None],
+                       k[None, :], num_freq)              # (n_tuples, f)
+    seg = jnp.asarray(gids)
+    return (jax.ops.segment_sum(la, seg, num_segments=num_groups),
+            jax.ops.segment_sum(an, seg, num_segments=num_groups))
 
 
 def polymul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

@@ -1,12 +1,31 @@
 # NOTE: no --xla_force_host_platform_device_count here (smoke tests and
 # benches must see 1 device; only launch/dryrun pins 512).  Multi-device
 # tests spawn subprocesses with their own XLA_FLAGS.
+import os
+import subprocess
+import sys
+
 import jax
 import pytest
 
 from repro.core import enable_x64
 
 enable_x64()  # the PGF engine's exactness tests need f64 on CPU
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(script: str, devices: int = 2) -> str:
+    """Run a test script in a subprocess with its own multi-device CPU
+    XLA_FLAGS (the conftest pins the parent process to 1 device) — the ONE
+    copy of the boilerplate shared by every `multidevice` test module."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
 
 
 @pytest.fixture

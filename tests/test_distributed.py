@@ -1,23 +1,13 @@
 """Multi-device behaviour via subprocesses (own XLA_FLAGS, 8 host devices):
 shard_map query execution == single-device reference; compressed psum;
 elastic mesh degradation."""
-import os
-import subprocess
-import sys
+import functools
 
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from conftest import run_sub as _run_sub
 
-
-def run_sub(script: str, devices: int = 8) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=os.path.join(ROOT, "src"))
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+run_sub = functools.partial(_run_sub, devices=8)
 
 
 def test_distributed_query_step_matches_reference():

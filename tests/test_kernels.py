@@ -1,5 +1,6 @@
 """Pallas kernel sweeps: shapes x dtypes, assert_allclose vs ref.py oracles
-(interpret=True on CPU; BlockSpec tiling identical to the TPU target)."""
+(interpret=True on CPU; BlockSpec tiling identical to the TPU target).
+The grouped (G, F)-tiled CF kernel is covered in test_group_cf.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +8,8 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels import pb_cf, polymul, cumulants
+
+pytestmark = pytest.mark.kernels
 
 
 @pytest.mark.parametrize("n,num_freq", [

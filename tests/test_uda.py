@@ -5,19 +5,15 @@ in two halves (any partition + any merge tree must give the same final
 distribution — that's what makes the shard_map/psum execution valid), plus
 a compile_plan(mesh) == compile_plan(None) equivalence on a 2-device CPU
 mesh (subprocess, own XLA_FLAGS)."""
-import os
-import subprocess
-import sys
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import run_sub
 from repro.core import uda
 from repro.core.config import default_float
 from repro.core.pgf import possible_worlds_pgf
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 G = 4
 
 
@@ -168,16 +164,6 @@ def test_every_registered_uda_constructs():
 
 
 # --------------------------------------------------- mesh-aware compilation
-def run_sub(script: str, devices: int = 2) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=os.path.join(ROOT, "src"))
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
-
-
 @pytest.mark.multidevice
 def test_compile_plan_mesh_equivalence():
     """compile_plan(root, mesh) == compile_plan(root) on a 2-device CPU
@@ -197,6 +183,8 @@ plans = [
              "l_quantity", "SUM", 8, "normal",
              extra=(("c", "l_quantity", "SUM", "cumulants"),
                     ("n", "", "COUNT", "normal"))),
+    GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity", "SUM", 128,
+             "exact", num_freq=256),
     GroupAgg(Scan("lineitem"), ("l_returnflag",), "l_quantity", "MIN", 8,
              kappa=64),
     GroupAgg(Scan("lineitem"), ("l_returnflag",), "l_quantity", "MAX", 8,
