@@ -26,15 +26,20 @@ def _time(jfn, db, repeat):
     return (time.perf_counter() - t0) / repeat
 
 
-def bench(n_orders: int = 4000, repeat: int = 3):
+def bench(n_orders: int = 4000, repeat: int = 3, mesh=None):
+    """Per-query/mode wall times; with ``mesh`` every probabilistic mode
+    runs the sharded frontend (the whole plan inside one shard_map, rows
+    partitioned over the data axes) — same results bit-for-bit, O(rows /
+    shards) per-device memory."""
     db = tpch.generate(n_orders=n_orders, seed=0)
+    tag = "/mesh" if mesh is not None else ""
     rows = []
     for qname, fn in tpch.QUERIES.items():
-        jfn = {m: jax.jit(lambda db, m=m, fn=fn: fn(db, m))
+        jfn = {m: jax.jit(lambda db, m=m, fn=fn: fn(db, m, mesh=mesh))
                for m in tpch.MODES}
         for mode in tpch.MODES:
             dt = _time(jfn[mode], db, repeat)
-            rows.append((f"fig7/{qname}/{mode}", dt * 1e6,
+            rows.append((f"fig7/{qname}/{mode}{tag}", dt * 1e6,
                          f"n_orders={n_orders}"))
     # grouped exact-CF through the planner (GroupAgg method="exact"):
     # q18's per-order quantity sums fit a 256-frequency grid exactly and
@@ -47,22 +52,29 @@ def bench(n_orders: int = 4000, repeat: int = 3):
     groups = max(1024, 1 << (n_orders + 1).bit_length())
     exact = {
         "q18": lambda db: tpch.q18(db, "aggregate", method="exact",
-                                   max_groups=groups),
-        "q6": lambda db: tpch.q6(db, "aggregate", num_freq=1 << 12),
+                                   max_groups=groups, mesh=mesh),
+        "q6": lambda db: tpch.q6(db, "aggregate", num_freq=1 << 12,
+                                 mesh=mesh),
     }
     for qname, fn in exact.items():
         dt = _time(jax.jit(fn), db, repeat)
-        rows.append((f"fig7/{qname}/aggregate_exact", dt * 1e6,
+        rows.append((f"fig7/{qname}/aggregate_exact{tag}", dt * 1e6,
                      f"n_orders={n_orders}"))
     # the paper's claim: aggregate within small factor of deterministic
     for q in tpch.QUERIES:
-        det = next(r[1] for r in rows if r[0] == f"fig7/{q}/deterministic")
-        agg = next(r[1] for r in rows if r[0] == f"fig7/{q}/aggregate")
-        rows.append((f"fig7/{q}/agg_over_det", agg / max(det, 1e-9),
+        det = next(r[1] for r in rows
+                   if r[0] == f"fig7/{q}/deterministic{tag}")
+        agg = next(r[1] for r in rows if r[0] == f"fig7/{q}/aggregate{tag}")
+        rows.append((f"fig7/{q}/agg_over_det{tag}", agg / max(det, 1e-9),
                      "ratio"))
     return rows
 
 
 if __name__ == "__main__":
-    for name, v, extra in bench():
+    import sys
+    mesh = None
+    if "--mesh" in sys.argv:   # sharded frontend over the host devices
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+    for name, v, extra in bench(mesh=mesh):
         print(f"{name},{v:.1f},{extra}")

@@ -6,7 +6,11 @@ segment-UDA path) for every aggregation method — normal, cumulants, exact
 (grouped log-CF), min/max — plus the ReweightGreater plan shape, and prints
 wall times, so refactors of the UDA subsystem show perf regressions per-PR.
 It also measures the grouped-exact planner path against a per-group scalar
-``logcf`` loop (the pre-kernel execution strategy) at G >= 64.
+``logcf`` loop (the pre-kernel execution strategy) at G >= 64, and the
+sharded relational frontend (the full shard_map pipeline on a 1-device
+('data',) mesh) so the distributed scan/join/group-id path is gated too;
+the baseline JSON additionally records the static replicated-vs-sharded
+peak rows/device accounting of the frontend.
 
     PYTHONPATH=src python benchmarks/smoke.py [--mesh] [--check] [--update]
 
@@ -123,6 +127,41 @@ def bench_exact_speedup(G: int = 64, tuples_per_group: int = 64,
              f"grouped={t_grouped * 1e6:.1f}us,loop={t_loop * 1e6:.1f}us")]
 
 
+def bench_sharded_frontend(n_orders: int = 1000, repeat: int = 5):
+    """The full sharded frontend (scan/select/join/group-ids inside one
+    shard_map) on a 1-device ('data',) mesh: same Q3-shaped plan as
+    smoke/normal plus an FKJoin, timed against the baseline so shard_map
+    pipeline overhead regressions are caught per-PR even though the
+    parent process only sees one device."""
+    from repro.compat import make_mesh
+    from repro.db.plans import FKJoin
+
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    mesh = make_mesh((1,), ("data",))
+    li = Select(Scan("lineitem"), lambda t: t["l_shipdate"] > tpch.DAY0_1995)
+    j = FKJoin(li, Scan("orders"), "l_orderkey", "o_orderkey",
+               ("o_totalprice",))
+    plan = GroupAgg(j, ("l_orderkey",), "l_quantity", "SUM", 256, "normal")
+    fn = jax.jit(compile_plan(plan, mesh))
+    dt = _time(fn, (db.tables(),), repeat)
+    return [("smoke/sharded_frontend/mesh1", dt * 1e6,
+             f"n_orders={n_orders}")]
+
+
+def frontend_layout(n_orders: int = 1000, shards: int = 8,
+                    chunks: int = 8) -> dict:
+    """Static peak rows/device of the biggest relation (lineitem): the
+    replicated frontend keeps every (chunk-padded) row on every device;
+    the sharded frontend keeps the contiguous 1/shards block.  Uses the
+    same ``Table.pad_to_multiple`` entry point as ``compile_plan``, and is
+    gated against the checked-in baseline by ``--check`` so a layout
+    regression (e.g. the frontend quietly re-replicating scans, or chunk
+    padding blowing up) fails the smoke gate."""
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    npad = db.lineitem.pad_to_multiple(max(chunks, shards)).capacity
+    return {"replicated": npad, "sharded": npad // shards, "shards": shards}
+
+
 def _check(rows) -> int:
     if not os.path.exists(BASELINE_PATH):
         print(f"FAIL: no baseline at {BASELINE_PATH}; run --update first")
@@ -149,6 +188,18 @@ def _check(rows) -> int:
             print(f"FAIL {name}: {value:.1f}us > {TOLERANCE} x "
                   f"{base[name]:.1f}us baseline")
             failures += 1
+    with open(BASELINE_PATH) as f:
+        base_layout = json.load(f).get("peak_rows_per_device")
+    layout = frontend_layout()
+    if base_layout is None:
+        print("WARN layout: no peak_rows_per_device in baseline "
+              "(run --update to record)")
+    elif (layout["replicated"] != base_layout["replicated"]
+          or layout["sharded"] > base_layout["sharded"]):
+        print(f"FAIL layout: peak rows/device {layout} regressed vs "
+              f"baseline {base_layout} (the sharded frontend's "
+              "O(rows/shards) accounting changed)")
+        failures += 1
     print("CHECK " + ("FAILED" if failures else "PASSED")
           + f" ({len(rows)} rows, tol {TOLERANCE}x)")
     return 1 if failures else 0
@@ -159,6 +210,7 @@ def _update(rows):
                 if not name.startswith("smoke/exact_speedup")}
     with open(BASELINE_PATH, "w") as f:
         json.dump({"tolerance": TOLERANCE, "repeat": "best-of",
+                   "peak_rows_per_device": frontend_layout(),
                    "rows": recorded}, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"wrote {BASELINE_PATH} ({len(recorded)} rows)")
@@ -166,6 +218,7 @@ def _update(rows):
 
 def main() -> int:
     rows = bench()
+    rows += bench_sharded_frontend()
     rows += bench_exact_speedup()
     if "--mesh" in sys.argv and len(jax.devices()) > 1:
         from repro.launch.mesh import make_host_mesh

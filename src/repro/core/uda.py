@@ -374,21 +374,43 @@ class MinMax(UDA):
                                              chunk_total))
 
     def merge(self, a: MinMaxState, b: MinMaxState) -> MinMaxState:
+        """Bitonic two-way merge + top-k truncation, sort- and
+        scatter-free: both inputs keep their rows sorted (the state
+        invariant), so ascending(a) ++ descending(b) is bitonic and
+        log2(2k) elementwise compare-exchange stages finish the merge —
+        XLA CPU row sorts and scatters serialise and were the hot spot of
+        the chunked/tree merge path.
+
+        Duplicate (group, value) entries may occupy several buffer slots
+        after a merge; that is exact: finalize's per-slot masses telescope
+        (exp(prefix) (1-Q_a) + exp(prefix) Q_a (1-Q_b) == the folded-run
+        mass), and consumers aggregate run lists by value.  Only the
+        §V-B.2 truncation tail can get looser under heavy duplication —
+        split slots compete for the kappa capacity."""
         k = self.kappa
-        v = jnp.concatenate([a.values, b.values], axis=1)        # (G, 2k)
-        lq = jnp.concatenate([a.log_none, b.log_none], axis=1)
-        order = jnp.argsort(v, axis=1, stable=True)
-        vs = jnp.take_along_axis(v, order, axis=1)
-        lqs = jnp.take_along_axis(lq, order, axis=1)
-        # Row-wise run folding: duplicates combine their log(1-p) sums.
-        head = jnp.concatenate([jnp.ones_like(vs[:, :1], bool),
-                                vs[:, 1:] != vs[:, :-1]], axis=1)
-        seg = jnp.cumsum(head, axis=1) - 1
-        rows = jnp.broadcast_to(jnp.arange(vs.shape[0])[:, None], seg.shape)
-        run_lq = jnp.zeros_like(lqs).at[rows, seg].add(lqs)
-        run_v = jnp.full_like(vs, jnp.inf).at[rows, seg].min(vs)
-        evicted = jnp.where(jnp.isfinite(run_v[:, k:]), run_lq[:, k:], 0.0)
-        return MinMaxState(run_v[:, :k], run_lq[:, :k],
+        pw = 1 << (k - 1).bit_length()       # bitonic needs a 2^m half
+        inf_pad = ((0, 0), (0, pw - k))
+        v = jnp.concatenate(
+            [jnp.pad(a.values, inf_pad, constant_values=jnp.inf),
+             jnp.pad(b.values, inf_pad, constant_values=jnp.inf)[:, ::-1]],
+            axis=1)
+        lq = jnp.concatenate([jnp.pad(a.log_none, inf_pad),
+                              jnp.pad(b.log_none, inf_pad)[:, ::-1]], axis=1)
+        g = v.shape[0]
+        s = pw
+        while s >= 1:
+            vr = v.reshape(g, -1, 2, s)
+            lr = lq.reshape(g, -1, 2, s)
+            swap = vr[:, :, 0] > vr[:, :, 1]
+            v = jnp.stack([jnp.where(swap, vr[:, :, 1], vr[:, :, 0]),
+                           jnp.where(swap, vr[:, :, 0], vr[:, :, 1])],
+                          axis=2).reshape(g, -1)
+            lq = jnp.stack([jnp.where(swap, lr[:, :, 1], lr[:, :, 0]),
+                            jnp.where(swap, lr[:, :, 0], lr[:, :, 1])],
+                           axis=2).reshape(g, -1)
+            s //= 2
+        evicted = jnp.where(jnp.isfinite(v[:, k:]), lq[:, k:], 0.0)
+        return MinMaxState(v[:, :k], lq[:, :k],
                            a.tail_log_none + b.tail_log_none + evicted.sum(1),
                            a.total_log_none + b.total_log_none)
 
@@ -450,9 +472,15 @@ def make(name: str, **kwargs) -> UDA:
 # ======================================================================
 # the canonical accumulation loop
 # ======================================================================
-def _block_size(udas, block: int) -> int:
+def _block_size(udas, block: int, n: int) -> int:
     budget = max([1] + [u.row_budget() for u in udas.values()])
-    return max(_BLOCK_FLOOR, min(block, _ELEM_BUDGET // max(1, budget)))
+    bsz = max(_BLOCK_FLOOR, min(block, _ELEM_BUDGET // max(1, budget)))
+    # Never pad past the column: a short column (e.g. one canonical chunk
+    # of a chunked accumulate) runs as a single right-sized block instead
+    # of being zero-padded up to the full block budget.  The floor keeps
+    # bsz positive for empty columns (the scan then runs zero steps and
+    # returns the init states).
+    return min(bsz, max(_BLOCK_FLOOR, -(-n // _BLOCK_FLOOR) * _BLOCK_FLOOR))
 
 
 def _groups_of(u: UDA, max_groups: int) -> int:
@@ -586,7 +614,7 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
     if not scan_udas:
         return states
 
-    bsz = _block_size(scan_udas, block)
+    bsz = _block_size(scan_udas, block, n)
     nfull = ((n + bsz - 1) // bsz) * bsz
     pad = nfull - n
     p = jnp.pad(probs, (0, pad))                    # p = 0: no contribution
@@ -615,6 +643,83 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
 def merge(udas, a, b):
     """Merge two state dicts UDA-wise (any merge tree gives the same result)."""
     return {name: u.merge(a[name], b[name]) for name, u in udas.items()}
+
+
+def tree_fold(u: UDA, parts):
+    """Fold partial states with ``u.merge`` in a balanced pairwise tree
+    (adjacent pairs first, odd tails pass through).
+
+    The fixed tree shape is the bit-reproducibility contract of
+    :func:`accumulate_chunked`: a fold over C leaves equals S contiguous
+    groups of C/S leaves each pre-folded locally and then folded across
+    groups — provided C and C/S are powers of two — so moving the group
+    (= mesh shard) boundaries never changes the merge order.
+    """
+    parts = list(parts)
+    if not parts:
+        raise ValueError("tree_fold needs at least one partial state")
+    while len(parts) > 1:
+        parts = [u.merge(parts[i], parts[i + 1]) if i + 1 < len(parts)
+                 else parts[i]
+                 for i in range(0, len(parts), 2)]
+    return parts[0]
+
+
+def accumulate_chunked(udas, probs, values=None, gids=None, *,
+                       max_groups: int = 1, num_chunks: int = 8,
+                       block: int = 8192, kernel: str = "auto"):
+    """Canonical chunk-grid Accumulate + tree Merge (the sharded-frontend
+    accumulation semantics).
+
+    The tuple column is split into ``num_chunks`` contiguous equal chunks
+    (zero-padded with p = 0 rows to a chunk multiple); each chunk runs the
+    ONE canonical loop (:func:`accumulate`) independently and the partial
+    states fold in the balanced pairwise tree of :func:`tree_fold`.  The
+    plan compiler uses the same grid on every mesh: a shard owns a
+    contiguous run of chunks, pre-folds its subtree locally, and the
+    cross-shard Merge (``db.distributed.allgather_merge``) finishes the
+    SAME tree — which is what makes ``compile_plan(root, mesh)`` outputs
+    bit-identical to the single-device compile.
+    """
+    probs = jnp.asarray(probs)
+    n = probs.shape[0]
+    if num_chunks <= 1:
+        return accumulate(udas, probs, values, gids, max_groups=max_groups,
+                          block=block, kernel=kernel)
+    csz = -(-n // num_chunks)
+    pad = csz * num_chunks - n
+    if pad:
+        probs = jnp.pad(probs, (0, pad))
+    if gids is not None and pad:
+        gids = jnp.pad(jnp.asarray(gids), (0, pad),
+                       constant_values=max_groups - 1)
+    if not isinstance(values, dict):
+        values = {name: values for name in udas}
+    # Pad each distinct source column once so aggregates sharing a column
+    # keep sharing it (accumulate dedups value columns by identity).
+    cols: dict = {}
+    cache: dict = {}
+    for name in udas:
+        v = values.get(name)
+        if v is None:
+            cols[name] = None
+            continue
+        if id(v) not in cache:
+            a = jnp.asarray(v)
+            cache[id(v)] = jnp.pad(a, (0, pad)) if pad else a
+        cols[name] = cache[id(v)]
+    parts = []
+    for i in range(num_chunks):
+        sl = slice(i * csz, (i + 1) * csz)
+        ccache: dict = {}
+        vals_i = {name: None if c is None else ccache.setdefault(id(c), c[sl])
+                  for name, c in cols.items()}
+        parts.append(accumulate(udas, probs[sl], vals_i,
+                                None if gids is None else gids[sl],
+                                max_groups=max_groups, block=block,
+                                kernel=kernel))
+    return {name: tree_fold(u, [p[name] for p in parts])
+            for name, u in udas.items()}
 
 
 def reduce_collective(udas, states, data_axes, model_axis=None):

@@ -12,14 +12,34 @@ The paper scales by streaming partitions through per-core UDAs and merging
     Finalize    replicated FFT / mixture solve epilogue
 
 ``make_uda_step`` builds that pipeline for ANY dict of registered UDAs —
-it is what the mesh-aware plan compiler (`db/plans.py compile_plan(root,
-mesh)`) emits for `GroupAgg`/`ReweightGreater` nodes.  ``make_query_step``
-is the canonical fixed query shape (confidence + normal + cumulants +
-exact global CF) that launch/dryrun.py lowers for the `pgf_tpch` cell.
+the generic aggregation-only step that ``make_query_step`` specialises to
+the canonical fixed query shape (confidence + normal + cumulants + exact
+global CF) which launch/dryrun.py lowers for the `pgf_tpch` cell.
 Tuples are sharded over ('pod','data') — the (batch-like) scale axis — and
 replicated over 'model'; frequency grids of the exact CF path are sharded
 over 'model' so the O(n*F) phase work splits both ways (the beyond-paper
 optimization validated in §Perf).
+
+The sharded relational frontend (`db/plans.py compile_plan(root, mesh)`)
+runs the WHOLE plan inside one shard_map and uses the collective helpers
+below instead of a per-node step:
+
+    gather_table        broadcast a row-partitioned Table (FK-join build
+                        sides, final sharded results): one tiled
+                        all-gather per column, shard-major == global row
+                        order under the contiguous row partitioning
+    group_ids_sharded   two-phase distributed group-id assignment —
+                        per-shard jnp.unique, all-gather + merge of the
+                        per-shard code tables, searchsorted against the
+                        merged codes (exact vs the single-pass oracle,
+                        overflow included: operators.merge_group_codes)
+    allgather_merge     ONE collective Merge per aggregation pass: gather
+                        every shard's partial UDA state and fold with the
+                        canonical pairwise tree (uda.tree_fold) — the
+                        bit-reproducible form of the additive psum, which
+                        also covers non-additive states (MinMax)
+    group_key_columns_sharded   per-shard segment_max + one pmax (max is
+                        exact, so bit-equal to the replicated reduction)
 """
 from __future__ import annotations
 
@@ -31,6 +51,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from ..core import uda
+from . import operators as ops
+from .table import Table
 
 
 def _tuple_axes(mesh: Mesh, data_axes: Sequence[str]) -> tuple:
@@ -100,6 +122,74 @@ def pad_for(mesh: Mesh, probs, values, gids, *, max_groups: int,
     elif values is not None:
         values = jnp.pad(values, (0, pad))
     return probs, values, gids
+
+
+# ----------------------------------------------------- sharded frontend
+def gather_table(t: Table, axis_names) -> Table:
+    """Broadcast a row-partitioned Table (call inside shard_map): tiled
+    all-gather of every column plus p and valid.  With the contiguous row
+    partitioning of the sharded frontend, shard-major concatenation IS the
+    original global row order, so the gathered table is bit-identical to
+    the unsharded one."""
+    axis_names = tuple(axis_names)
+    g = lambda x: jax.lax.all_gather(x, axis_names, axis=0, tiled=True)
+    return Table({k: g(v) for k, v in t.columns.items()},
+                 g(t.prob), g(t.valid))
+
+
+def group_ids_sharded(table: Table, keys: Sequence[str], max_groups: int,
+                      axis_names):
+    """Two-phase distributed group-id assignment (call inside shard_map).
+
+    Phase 1: per-shard ``jnp.unique`` of the live key codes (size
+    max_groups, sentinel fill).  Phase 2: one tiled all-gather of the
+    per-shard code tables + a second unique merge, giving every shard the
+    same global code table; ids come from searchsorted of the LOCAL codes
+    against it.  Replaces the replicated full-table unique: per-shard
+    work/memory is O(local rows + shards * max_groups), and the result is
+    bit-identical to ``operators.group_ids`` (see
+    ``operators.merge_group_codes`` for the overflow argument).
+    """
+    axis_names = tuple(axis_names)
+    code_live, big = ops.live_key_codes(table, keys)
+    local = ops.merge_group_codes(code_live, max_groups)
+    gathered = jax.lax.all_gather(local, axis_names, axis=0, tiled=True)
+    merged = ops.merge_group_codes(gathered, max_groups)
+    return ops.codes_to_ids(code_live, merged), merged, merged != big
+
+
+def group_key_columns_sharded(table: Table, keys: Sequence[str], ids,
+                              max_groups: int, axis_names):
+    """Per-group key representatives over a row-partitioned table: local
+    segment_max, then one pmax over the data axes (max is exact, so this
+    is bit-equal to the replicated reduction)."""
+    axis_names = tuple(axis_names)
+    cols = ops.group_key_columns(table, keys, ids, max_groups)
+    return {k: jax.lax.pmax(v, axis_names) for k, v in cols.items()}
+
+
+def allgather_merge(udas: dict, states: dict, axis_names) -> dict:
+    """The sharded frontend's ONE collective Merge per aggregation pass:
+    all-gather every shard's partial state (shard-major, so the leaf order
+    is the canonical chunk order) and fold with ``uda.tree_fold``.
+
+    For additive states this computes exactly what a psum would, but in
+    the fixed pairwise tree that continues the shard-local
+    ``uda.accumulate_chunked`` fold — hence bit-identical to the
+    single-device compile — and it covers non-additive states (MinMax)
+    with the same code path.
+    """
+    axis_names = tuple(axis_names)
+    out = {}
+    for name, u in udas.items():
+        g = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axis_names, axis=0, tiled=False),
+            states[name])
+        shards = jax.tree.leaves(g)[0].shape[0]        # static
+        parts = [jax.tree.map(lambda x, s=s: x[s], g)
+                 for s in range(shards)]
+        out[name] = uda.tree_fold(u, parts)
+    return out
 
 
 def make_query_step(mesh: Mesh, *, max_groups: int = 1024,

@@ -31,12 +31,46 @@ from ..core import uda
 from .table import Table
 
 # --------------------------------------------------------------- grouping
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+def check_nonneg_keys(table: Table, keys: Sequence[str]) -> None:
+    """Enforce the nonnegative-key contract of :func:`encode_keys` /
+    :func:`group_key_columns`.
+
+    Invalid rows write the identity 0 into per-group representatives and
+    key codes, so a negative value in a valid row would silently corrupt
+    both (a negative representative loses to the 0 identity under
+    segment_max; a negative code breaks the positional key packing).  The
+    check runs when the data is concrete — direct operator calls and the
+    eager ``compile_plan`` execution path — and is skipped under tracing
+    (shard_map / jit), where only shapes are visible.
+    """
+    import numpy as np
+    if not _is_concrete(table.valid):
+        return
+    valid = np.asarray(table.valid)
+    for k in keys:
+        col = table[k]
+        if not _is_concrete(col):
+            continue
+        live = np.asarray(col)[valid]
+        if live.size and live.min() < 0:
+            raise ValueError(
+                f"group key column {k!r} contains negative values in valid "
+                "rows; group-id codes and per-group representatives assume "
+                "nonnegative keys (invalid rows write the identity 0) — "
+                "shift or re-encode the column first")
+
+
 def encode_keys(table: Table, keys: Sequence[str],
                 multipliers: Sequence[int] | None = None) -> jnp.ndarray:
     """Combine key columns into one sortable int64-ish code (f64-safe ints).
 
     multipliers[i] must exceed max(keys[i+1:]) range; defaults assume each
-    key < 2**20 which holds for every workload in repro.db.tpch.
+    key < 2**20 which holds for every workload in repro.db.tpch.  Keys
+    must be nonnegative (see :func:`check_nonneg_keys`).
     """
     code = jnp.zeros((table.capacity,), jnp.int64 if jax.config.jax_enable_x64
                      else jnp.int32)
@@ -46,29 +80,63 @@ def encode_keys(table: Table, keys: Sequence[str],
     return code
 
 
+def live_key_codes(table: Table, keys: Sequence[str]):
+    """Per-row key codes with dead rows pushed to the ``big`` sentinel.
+
+    Returns (code_live, big).  This is phase 0 of the (possibly
+    distributed) group-id protocol: the sentinel sorts after every live
+    code, so unique/searchsorted treat dead rows as one overflow key.
+    """
+    check_nonneg_keys(table, keys)
+    code = encode_keys(table, keys)
+    big = jnp.iinfo(code.dtype).max
+    return jnp.where(table.valid, code, big), big
+
+
+def merge_group_codes(codes: jnp.ndarray, max_groups: int) -> jnp.ndarray:
+    """The ``max_groups`` smallest distinct codes, padded with the
+    sentinel.
+
+    Exact under sharding: if a code is dropped by a shard-local pass
+    (> max_groups local distinct), at least max_groups smaller codes exist
+    on that shard alone, so the drop can never evict a code from the
+    global top-``max_groups`` — merging per-shard code tables therefore
+    reproduces the single-pass result bit-for-bit, overflow included.
+    """
+    big = jnp.iinfo(codes.dtype).max
+    return jnp.unique(codes, size=max_groups, fill_value=big)
+
+
+def codes_to_ids(code_live: jnp.ndarray, group_codes: jnp.ndarray):
+    """Row codes -> group ids in [0, max_groups) against a merged code
+    table (dead/overflow rows land in the last, fill bucket)."""
+    ids = jnp.searchsorted(group_codes, code_live)
+    return jnp.clip(ids, 0, group_codes.shape[0] - 1)
+
+
 def group_ids(table: Table, keys: Sequence[str], max_groups: int):
     """Assign each valid row a group id in [0, max_groups).
 
     Returns (ids, group_codes, group_valid): `ids` is per-row (invalid rows
     get id max_groups-1 but contribute p=0 everywhere), `group_codes` the
     representative key code per group, `group_valid` marks live groups.
+    The distributed form (``db.distributed.group_ids_sharded``) composes
+    the same three phases with one all-gather of the per-shard code tables
+    between :func:`merge_group_codes` passes.
     """
-    code = encode_keys(table, keys)
-    big = jnp.iinfo(code.dtype).max
-    code_live = jnp.where(table.valid, code, big)
-    uniq = jnp.unique(code_live, size=max_groups, fill_value=big)
-    ids = jnp.searchsorted(uniq, code_live)
-    ids = jnp.clip(ids, 0, max_groups - 1)
-    return ids, uniq, uniq != big
+    code_live, big = live_key_codes(table, keys)
+    uniq = merge_group_codes(code_live, max_groups)
+    return codes_to_ids(code_live, uniq), uniq, uniq != big
 
 
 def group_key_columns(table: Table, keys: Sequence[str], ids, max_groups: int):
     """Representative value of each key column per group.
 
     All valid writers of a group agree by construction; invalid rows write
-    the identity 0, so this requires nonnegative key columns (true for every
-    repro.db workload — keys are ids/dates/quantities).
+    the identity 0, so this requires nonnegative key columns (enforced by
+    :func:`check_nonneg_keys` whenever the data is concrete).
     """
+    check_nonneg_keys(table, keys)
     out = {}
     for k in keys:
         col = table[k]
@@ -106,15 +174,40 @@ def project(table: Table, keys: Sequence[str], max_groups: int) -> Table:
 
 
 # -------------------------------------------------------------------- joins
+def check_unique_fk_keys(right: Table, right_key: str) -> None:
+    """Reject duplicate valid build-side keys in :func:`fk_join`.
+
+    The many-to-one contract means each left row matches at most one valid
+    right row; a duplicated key would silently pick the first occurrence
+    and drop the other world's probability mass.  Checked when the build
+    side is concrete (direct calls / eager ``compile_plan``); traced
+    execution skips it.
+    """
+    import numpy as np
+    rk, valid = right[right_key], right.valid
+    if not (_is_concrete(rk) and _is_concrete(valid)):
+        return
+    live = np.asarray(rk)[np.asarray(valid)]
+    if live.size != np.unique(live).size:
+        raise ValueError(
+            f"fk_join build side has duplicate valid keys in {right_key!r}; "
+            "the many-to-one join contract needs the right key unique among "
+            "valid rows (deduplicate or Project the build side first)")
+
+
 def fk_join(left: Table, right: Table, left_key: str, right_key: str,
             right_cols: Sequence[str], suffix: str = "") -> Table:
     """Many-to-one equijoin (fact -> dimension), Table I row IV.
 
     Each left row matches at most one VALID right row (right_key unique
-    among valid rows — the TPC-H FK pattern).  Output capacity = left
-    capacity; p = p_l * p_r.  Right lookup is sort + searchsorted, the
-    XLA-friendly hash-join stand-in.
+    among valid rows — the TPC-H FK pattern; duplicates are rejected when
+    the build side is concrete).  Output capacity = left capacity;
+    p = p_l * p_r.  Right lookup is sort + searchsorted, the XLA-friendly
+    hash-join stand-in.  Under the sharded frontend the build side arrives
+    pre-gathered (`db.distributed.gather_table`) while `left` stays a
+    shard-local block.
     """
+    check_unique_fk_keys(right, right_key)
     rkey = right[right_key]
     big = jnp.iinfo(jnp.int32).max
     rk = jnp.where(right.valid, rkey.astype(jnp.int32), big)

@@ -7,12 +7,39 @@ paper's central claim: probabilistic queries run on a *deterministic*
 engine (here: XLA) once every probabilistic operator is rewritten to a
 deterministic one + segment-UDA calls (:mod:`repro.core.uda`).
 
-``compile_plan(root, mesh)`` compiles the SAME plan for a device mesh:
-the relational scaffolding (scan/select/join/group-id assignment) stays
-replicated, while every `GroupAgg` / `ReweightGreater` aggregation runs
-the distributed Accumulate -> one-psum Merge -> replicated Finalize path
-of :mod:`repro.db.distributed`, so any plan runs on any mesh with results
-identical to the single-device compile.
+``compile_plan(root, mesh)`` compiles the SAME plan for a device mesh with
+the WHOLE pipeline sharded — no stage keeps a replicated copy of the data.
+Every base table is row-partitioned over the mesh's data axes (contiguous
+blocks, valid masks riding along; :mod:`repro.db.table`) and the plan runs
+inside ONE shard_map:
+
+    Scan            the shard-local block of the (chunk-padded) base table
+    Select / Map    embarrassingly parallel on the local block
+    FKJoin          build-side broadcast: all-gather the right relation's
+                    (key, p, cols) columns, probe locally by sort +
+                    searchsorted; right subtrees above
+                    ``join_gather_budget`` rows are evaluated replicated
+                    instead (their scans are fed unsharded)
+    group ids       two-phase distributed unique: per-shard jnp.unique of
+                    the live key codes -> all-gather + merge of the
+                    per-shard code tables -> globally consistent ids via
+                    searchsorted (`db.distributed.group_ids_sharded`) —
+                    no replicated full-table unique on the data axis
+    GroupAgg /      per-shard UDA Accumulate over the local tuples, ONE
+    ReweightGreater collective Merge per aggregation pass
+    / Project       (`db.distributed.allgather_merge`), replicated
+                    Finalize; group-level outputs are replicated Tables
+
+Determinism contract: every aggregation pass folds its tuples over a fixed
+grid of ``canonical_chunks`` contiguous chunks and merges the partial
+states in a balanced pairwise tree (:func:`repro.core.uda.
+accumulate_chunked`).  A mesh whose shard count divides the grid computes
+each shard's subtree locally and the cross-shard Merge finishes the SAME
+tree, so ``compile_plan(root, mesh)`` results are BIT-IDENTICAL to
+``compile_plan(root, None)`` — asserted per-plan by the mesh-equivalence
+harness in tests/conftest.py.  Per-device memory is O(rows / shards) for
+every pipeline stage (plus gathered join build sides and group-level
+state), not O(total rows).
 
 Node zoo (Table I rows in brackets):
 
@@ -32,7 +59,9 @@ import dataclasses
 from typing import Callable, Dict, Sequence
 
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..core import uda
 from . import operators as ops
 from .table import Table
@@ -170,176 +199,299 @@ def _freq_slabs(num_freq: int, max_groups: int, budget: int) -> tuple:
 _RESERVED_OUT_KEYS = frozenset({"valid", "keys", "confidence"})
 
 
+@dataclasses.dataclass
+class _Rel:
+    """A relation mid-plan: a (possibly shard-local) Table plus whether its
+    rows are partitioned over the mesh's data axes.  Group-level outputs
+    (ReweightGreater / Project) and gathered build sides are replicated —
+    every shard holds the identical full Table."""
+    table: Table
+    sharded: bool
+
+
 def compile_plan(root: Node, mesh=None, *,
                  data_axes: Sequence[str] = ("data",),
                  model_axis: str | None = "model",
-                 cf_budget_elems: int = 1 << 22):
+                 cf_budget_elems: int = 1 << 22,
+                 canonical_chunks: int = 8,
+                 join_gather_budget: int = 1 << 20):
     """Emit a function tables -> result (Table or dict of arrays).
 
-    With ``mesh``, `GroupAgg` / `ReweightGreater` aggregation runs under
-    shard_map on the mesh's data axes; results match the mesh=None compile.
+    With ``mesh``, the WHOLE plan runs inside one shard_map over the
+    mesh's data axes — scans, selects, joins, group-id assignment and
+    aggregation all consume shard-local row blocks (see module docstring
+    for the per-operator protocol); results are bit-identical to the
+    mesh=None compile.  Tuples stay replicated over ``model_axis`` (every
+    collective here runs on the data axes only, so model replicas remain
+    bit-identical and need no reconciliation).
+
+    ``canonical_chunks`` is the fixed accumulation grid that makes results
+    shard-count-invariant: it must be a power of two and a multiple of the
+    mesh's data-shard count.  ``join_gather_budget`` caps the rows of an
+    FKJoin build side that may be all-gathered; larger right subtrees are
+    evaluated replicated instead.
 
     ``cf_budget_elems`` bounds the total live exact-CF state elements of a
     `GroupAgg(method="exact")` node — counting both the log-abs and angle
     (max_groups, slab) arrays of every exact aggregate on the node.  When
     the full (max_groups, num_freq) state would exceed it, the compiler
-    runs multiple accumulation passes over frequency slabs (additively
-    psum-merged per slab on a mesh) and concatenates the slab states
-    before the one batched-FFT Finalize.
+    runs multiple accumulation passes over frequency slabs (each slab
+    collective-merged on a mesh) and concatenates the slab states before
+    the one batched-FFT Finalize.
     """
-    # One jitted distributed step per (aggregation node, slab), built on
-    # first call (a step depends only on static config, not data).
-    dist_steps: dict = {}
+    from . import distributed as dist
 
-    def accumulate(node, udas, t, values, ids, max_groups, step_key=0):
-        """ONE pass over the child's tuples for every UDA of the node —
-        distributed Accumulate/Merge when a mesh is given."""
-        probs = t.masked_prob()
-        if mesh is None:
-            return uda.accumulate(udas, probs, values, ids,
-                                  max_groups=max_groups)
-        from . import distributed as dist
-        step = dist_steps.get((id(node), step_key))
-        if step is None:
-            # Grouped exact-CF states keep their frequency window replicated
-            # over the model axis (the kernel needs a static freq_lo); the
-            # psum over the data axes is the only cross-shard Merge, and
-            # model replicas stay bit-identical, so model-axis
-            # reconciliation is skipped for passes that carry a CF state.
-            m_axis = None if any(isinstance(u, uda.SumCF)
-                                 for u in udas.values()) else model_axis
-            step = dist.make_uda_step(mesh, lambda size, rank: udas,
-                                      max_groups=max_groups,
-                                      data_axes=data_axes,
-                                      model_axis=m_axis,
-                                      post=lambda _u, states: states)
-            dist_steps[(id(node), step_key)] = step
-        probs, values, ids = dist.pad_for(mesh, probs, values, ids,
-                                          max_groups=max_groups,
-                                          data_axes=data_axes)
-        return step(probs, values, ids)
+    mesh_mode = mesh is not None
+    axes = dist._tuple_axes(mesh, data_axes) if mesh_mode else ()
+    shards = 1
+    for a in axes:
+        shards *= mesh.shape[a]
+    chunks = canonical_chunks
+    if chunks & (chunks - 1) or chunks <= 0:
+        raise ValueError(f"canonical_chunks must be a power of two, "
+                         f"got {chunks}")
+    if chunks % shards:
+        raise ValueError(
+            f"the canonical chunk grid ({chunks}) must be a multiple of the "
+            f"mesh's data-shard count ({shards}): pass a larger power-of-two "
+            f"canonical_chunks to compile_plan (bit-reproducible sharding "
+            f"needs a power-of-two data-shard count)")
+    local_chunks = chunks // shards
 
-    def run(node: Node, tables: Dict[str, Table]):
+    # Global (pre-shard) padded capacities of the current compile, set by
+    # `compiled` before tracing: the build-side budget must see global row
+    # counts even inside shard_map, where tables are 1/shards-sized blocks.
+    global_caps: dict = {}
+
+    def _cap(node: Node) -> int:
+        """Static GLOBAL output capacity (rows) of a relational subtree."""
         if isinstance(node, Scan):
-            return tables[node.name]
-        if isinstance(node, Select):
-            return ops.select(run(node.child, tables), node.pred)
-        if isinstance(node, Map):
-            t = run(node.child, tables)
-            return t.with_column(node.name, node.fn(t))
+            return global_caps[node.name]
+        if isinstance(node, (Select, Map)):
+            return _cap(node.child)
         if isinstance(node, FKJoin):
-            return ops.fk_join(run(node.left, tables),
-                               run(node.right, tables),
-                               node.left_key, node.right_key,
-                               list(node.right_cols))
-        if isinstance(node, Project):
-            return ops.project(run(node.child, tables), list(node.keys),
-                               node.max_groups)
-        if isinstance(node, GroupAgg):
-            t = run(node.child, tables)
-            ids, codes, gvalid = ops.group_ids(t, list(node.keys),
-                                               node.max_groups)
-
-            specs = [(_out_key(node.agg, node.method), node.value, node.agg,
-                      node.method)] + list(node.extra)
-            names = [s[0] for s in specs]
-            clashes = set(names) & _RESERVED_OUT_KEYS
-            if clashes or len(set(names)) != len(names):
-                raise ValueError(
-                    f"GroupAgg aggregate names must be unique and avoid "
-                    f"{sorted(_RESERVED_OUT_KEYS)}; got {names}")
-            values: dict = {}
-            cols: dict = {}        # fetch each source column exactly once
-            for name, value, agg, method in specs:
-                if agg == "COUNT" or not value:
-                    values[name] = None
-                else:
-                    # Keep the raw column (uda.accumulate casts to the prob
-                    # dtype itself): an integer source dtype is what makes
-                    # an exact-CF aggregate eligible for the Pallas kernel.
-                    if value not in cols:
-                        cols[value] = t[value]
-                    values[name] = cols[value]
-
-            # Exact-CF states are (G, F) — chunk F against the memory
-            # budget.  Pass 0 carries every aggregate (the riders share ONE
-            # accumulation); later passes re-stream the tuples for the
-            # remaining frequency slabs of the exact aggregates only.
-            exact_names = [s[0] for s in specs if s[3] == "exact"]
-            # The budget bounds TOTAL live exact-state elements: each exact
-            # aggregate carries two (G, slab) arrays (log-abs + angle) and
-            # every exact aggregate rides the same slab pass.
-            slabs = (_freq_slabs(node.num_freq, node.max_groups,
-                                 cf_budget_elems // (2 * len(exact_names)))
-                     if exact_names else ((0, node.num_freq),))
-            udas: dict = {}
-            states: dict = {}
-            for si, (lo, cnt) in enumerate(slabs):
-                udas_i: dict = {}
-                vals_i: dict = {}
-                if si == 0:
-                    udas_i["confidence"] = uda.AtLeastOne()
-                    vals_i["confidence"] = None
-                    for name, value, agg, method in specs:
-                        if method != "exact":
-                            udas_i[name] = _agg_uda(agg, method, node.kappa)
-                            vals_i[name] = values[name]
-                for name, value, agg, method in specs:
-                    if method == "exact":
-                        udas_i[name] = _agg_uda(agg, method, node.kappa,
-                                                node.num_freq, lo, cnt)
-                        vals_i[name] = values[name]
-                sts = accumulate(node, udas_i, t, vals_i, ids,
-                                 node.max_groups, step_key=si)
-                for name, st in sts.items():
-                    if name in states:          # append the frequency slab
-                        prev = states[name]
-                        states[name] = uda.CFState(
-                            jnp.concatenate([prev.log_abs, st.log_abs], -1),
-                            jnp.concatenate([prev.angle, st.angle], -1))
-                    else:
-                        states[name] = st
-                        udas[name] = udas_i[name]
-            for name in exact_names:            # full-range Finalize UDA
-                udas[name] = _agg_uda("SUM", "exact", node.kappa,
-                                      node.num_freq)
-
-            out = dict(valid=gvalid,
-                       keys=ops.group_key_columns(t, list(node.keys), ids,
-                                                  node.max_groups),
-                       confidence=udas["confidence"].finalize(
-                           states["confidence"]))
-            for name, value, agg, method in specs:
-                u, st = udas[name], states[name]
-                if agg in ("MIN", "MAX"):
-                    out[name] = ops.minmax_runs(u, st)
-                else:
-                    out[name] = u.finalize(st)
-            return out
-        if isinstance(node, ReweightGreater):
-            if not node.threshold_col and node.threshold is None:
-                raise ValueError("ReweightGreater needs threshold_col or a "
-                                 "constant threshold")
-            t = run(node.child, tables)
-            ids, codes, gvalid = ops.group_ids(t, list(node.keys),
-                                               node.max_groups)
-            udas = {"confidence": uda.AtLeastOne(), "sum": uda.SumNormal()}
-            values = {"sum": t[node.value].astype(t.prob.dtype)}
-            states = accumulate(node, udas, t, values, ids, node.max_groups)
-            mu, var = udas["sum"].finalize(states["sum"])
-            conf = udas["confidence"].finalize(states["confidence"])
-
-            carry = list(node.keys) + list(node.carry_cols)
-            if node.threshold_col:
-                gcols = ops.group_key_columns(
-                    t, carry + [node.threshold_col], ids, node.max_groups)
-                thr = gcols[node.threshold_col].astype(mu.dtype)
-            else:
-                gcols = ops.group_key_columns(t, carry, ids, node.max_groups)
-                thr = jnp.asarray(node.threshold, mu.dtype)
-            p_gt = ops.normal_greater(mu, var, thr)
-            cols = {k: gcols[k] for k in carry}
-            return Table(cols, conf * p_gt, gvalid)
+            return _cap(node.left)
+        if isinstance(node, (Project, ReweightGreater)):
+            return node.max_groups
         raise TypeError(node)
 
-    return lambda tables: run(root, tables)
+    def _repl_scans(node: Node, out: set, repl: bool = False):
+        """Names of base tables that some over-budget FKJoin build subtree
+        scans — these are fed into the shard_map replicated as well."""
+        if isinstance(node, Scan):
+            if repl:
+                out.add(node.name)
+        elif isinstance(node, FKJoin):
+            _repl_scans(node.left, out, repl)
+            big = _cap(node.right) > join_gather_budget
+            _repl_scans(node.right, out, repl or big)
+        else:
+            _repl_scans(node.child, out, repl)
+
+    def run_plan(sh_tables: Dict[str, Table], rp_tables: Dict[str, Table]):
+        """Execute the plan; in mesh mode this body runs inside shard_map
+        (sh_tables are local row blocks, rp_tables replicated)."""
+
+        def acc(udas_d, rel: _Rel, values, ids, max_groups):
+            """ONE canonical chunked pass over the relation's tuples for
+            every UDA of the node, plus the cross-shard Merge when the
+            rows are partitioned.  The chunk grid is the same in every
+            compile: a sharded pass runs its chunks/shards local chunks
+            and allgather_merge finishes the identical fold tree."""
+            probs = rel.table.masked_prob()
+            states = uda.accumulate_chunked(
+                udas_d, probs, values, ids, max_groups=max_groups,
+                num_chunks=local_chunks if rel.sharded else chunks)
+            if rel.sharded and axes:
+                states = dist.allgather_merge(udas_d, states, axes)
+            return states
+
+        def rel_group_ids(rel: _Rel, keys, max_groups):
+            if rel.sharded and axes:
+                return dist.group_ids_sharded(rel.table, list(keys),
+                                              max_groups, axes)
+            return ops.group_ids(rel.table, list(keys), max_groups)
+
+        def rel_key_columns(rel: _Rel, keys, ids, max_groups):
+            if rel.sharded and axes:
+                return dist.group_key_columns_sharded(rel.table, keys, ids,
+                                                      max_groups, axes)
+            return ops.group_key_columns(rel.table, keys, ids, max_groups)
+
+        def run(node: Node, repl: bool):
+            if isinstance(node, Scan):
+                if repl:
+                    return _Rel(rp_tables[node.name], False)
+                return _Rel(sh_tables[node.name], mesh_mode and bool(axes))
+            if isinstance(node, Select):
+                r = run(node.child, repl)
+                return _Rel(ops.select(r.table, node.pred), r.sharded)
+            if isinstance(node, Map):
+                r = run(node.child, repl)
+                return _Rel(r.table.with_column(node.name, node.fn(r.table)),
+                            r.sharded)
+            if isinstance(node, FKJoin):
+                lrel = run(node.left, repl)
+                big = mesh_mode and _cap(node.right) > join_gather_budget
+                rrel = run(node.right, repl or big)
+                rtab = rrel.table
+                if rrel.sharded and axes:
+                    # Broadcast the small build side: all-gather only the
+                    # probe key + carried columns (plus p and valid).
+                    rtab = dist.gather_table(
+                        rtab.select_columns(
+                            dict.fromkeys((node.right_key,)
+                                          + tuple(node.right_cols))),
+                        axes)
+                return _Rel(ops.fk_join(lrel.table, rtab, node.left_key,
+                                        node.right_key,
+                                        list(node.right_cols)),
+                            lrel.sharded)
+            if isinstance(node, Project):
+                rel = run(node.child, repl)
+                ids, _, gvalid = rel_group_ids(rel, node.keys,
+                                               node.max_groups)
+                u = uda.AtLeastOne()
+                st = acc({"conf": u}, rel, {"conf": None}, ids,
+                         node.max_groups)["conf"]
+                cols = rel_key_columns(rel, list(node.keys), ids,
+                                       node.max_groups)
+                return _Rel(Table(cols, u.finalize(st), gvalid), False)
+            if isinstance(node, GroupAgg):
+                rel = run(node.child, repl)
+                ids, _, gvalid = rel_group_ids(rel, node.keys,
+                                               node.max_groups)
+
+                specs = [(_out_key(node.agg, node.method), node.value,
+                          node.agg, node.method)] + list(node.extra)
+                names = [s[0] for s in specs]
+                clashes = set(names) & _RESERVED_OUT_KEYS
+                if clashes or len(set(names)) != len(names):
+                    raise ValueError(
+                        f"GroupAgg aggregate names must be unique and avoid "
+                        f"{sorted(_RESERVED_OUT_KEYS)}; got {names}")
+                values: dict = {}
+                cols: dict = {}    # fetch each source column exactly once
+                for name, value, agg, method in specs:
+                    if agg == "COUNT" or not value:
+                        values[name] = None
+                    else:
+                        # Keep the raw column (uda.accumulate casts to the
+                        # prob dtype itself): an integer source dtype is
+                        # what makes an exact-CF aggregate eligible for the
+                        # Pallas kernel.
+                        if value not in cols:
+                            cols[value] = rel.table[value]
+                        values[name] = cols[value]
+
+                # Exact-CF states are (G, F) — chunk F against the memory
+                # budget.  Pass 0 carries every aggregate (the riders share
+                # ONE accumulation); later passes re-stream the tuples for
+                # the remaining frequency slabs of the exact aggregates.
+                exact_names = [s[0] for s in specs if s[3] == "exact"]
+                # The budget bounds TOTAL live exact-state elements: each
+                # exact aggregate carries two (G, slab) arrays (log-abs +
+                # angle) and every exact aggregate rides the same slab pass.
+                slabs = (_freq_slabs(node.num_freq, node.max_groups,
+                                     cf_budget_elems // (2 * len(exact_names)))
+                         if exact_names else ((0, node.num_freq),))
+                udas: dict = {}
+                states: dict = {}
+                for si, (lo, cnt) in enumerate(slabs):
+                    udas_i: dict = {}
+                    vals_i: dict = {}
+                    if si == 0:
+                        udas_i["confidence"] = uda.AtLeastOne()
+                        vals_i["confidence"] = None
+                        for name, value, agg, method in specs:
+                            if method != "exact":
+                                udas_i[name] = _agg_uda(agg, method,
+                                                        node.kappa)
+                                vals_i[name] = values[name]
+                    for name, value, agg, method in specs:
+                        if method == "exact":
+                            udas_i[name] = _agg_uda(agg, method, node.kappa,
+                                                    node.num_freq, lo, cnt)
+                            vals_i[name] = values[name]
+                    sts = acc(udas_i, rel, vals_i, ids, node.max_groups)
+                    for name, st in sts.items():
+                        if name in states:      # append the frequency slab
+                            prev = states[name]
+                            states[name] = uda.CFState(
+                                jnp.concatenate([prev.log_abs, st.log_abs],
+                                                -1),
+                                jnp.concatenate([prev.angle, st.angle], -1))
+                        else:
+                            states[name] = st
+                            udas[name] = udas_i[name]
+                for name in exact_names:        # full-range Finalize UDA
+                    udas[name] = _agg_uda("SUM", "exact", node.kappa,
+                                          node.num_freq)
+
+                out = dict(valid=gvalid,
+                           keys=rel_key_columns(rel, list(node.keys), ids,
+                                                node.max_groups),
+                           confidence=udas["confidence"].finalize(
+                               states["confidence"]))
+                for name, value, agg, method in specs:
+                    u, st = udas[name], states[name]
+                    if agg in ("MIN", "MAX"):
+                        out[name] = ops.minmax_runs(u, st)
+                    else:
+                        out[name] = u.finalize(st)
+                return out
+            if isinstance(node, ReweightGreater):
+                if not node.threshold_col and node.threshold is None:
+                    raise ValueError("ReweightGreater needs threshold_col "
+                                     "or a constant threshold")
+                rel = run(node.child, repl)
+                ids, _, gvalid = rel_group_ids(rel, node.keys,
+                                               node.max_groups)
+                udas = {"confidence": uda.AtLeastOne(),
+                        "sum": uda.SumNormal()}
+                values = {"sum":
+                          rel.table[node.value].astype(rel.table.prob.dtype)}
+                states = acc(udas, rel, values, ids, node.max_groups)
+                mu, var = udas["sum"].finalize(states["sum"])
+                conf = udas["confidence"].finalize(states["confidence"])
+
+                carry = list(node.keys) + list(node.carry_cols)
+                if node.threshold_col:
+                    gcols = rel_key_columns(
+                        rel, carry + [node.threshold_col], ids,
+                        node.max_groups)
+                    thr = gcols[node.threshold_col].astype(mu.dtype)
+                else:
+                    gcols = rel_key_columns(rel, carry, ids,
+                                            node.max_groups)
+                    thr = jnp.asarray(node.threshold, mu.dtype)
+                p_gt = ops.normal_greater(mu, var, thr)
+                cols = {k: gcols[k] for k in carry}
+                return _Rel(Table(cols, conf * p_gt, gvalid), False)
+            raise TypeError(node)
+
+        out = run(root, False)
+        if isinstance(out, _Rel):
+            if out.sharded and axes:
+                return dist.gather_table(out.table, axes)
+            return out.table
+        return out
+
+    def compiled(tables: Dict[str, Table]):
+        # Both compiles pad every base table to the canonical chunk grid:
+        # the chunk boundaries define the deterministic fold tree (and the
+        # even contiguous row partition on a mesh).
+        padded = {k: t.pad_to_multiple(chunks) for k, t in tables.items()}
+        global_caps.clear()
+        global_caps.update({k: t.capacity for k, t in padded.items()})
+        if not mesh_mode:
+            return run_plan(padded, padded)
+        repl_names: set = set()
+        _repl_scans(root, repl_names)
+        rp_tables = {k: padded[k] for k in sorted(repl_names)}
+        fn = shard_map(run_plan, mesh=mesh,
+                       in_specs=(P(axes), P()), out_specs=P(),
+                       check_vma=False)
+        return fn(padded, rp_tables)
+
+    return compiled

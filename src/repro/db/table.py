@@ -16,6 +16,16 @@ structure with prob = 1.  PGF-valued attributes (aggregation results) are
 carried outside the Table as UDA states / dense PGFs by the plan layer —
 1NF columns here are scalars only, matching the paper's "single valued" vs
 "probability distribution" column split (§VI-C).
+
+Sharded layout (the distributed frontend of ``db/plans.py``): a Table is
+row-partitioned over a mesh's data axes as contiguous equal blocks — each
+shard holds a plain Table whose arrays are its local rows, valid mask
+included, so every relational operator runs unchanged on the block.
+``pad_to_multiple`` grows the capacity to the compiler's canonical chunk
+grid first (pad rows are invalid with p = 0, indistinguishable from absent
+tuples for every operator), which makes the global row order the
+concatenation of the shard blocks and keeps chunk boundaries aligned
+across shard counts.
 """
 from __future__ import annotations
 
@@ -104,6 +114,12 @@ class Table:
         cols = {k: jnp.pad(v, (0, pad)) for k, v in self.columns.items()}
         return Table(cols, jnp.pad(self.prob, (0, pad)),
                      jnp.pad(self.valid, (0, pad)))
+
+    def pad_to_multiple(self, multiple: int) -> "Table":
+        """Pad with invalid p = 0 rows so `multiple` divides the capacity —
+        the entry point of the plan compiler's canonical chunk grid (and
+        of even row-sharding: the grid is a multiple of the shard count)."""
+        return self.pad_to(-(-self.capacity // multiple) * multiple)
 
 
 def concat(a: Table, b: Table) -> Table:

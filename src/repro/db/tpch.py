@@ -14,11 +14,14 @@ paper's four modes:
 
 Queries: Q1, Q3, Q6, Q18 and the paper's worked example Q20 (Fig. 6).
 Every probabilistic mode is expressed as a `Plan` DAG and executed through
-``compile_plan`` — pass ``mesh=`` to any query and the same plan runs its
-aggregations distributed (Accumulate / psum-Merge / replicated Finalize),
-which is how the TPC-H benchmarks exercise the planner end-to-end on one
-device and on a pod.  Dates are day numbers (int), prices/quantities
-integers — the paper's own integer-grid restriction (§V-C.2).
+``compile_plan`` — pass ``mesh=`` to any query and the same plan runs the
+WHOLE pipeline sharded (scans, selects, FK joins, group-id assignment and
+aggregation all consume row-partitioned shard-local tables inside one
+shard_map; see db/plans.py), with results BIT-IDENTICAL to the
+single-device compile and O(rows / shards) per-device memory.  This is how
+the TPC-H benchmarks exercise the planner end-to-end on one device and on
+a pod.  Dates are day numbers (int), prices/quantities integers — the
+paper's own integer-grid restriction (§V-C.2).
 """
 from __future__ import annotations
 
@@ -73,6 +76,10 @@ def generate(n_orders: int = 2000, lines_per_order: int = 4,
              seed: int = 0, prob_mode: str = "uniform") -> TPCH:
     rng = np.random.default_rng(seed)
     n_lineitem = n_orders * lines_per_order
+    if n_suppliers < 4:
+        raise ValueError(
+            f"generate() needs n_suppliers >= 4 (got {n_suppliers}): the "
+            "partsupp schema keys 4 DISTINCT suppliers per part")
     n_partsupp = n_parts * 4
 
     def probs(n):
@@ -99,7 +106,11 @@ def generate(n_orders: int = 2000, lines_per_order: int = 4,
     }, prob=jnp.asarray(probs(n_parts)))
 
     ps_part = np.repeat(np.arange(n_parts), 4)
-    ps_supp = rng.integers(0, n_suppliers, n_partsupp)
+    # 4 DISTINCT suppliers per part: ps_pskey is an FK-join build key, and
+    # fk_join's many-to-one contract rejects duplicate valid build keys (a
+    # duplicate would silently drop one world's probability mass).
+    ps_supp = np.argsort(rng.random((n_parts, n_suppliers)),
+                         axis=1)[:, :4].reshape(-1)
     partsupp = Table.from_columns({
         "ps_partkey": jnp.asarray(ps_part),
         "ps_suppkey": jnp.asarray(ps_supp),

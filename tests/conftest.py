@@ -32,3 +32,66 @@ def run_sub(script: str, devices: int = 2) -> str:
 def rng():
     import numpy as np
     return np.random.default_rng(0)
+
+
+# --------------------------------------------------- mesh-equivalence harness
+# `compile_plan(root, mesh)` promises BIT-IDENTICAL results to the
+# single-device compile (the canonical-chunk fold tree, db/plans.py).  The
+# harness runs a setup script under a multi-device CPU subprocess and
+# asserts exact equality — shapes, dtypes and every bit of every leaf.
+_MESH_EQUIV_TEMPLATE = '''
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
+from repro.core import enable_x64
+enable_x64()
+from repro.db import tpch
+from repro.db.plans import (FKJoin, GroupAgg, Map, Project, ReweightGreater,
+                            Scan, Select, compile_plan)
+from repro.db.table import Table
+mesh = make_mesh((__DEVICES__,), ("data",))
+
+__SETUP__
+
+if "pairs" not in dir():
+    # default harness shape: setup defined `plan` and `tables`
+    pairs = [("plan", compile_plan(plan, None)(tables),
+              compile_plan(plan, mesh)(tables))]
+
+for name, ref, got in pairs:
+    la, ta = jax.tree.flatten(ref)
+    lb, tb = jax.tree.flatten(got)
+    assert str(ta) == str(tb), (name, str(ta), str(tb))
+    for i, (a, b) in enumerate(zip(la, lb)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape and a.dtype == b.dtype, \\
+            (name, i, a.shape, b.shape, a.dtype, b.dtype)
+        if not np.array_equal(a, b):
+            eq = a == b
+            f = a.astype(np.float64, copy=False)
+            g = b.astype(np.float64, copy=False)
+            eq |= np.isnan(f) & np.isnan(g)      # NaN == NaN for the diff
+            bad = np.flatnonzero(~eq)
+            raise AssertionError(
+                name + " leaf " + str(i) + ": " + str(bad.size)
+                + " of " + str(a.size) + " elements differ, max |d| = "
+                + str(np.nanmax(np.abs(f - g))))
+print("BITEQ OK")
+'''
+
+
+@pytest.fixture
+def mesh_equiv():
+    """Run `setup` under a multi-device CPU subprocess and assert that
+    compile_plan on the 1-D data mesh is bit-equal to the single-device
+    compile.  `setup` either defines `plan` and `tables`, or a `pairs`
+    list of (name, ref_pytree, got_pytree) for query-level checks; the
+    subprocess exposes `mesh`, `tpch`, every plan Node and `compile_plan`.
+    """
+    def check(setup: str, devices: int = 2) -> str:
+        script = (_MESH_EQUIV_TEMPLATE
+                  .replace("__DEVICES__", str(devices))
+                  .replace("__SETUP__", setup))
+        out = run_sub(script, devices=devices)
+        assert "BITEQ OK" in out
+        return out
+    return check

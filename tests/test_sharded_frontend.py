@@ -1,0 +1,266 @@
+"""The sharded relational frontend's protocol pieces vs brute force.
+
+Three layers:
+  * the distributed group-id protocol (local unique -> merge of per-shard
+    code tables -> searchsorted) is pure integer math, so it is fuzzed
+    in-process against the single-pass `jnp.unique` oracle — under
+    `hypothesis` when installed, and always via seeded fallbacks (the
+    test_pgf.py pattern);
+  * fk_join contract enforcement (duplicate build keys, nonnegative group
+    keys) and possible-worlds parity, single-device;
+  * subprocess tests on a real 2-device mesh: sharded fk_join
+    possible-worlds parity and the replicated build-side budget fallback.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.db import operators as ops
+from repro.db.plans import FKJoin, GroupAgg, Scan, compile_plan
+from repro.db.table import Table
+
+
+# ------------------------------------------------ group-id protocol fuzz
+def _check_group_ids_protocol(keys, valid, max_groups, n_shards):
+    """Sharded two-phase group ids == single-pass oracle, bit for bit."""
+    keys = np.asarray(keys, np.int64)
+    valid = np.asarray(valid, bool)
+    t = Table.from_columns({"k": jnp.asarray(keys)}, valid=jnp.asarray(valid))
+    ids_ref, codes_ref, gv_ref = ops.group_ids(t, ["k"], max_groups)
+
+    code_live, big = ops.live_key_codes(t, ["k"])
+    n = keys.shape[0]
+    per = -(-n // n_shards)
+    cl = jnp.pad(code_live, (0, per * n_shards - n), constant_values=big)
+    local = [ops.merge_group_codes(cl[s * per:(s + 1) * per], max_groups)
+             for s in range(n_shards)]
+    merged = ops.merge_group_codes(jnp.concatenate(local), max_groups)
+    ids = ops.codes_to_ids(code_live, merged)
+
+    np.testing.assert_array_equal(np.asarray(merged), np.asarray(codes_ref))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_ref))
+    np.testing.assert_array_equal(np.asarray(merged != big),
+                                  np.asarray(gv_ref))
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("n_shards", [2, 3, 4, 8])
+def test_group_ids_protocol_seeded(seed, n_shards):
+    """Duplicates, invalid rows, and near/over-capacity cardinality: the
+    merge of per-shard code tables is exact even when shards drop codes
+    (operators.merge_group_codes), so overflow clipping matches too."""
+    r = np.random.default_rng(seed)
+    n = int(r.integers(4, 65))
+    max_groups = int(r.integers(2, 17))
+    # key range around max_groups drives near- and over-capacity cases
+    keys = r.integers(0, max(1, int(max_groups * r.uniform(0.5, 2.0))), n)
+    valid = r.uniform(0, 1, n) > 0.3
+    _check_group_ids_protocol(keys, valid, max_groups, n_shards)
+
+
+def test_group_ids_protocol_edge_cases():
+    # all rows invalid; single live key; exactly max_groups distinct keys
+    _check_group_ids_protocol([3, 1, 4], [False, False, False], 4, 2)
+    _check_group_ids_protocol([7] * 6, [True] * 6, 4, 3)
+    _check_group_ids_protocol(np.arange(8), [True] * 8, 8, 4)
+
+
+def test_group_ids_protocol_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(st.integers(0, 24), min_size=1, max_size=48),
+           st.data(), st.integers(2, 16), st.sampled_from([2, 3, 4, 8]))
+    def run(keys, data, max_groups, n_shards):
+        valid = data.draw(st.lists(st.booleans(), min_size=len(keys),
+                                   max_size=len(keys)))
+        _check_group_ids_protocol(keys, valid, max_groups, n_shards)
+
+    run()
+
+
+# ------------------------------------------- nonnegative-key enforcement
+def test_group_ids_rejects_negative_keys():
+    t = Table.from_columns({"k": jnp.asarray([1, -2, 3])})
+    with pytest.raises(ValueError, match="negative"):
+        ops.group_ids(t, ["k"], 4)
+
+
+def test_group_key_columns_rejects_negative_keys():
+    t = Table.from_columns({"k": jnp.asarray([0, 1, 2]),
+                            "c": jnp.asarray([5, -1, 7])})
+    ids, _, _ = ops.group_ids(t, ["k"], 4)
+    with pytest.raises(ValueError, match="negative"):
+        ops.group_key_columns(t, ["c"], ids, 4)
+
+
+def test_negative_key_on_invalid_row_is_fine():
+    """Dead rows never write representatives — only valid rows are
+    checked (the identity-0 write is exactly what the mask is for)."""
+    t = Table.from_columns({"k": jnp.asarray([1, -2, 3])},
+                           valid=jnp.asarray([True, False, True]))
+    ids, codes, gvalid = ops.group_ids(t, ["k"], 4)
+    assert int(np.asarray(gvalid).sum()) == 2
+
+
+def test_compile_plan_surfaces_negative_key_error():
+    t = Table.from_columns({"g": jnp.asarray([0, -1, 2]),
+                            "v": jnp.asarray([1, 1, 1])})
+    plan = GroupAgg(Scan("t"), ("g",), "v", "SUM", 4)
+    with pytest.raises(ValueError, match="negative"):
+        compile_plan(plan)({"t": t})
+
+
+def test_compile_plan_rejects_bad_chunk_grids():
+    t = Table.from_columns({"g": jnp.asarray([0, 1]),
+                            "v": jnp.asarray([1, 1])})
+    plan = GroupAgg(Scan("t"), ("g",), "v", "SUM", 4)
+    with pytest.raises(ValueError, match="power of two"):
+        compile_plan(plan, canonical_chunks=6)
+
+
+# ---------------------------------------------------- fk_join semantics
+def test_fk_join_rejects_duplicate_valid_build_keys():
+    left = Table.from_columns({"k": jnp.asarray([0, 1])})
+    right = Table.from_columns({"k": jnp.asarray([1, 1, 2]),
+                                "pay": jnp.asarray([10, 11, 12])})
+    with pytest.raises(ValueError, match="duplicate valid keys"):
+        ops.fk_join(left, right, "k", "k", ["pay"])
+    # the same key duplicated on an INVALID row is fine
+    right2 = right.with_valid(jnp.asarray([True, False, True]))
+    out = ops.fk_join(left, right2, "k", "k", ["pay"])
+    assert int(out["pay"][1]) == 10
+
+
+def _worlds_fk_join_marginals(left, right, lk, rk):
+    """Brute-force P(output row present) per left row: enumerate presence
+    worlds of both relations; a row survives iff its tuple and its unique
+    valid key match are both present."""
+    lp = np.asarray(left.prob)
+    rp = np.asarray(right.prob)
+    lv = np.asarray(left.valid)
+    rv = np.asarray(right.valid)
+    lkv = np.asarray(left[lk])
+    rkv = np.asarray(right[rk])
+    nl, nr = lp.size, rp.size
+    marg = np.zeros(nl)
+    for wl in range(1 << nl):
+        pl_w = np.prod([lp[i] if wl >> i & 1 else 1 - lp[i]
+                        for i in range(nl)])
+        for wr in range(1 << nr):
+            pw = pl_w * np.prod([rp[j] if wr >> j & 1 else 1 - rp[j]
+                                 for j in range(nr)])
+            for i in range(nl):
+                if not (lv[i] and wl >> i & 1):
+                    continue
+                match = [j for j in range(nr)
+                         if rv[j] and (wr >> j & 1) and rkv[j] == lkv[i]]
+                if match:
+                    marg[i] += pw
+    return marg
+
+
+def _tiny_join_tables(rng):
+    # left keys include 3 (missing from the valid build side) and an
+    # invalid left row; right carries a probability column via `pay`.
+    left = Table.from_columns(
+        {"k": jnp.asarray([0, 1, 2, 3, 1, 0]),
+         "lv": jnp.asarray([5, 6, 7, 8, 9, 4])},
+        prob=jnp.asarray(rng.uniform(0.1, 0.9, 6)),
+        valid=jnp.asarray([True, True, True, True, False, True]))
+    right = Table.from_columns(
+        {"k": jnp.asarray([0, 1, 2, 3]),
+         "pay": jnp.asarray([10, 11, 12, 13])},
+        prob=jnp.asarray(rng.uniform(0.1, 0.9, 4)),
+        valid=jnp.asarray([True, True, True, False]))  # key 3 dead
+    return left, right
+
+
+def test_fk_join_possible_worlds_parity(rng):
+    left, right = _tiny_join_tables(rng)
+    out = ops.fk_join(left, right, "k", "k", ["pay"])
+    marg = _worlds_fk_join_marginals(left, right, "k", "k")
+    got = np.where(np.asarray(out.valid), np.asarray(out.prob), 0.0)
+    np.testing.assert_allclose(got, marg, atol=1e-12)
+    # carried columns come from the unique match
+    for i in np.flatnonzero(np.asarray(out.valid)):
+        assert int(out["pay"][i]) == 10 + int(out["k"][i])
+
+
+# ------------------------------------------------- sharded-path parity
+@pytest.mark.multidevice
+def test_fk_join_sharded_worlds_parity(mesh_equiv):
+    """FKJoin through the sharded frontend: bit-equal to the single-device
+    compile, possible-worlds parity for the carried probabilities, and the
+    same answers when the build side falls back to replicated under a
+    tiny join_gather_budget."""
+    mesh_equiv("""
+import numpy as np
+rng = np.random.default_rng(7)
+left = Table.from_columns(
+    {"k": jnp.asarray([0, 1, 2, 3, 1, 0, 2, 1]),
+     "lv": jnp.asarray([5, 6, 7, 8, 9, 4, 3, 2])},
+    prob=jnp.asarray(rng.uniform(0.1, 0.9, 8)),
+    valid=jnp.asarray([True, True, True, True, False, True, True, True]))
+right = Table.from_columns(
+    {"k": jnp.asarray([0, 1, 2, 3]),
+     "pay": jnp.asarray([10, 11, 12, 13])},
+    prob=jnp.asarray(rng.uniform(0.1, 0.9, 4)),
+    valid=jnp.asarray([True, True, True, False]))
+tables = {"L": left, "R": right}
+plan = FKJoin(Scan("L"), Scan("R"), "k", "k", ("pay",))
+ref = compile_plan(plan, None)(tables)
+got = compile_plan(plan, mesh)(tables)
+repl = compile_plan(plan, mesh, join_gather_budget=1)(tables)
+pairs = [("gathered", ref, got), ("replicated-fallback", ref, repl)]
+
+# possible-worlds parity of the sharded output (padded rows are invalid)
+lp, rp = np.asarray(left.prob), np.asarray(right.prob)
+lv, rv = np.asarray(left.valid), np.asarray(right.valid)
+lk, rk = np.asarray(left["k"]), np.asarray(right["k"])
+marg = np.zeros(lp.size)
+for wl in range(1 << lp.size):
+    plw = np.prod([lp[i] if wl >> i & 1 else 1 - lp[i]
+                   for i in range(lp.size)])
+    for wr in range(1 << rp.size):
+        pw = plw * np.prod([rp[j] if wr >> j & 1 else 1 - rp[j]
+                            for j in range(rp.size)])
+        for i in range(lp.size):
+            if lv[i] and wl >> i & 1 and any(
+                    rv[j] and wr >> j & 1 and rk[j] == lk[i]
+                    for j in range(rp.size)):
+                marg[i] += pw
+p_out = np.where(np.asarray(got.valid), np.asarray(got.prob), 0.0)
+assert p_out.shape[0] >= lp.size and not p_out[lp.size:].any()
+np.testing.assert_allclose(p_out[:lp.size], marg, atol=1e-12)
+for i in np.flatnonzero(np.asarray(got.valid)):
+    assert int(got["pay"][i]) == 10 + int(got["k"][i])
+""")
+
+
+@pytest.mark.multidevice
+def test_group_ids_sharded_on_mesh(mesh_equiv):
+    """The real shard_map path of db.distributed.group_ids_sharded against
+    the single-device oracle, including near-capacity cardinality."""
+    mesh_equiv("""
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.db import distributed as dist
+from repro.db import operators as ops
+rng = np.random.default_rng(11)
+n, MG = 64, 16
+t = Table.from_columns(
+    {"k": jnp.asarray(rng.integers(0, 24, n))},
+    valid=jnp.asarray(rng.uniform(0, 1, n) > 0.3))
+ids_ref, codes_ref, gv_ref = ops.group_ids(t, ["k"], MG)
+
+def f(tt):
+    ids, codes, gv = dist.group_ids_sharded(tt, ["k"], MG, ("data",))
+    return jax.lax.all_gather(ids, "data", axis=0, tiled=True), codes, gv
+
+ids, codes, gv = shard_map(f, mesh=mesh, in_specs=(P("data"),),
+                           out_specs=P(), check_vma=False)(t)
+pairs = [("group_ids", (ids_ref, codes_ref, gv_ref), (ids, codes, gv))]
+""")

@@ -90,6 +90,21 @@ def test_queries_scale_invariant_shapes():
     assert jax.tree.map(jnp.shape, a) == jax.tree.map(jnp.shape, b)
 
 
+# --------------------------------------------------- sharded frontend
+@pytest.mark.multidevice
+@pytest.mark.parametrize("qname", sorted(tpch.QUERIES))
+def test_query_mesh_bit_equal(mesh_equiv, qname):
+    """Each TPC-H plan through the sharded frontend on a 2-device mesh is
+    BIT-IDENTICAL to the single-device compile, in every probabilistic
+    mode (scan/join/group-id inputs sharded end-to-end)."""
+    mesh_equiv(f"""
+db = tpch.generate(n_orders=48, seed=3)
+fn = tpch.QUERIES[{qname!r}]
+pairs = [(mode, fn(db, mode), fn(db, mode, mesh=mesh))
+         for mode in ("confidence", "group_confidence", "aggregate")]
+""")
+
+
 def test_deterministic_db_gives_deterministic_answers():
     """p = 1 everywhere: aggregate mode's mean == deterministic answer,
     variance == 0 (the gamma-embedding sanity check, §IV-E)."""

@@ -2,14 +2,13 @@
 
 Every registered UDA is checked grouped, masked, and with its state merged
 in two halves (any partition + any merge tree must give the same final
-distribution — that's what makes the shard_map/psum execution valid), plus
-a compile_plan(mesh) == compile_plan(None) equivalence on a 2-device CPU
-mesh (subprocess, own XLA_FLAGS)."""
+distribution — that's what makes the sharded execution valid), plus
+BIT-EQUAL compile_plan(mesh) == compile_plan(None) checks on 2- and
+4-device CPU meshes through the conftest mesh-equivalence harness."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import run_sub
 from repro.core import uda
 from repro.core.config import default_float
 from repro.core.pgf import possible_worlds_pgf
@@ -165,76 +164,47 @@ def test_every_registered_uda_constructs():
 
 # --------------------------------------------------- mesh-aware compilation
 @pytest.mark.multidevice
-def test_compile_plan_mesh_equivalence():
-    """compile_plan(root, mesh) == compile_plan(root) on a 2-device CPU
-    mesh, across GroupAgg methods, MIN/MAX, and ReweightGreater."""
-    out = run_sub("""
-import jax, jax.numpy as jnp, numpy as np
-from repro.compat import make_mesh
-from repro.core import enable_x64
-enable_x64()
-from repro.db import tpch
-from repro.db.plans import GroupAgg, ReweightGreater, Scan, compile_plan
-mesh = make_mesh((2,), ("data",))
+def test_compile_plan_mesh_equivalence(mesh_equiv):
+    """compile_plan(root, mesh) is BIT-EQUAL to compile_plan(root) on a
+    2-device CPU mesh, across GroupAgg methods, MIN/MAX, and
+    ReweightGreater (the sharded frontend's canonical-chunk fold tree)."""
+    mesh_equiv("""
 db = tpch.generate(n_orders=64, seed=5)
 tables = db.tables()
-plans = [
-    GroupAgg(Scan("lineitem"), ("l_returnflag", "l_linestatus"),
-             "l_quantity", "SUM", 8, "normal",
-             extra=(("c", "l_quantity", "SUM", "cumulants"),
-                    ("n", "", "COUNT", "normal"))),
-    GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity", "SUM", 128,
-             "exact", num_freq=256),
-    GroupAgg(Scan("lineitem"), ("l_returnflag",), "l_quantity", "MIN", 8,
-             kappa=64),
-    GroupAgg(Scan("lineitem"), ("l_returnflag",), "l_quantity", "MAX", 8,
-             kappa=64),
-    ReweightGreater(Scan("lineitem"), ("l_orderkey",), "l_quantity", "",
-                    128, threshold=80.0),
-]
-def check(ref, got, ctx):
-    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
-        a = jnp.asarray(a, jnp.float64)
-        b = jnp.asarray(b, jnp.float64)
-        # MIN/MAX value buffers carry +/-inf pads: masks must agree exactly,
-        # finite entries to 1e-6 (relative for the ~1e13 cumulant terms,
-        # where psum reordering noise scales with magnitude).
-        fa, fb = jnp.isfinite(a), jnp.isfinite(b)
-        assert bool(jnp.all(fa == fb)), ctx
-        af = jnp.where(fa, a, 0.0)
-        d = float(jnp.max(jnp.abs(af - jnp.where(fb, b, 0.0))))
-        assert d < 1e-6 * (1.0 + float(jnp.max(jnp.abs(af)))), (ctx, d)
-
-for plan in plans:
-    check(compile_plan(plan, None)(tables),
-          compile_plan(plan, mesh)(tables), plan)
-print("OK")
+plans = {
+    "normal": GroupAgg(Scan("lineitem"), ("l_returnflag", "l_linestatus"),
+                       "l_quantity", "SUM", 8, "normal",
+                       extra=(("c", "l_quantity", "SUM", "cumulants"),
+                              ("n", "", "COUNT", "normal"))),
+    "exact": GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity",
+                      "SUM", 128, "exact", num_freq=256),
+    "min": GroupAgg(Scan("lineitem"), ("l_returnflag",), "l_quantity",
+                    "MIN", 8, kappa=64),
+    "max": GroupAgg(Scan("lineitem"), ("l_returnflag",), "l_quantity",
+                    "MAX", 8, kappa=64),
+    "reweight": ReweightGreater(Scan("lineitem"), ("l_orderkey",),
+                                "l_quantity", "", 128, threshold=80.0),
+}
+pairs = [(name, compile_plan(p, None)(tables), compile_plan(p, mesh)(tables))
+         for name, p in plans.items()]
 """)
-    assert "OK" in out
 
 
 @pytest.mark.multidevice
-@pytest.mark.slow
-def test_tpch_queries_mesh_equivalence():
-    """Every TPC-H query/mode through the planner on a mesh matches the
-    single-device compile to 1e-6 (the fig7 benchmark contract)."""
-    out = run_sub("""
-import jax, jax.numpy as jnp
-from repro.compat import make_mesh
-from repro.core import enable_x64
-enable_x64()
-from repro.db import tpch
-mesh = make_mesh((2,), ("data",))
-db = tpch.generate(n_orders=48, seed=3)
-for qname, fn in tpch.QUERIES.items():
-    for mode in ("confidence", "group_confidence", "aggregate"):
-        ref = fn(db, mode)
-        got = fn(db, mode, mesh=mesh)
-        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
-            a = jnp.asarray(a, jnp.float64)
-            d = float(jnp.max(jnp.abs(a - jnp.asarray(b, jnp.float64))))
-            assert d < 1e-6 * (1.0 + float(jnp.max(jnp.abs(a)))), \
-                (qname, mode, d)
-print("OK")
-""")
-    assert "OK" in out
+def test_compile_plan_4dev_and_jit_bit_equal(mesh_equiv):
+    """The determinism contract holds for any power-of-two shard count
+    dividing the canonical chunk grid (here 4), and under jit (comparing
+    jitted against jitted — XLA fusion differs between jit and eager, but
+    sharding never does)."""
+    mesh_equiv("""
+db = tpch.generate(n_orders=64, seed=5)
+tables = db.tables()
+plan = GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity", "SUM", 128,
+                "normal", extra=(("c", "l_quantity", "SUM", "cumulants"),))
+pairs = [
+    ("eager", compile_plan(plan, None)(tables),
+     compile_plan(plan, mesh)(tables)),
+    ("jit", jax.jit(compile_plan(plan, None))(tables),
+     jax.jit(compile_plan(plan, mesh))(tables)),
+]
+""", devices=4)
