@@ -6,11 +6,14 @@ segment-UDA path) for every aggregation method — normal, cumulants, exact
 (grouped log-CF), min/max — plus the ReweightGreater plan shape, and prints
 wall times, so refactors of the UDA subsystem show perf regressions per-PR.
 It also measures the grouped-exact planner path against a per-group scalar
-``logcf`` loop (the pre-kernel execution strategy) at G >= 64, and the
+``logcf`` loop (the pre-kernel execution strategy) at G >= 64, the
 sharded relational frontend (the full shard_map pipeline on a 1-device
-('data',) mesh) so the distributed scan/join/group-id path is gated too;
-the baseline JSON additionally records the static replicated-vs-sharded
-peak rows/device accounting of the frontend.
+('data',) mesh) so the distributed scan/join/group-id path is gated too,
+and the gather- vs shuffle-lowered FK join (a per-join gather_budget
+forces the ShuffleJoin strategy).  The baseline JSON additionally records
+the static replicated-vs-sharded peak rows/device accounting of the
+frontend AND the gather-vs-shuffle build-side rows/device of a join whose
+build side exceeds the gather budget (the ShuffleJoin memory contract).
 
     PYTHONPATH=src python benchmarks/smoke.py [--mesh] [--check] [--update]
 
@@ -40,7 +43,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 os.pardir, "src"))
 
 from repro.db import tpch
-from repro.db.plans import GroupAgg, ReweightGreater, Scan, Select, compile_plan
+from repro.db.plans import (GroupAgg, ReweightGreater, Scan, Select,
+                            compile_plan, shard_capacity)
 
 BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "BENCH_smoke_baseline.json")
@@ -153,13 +157,70 @@ def frontend_layout(n_orders: int = 1000, shards: int = 8,
     """Static peak rows/device of the biggest relation (lineitem): the
     replicated frontend keeps every (chunk-padded) row on every device;
     the sharded frontend keeps the contiguous 1/shards block.  Uses the
-    same ``Table.pad_to_multiple`` entry point as ``compile_plan``, and is
-    gated against the checked-in baseline by ``--check`` so a layout
+    same ``plans.shard_capacity`` padding formula as ``compile_plan``, and
+    is gated against the checked-in baseline by ``--check`` so a layout
     regression (e.g. the frontend quietly re-replicating scans, or chunk
     padding blowing up) fails the smoke gate."""
     db = tpch.generate(n_orders=n_orders, seed=0)
-    npad = db.lineitem.pad_to_multiple(max(chunks, shards)).capacity
+    npad = shard_capacity(db.lineitem.capacity, chunks, shards)
     return {"replicated": npad, "sharded": npad // shards, "shards": shards}
+
+
+def shuffle_layout(n_orders: int = 1000, shards: int = 8,
+                   chunks: int = 8, slack: float = 4.0) -> dict:
+    """Static peak BUILD-side rows/device of an FK join whose build side
+    (orders) exceeds the gather budget: the gather strategy replicates the
+    whole build table on every device; the shuffle strategy keeps the hash
+    bucket plus the static exchange buffers.  Computed from the lowered
+    physical plan (the same ``physical.lower_plan`` the compiler runs), so
+    the O(build/shards) memory contract of the ShuffleJoin is gated by
+    ``--check`` against the baseline."""
+    from repro.db import physical as phys
+    from repro.db.plans import FKJoin
+
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    caps = {k: shard_capacity(t.capacity, chunks, shards)
+            for k, t in db.tables().items()}
+    join = FKJoin(Select(Scan("lineitem"),
+                         lambda t: t["l_shipdate"] > tpch.DAY0_1995),
+                  Scan("orders"), "l_orderkey", "o_orderkey",
+                  ("o_totalprice",))
+    lowered = phys.lower_plan(join, caps, n_shards=shards, sharded=True,
+                              join_gather_budget=caps["orders"] - 1,
+                              shuffle_slack=slack)
+    assert isinstance(lowered, phys.ShuffleJoin), phys.explain(lowered)
+    # gather: the whole build table lands on every device; shuffle: the
+    # received hash bucket (n_shards send buckets of build_bucket rows)
+    # plus the probe request/response buffers.
+    return {"gather_build_rows": caps["orders"],
+            "shuffle_build_rows": shards * lowered.build_bucket,
+            "shuffle_probe_rows": shards * lowered.probe_bucket,
+            "shards": shards}
+
+
+def bench_shuffle_join(n_orders: int = 1000, repeat: int = 5):
+    """Gather- vs shuffle-lowered FK join wall time on the 1-device
+    ('data',) mesh: the same Q3-shaped join as smoke/sharded_frontend,
+    compiled once per strategy (a tiny per-join gather_budget forces the
+    shuffle lowering), so the shuffle path's exchange overhead is gated
+    per-PR alongside its memory accounting."""
+    from repro.compat import make_mesh
+    from repro.db.plans import FKJoin
+
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    mesh = make_mesh((1,), ("data",))
+    li = Select(Scan("lineitem"), lambda t: t["l_shipdate"] > tpch.DAY0_1995)
+    rows = []
+    for tag, budget in (("gather", None), ("shuffle", 1)):
+        j = FKJoin(li, Scan("orders"), "l_orderkey", "o_orderkey",
+                   ("o_totalprice",), gather_budget=budget)
+        plan = GroupAgg(j, ("l_orderkey",), "l_quantity", "SUM", 256,
+                        "normal")
+        fn = jax.jit(compile_plan(plan, mesh))
+        dt = _time(fn, (db.tables(),), repeat)
+        rows.append((f"smoke/shuffle_join/{tag}/mesh1", dt * 1e6,
+                     f"n_orders={n_orders}"))
+    return rows
 
 
 def _check(rows) -> int:
@@ -167,7 +228,8 @@ def _check(rows) -> int:
         print(f"FAIL: no baseline at {BASELINE_PATH}; run --update first")
         return 1
     with open(BASELINE_PATH) as f:
-        base = json.load(f)["rows"]
+        base_all = json.load(f)
+    base = base_all["rows"]
     failures = 0
     missing = set(base) - {name for name, _, _ in rows}
     for name in sorted(missing):   # a dropped/renamed method is a failure,
@@ -188,8 +250,7 @@ def _check(rows) -> int:
             print(f"FAIL {name}: {value:.1f}us > {TOLERANCE} x "
                   f"{base[name]:.1f}us baseline")
             failures += 1
-    with open(BASELINE_PATH) as f:
-        base_layout = json.load(f).get("peak_rows_per_device")
+    base_layout = base_all.get("peak_rows_per_device")
     layout = frontend_layout()
     if base_layout is None:
         print("WARN layout: no peak_rows_per_device in baseline "
@@ -199,6 +260,22 @@ def _check(rows) -> int:
         print(f"FAIL layout: peak rows/device {layout} regressed vs "
               f"baseline {base_layout} (the sharded frontend's "
               "O(rows/shards) accounting changed)")
+        failures += 1
+    base_shuffle = base_all.get("shuffle_join_rows_per_device")
+    shuffle = shuffle_layout()
+    if shuffle["shuffle_build_rows"] >= shuffle["gather_build_rows"]:
+        print(f"FAIL shuffle layout: {shuffle} — the shuffle join no "
+              "longer beats replicating the build side")
+        failures += 1
+    if base_shuffle is None:
+        print("WARN shuffle layout: no shuffle_join_rows_per_device in "
+              "baseline (run --update to record)")
+    elif (shuffle["shuffle_build_rows"] > base_shuffle["shuffle_build_rows"]
+          or shuffle["shuffle_probe_rows"]
+          > base_shuffle["shuffle_probe_rows"]):
+        print(f"FAIL shuffle layout: {shuffle} regressed vs baseline "
+              f"{base_shuffle} (the ShuffleJoin's O(build/shards) "
+              "accounting changed)")
         failures += 1
     print("CHECK " + ("FAILED" if failures else "PASSED")
           + f" ({len(rows)} rows, tol {TOLERANCE}x)")
@@ -211,6 +288,7 @@ def _update(rows):
     with open(BASELINE_PATH, "w") as f:
         json.dump({"tolerance": TOLERANCE, "repeat": "best-of",
                    "peak_rows_per_device": frontend_layout(),
+                   "shuffle_join_rows_per_device": shuffle_layout(),
                    "rows": recorded}, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"wrote {BASELINE_PATH} ({len(recorded)} rows)")
@@ -219,6 +297,7 @@ def _update(rows):
 def main() -> int:
     rows = bench()
     rows += bench_sharded_frontend()
+    rows += bench_shuffle_join()
     rows += bench_exact_speedup()
     if "--mesh" in sys.argv and len(jax.devices()) > 1:
         from repro.launch.mesh import make_host_mesh

@@ -237,13 +237,16 @@ class SumCF(UDA):
         return CFState(z, z)
 
     def accumulate_full(self, state, probs, values, gids, max_groups,
-                        use_kernel: bool | None = None) -> CFState:
+                        use_kernel: bool | None = None,
+                        operands=None) -> CFState:
         """Whole-column accumulate, dispatching to the (G, F)-tiled Pallas
         kernel (:mod:`repro.kernels.group_cf`) when eligible; the pure-JAX
         oracle handles small inputs and non-f32 dtypes, and the kernel
         itself runs in interpret mode on CPU backends.  Requires a static
         int ``freq_lo`` (the model-sharded traced case stays on the blocked
-        scan path) and integer-valued ``values``.
+        scan path) and integer-valued ``values``.  ``operands`` are
+        pre-sorted kernel columns (:func:`cf_chunk_operands`) so the
+        frequency-slab loop hoists the argsort above the slabs.
         """
         from ..kernels import ops as kops
         if max_groups == 1 and use_kernel and self.freq_lo == 0 \
@@ -255,7 +258,7 @@ class SumCF(UDA):
         la, an = kops.group_logcf(probs, values, gids, max_groups,
                                   self.num_freq, freq_lo=self.freq_lo,
                                   freq_cnt=self.freq_cnt,
-                                  use_kernel=use_kernel)
+                                  use_kernel=use_kernel, operands=operands)
         return CFState(state.log_abs + la, state.angle + an)
 
     def update(self, state, probs, values, gids) -> CFState:
@@ -487,6 +490,19 @@ def _groups_of(u: UDA, max_groups: int) -> int:
     return 1 if u.scalar else max_groups
 
 
+def _use_pallas(kernel: str) -> bool:
+    """The ONE backend half of the kernel-dispatch predicate, shared by
+    :func:`accumulate` and :func:`cf_chunk_operands` so the operand hoist
+    can never diverge from the dispatch it feeds."""
+    return kernel == "pallas" or (kernel == "auto"
+                                  and jax.default_backend() == "tpu")
+
+
+def _integral_dtype(dtype) -> bool:
+    """Does this source dtype carry exact integers (CF-kernel-eligible)?"""
+    return jnp.issubdtype(dtype, jnp.integer) or dtype == jnp.bool_
+
+
 def _kernel_eligible(u: UDA, max_groups: int, probs, values_integral: bool) \
         -> bool:
     """CF / cumulant accumulations can run on the Pallas kernels — only
@@ -505,19 +521,21 @@ def _kernel_eligible(u: UDA, max_groups: int, probs, values_integral: bool) \
     return isinstance(u, SumCumulants) and _groups_of(u, max_groups) == 1
 
 
-def _kernel_accumulate(u: UDA, state, probs, values, gids, max_groups):
+def _kernel_accumulate(u: UDA, state, probs, values, gids, max_groups,
+                       operands=None):
     from ..kernels import ops as kops
     if isinstance(u, SumCF):
         g = _groups_of(u, max_groups)
         return u.accumulate_full(state, probs, values,
                                  None if g == 1 else gids, g,
-                                 use_kernel=True)
+                                 use_kernel=True, operands=operands)
     sums = kops.cumulant_sums(probs, values, orders=u.orders)
     return CumulantState(state.terms + sums[None])
 
 
 def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
-               states=None, block: int = 8192, kernel: str = "auto"):
+               states=None, block: int = 8192, kernel: str = "auto",
+               cf_operands=None):
     """Accumulate every UDA in ``udas`` over one column of tuples.
 
     udas:    {name: UDA}.  Streaming UDAs share ONE blocked ``lax.scan``
@@ -531,6 +549,10 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
     kernel:  'auto' | 'pallas' | 'xla' — 'auto' dispatches eligible
              accumulations (scalar CF / cumulants, grouped CF) to the
              Pallas kernels on TPU backends.
+    cf_operands: optional {name: operands} pre-sorted grouped-CF kernel
+             columns for this call's tuples (see :func:`cf_chunk_operands`)
+             — used only when the named UDA actually dispatches to the
+             grouped kernel, ignored otherwise.
 
     Returns {name: state}.
     """
@@ -566,8 +588,7 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
                 s = jnp.asarray(v)
                 casts[id(v)] = (
                     s.astype(dtype) if s.dtype != dtype else s,
-                    jnp.issubdtype(s.dtype, jnp.integer)
-                    or s.dtype == jnp.bool_, s)
+                    _integral_dtype(s.dtype), s)
             v, integral, src = casts[id(v)]
         for i, existing in enumerate(val_arrays):
             if existing is v:
@@ -586,8 +607,7 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
         if name not in states:
             states[name] = u.init(_groups_of(u, max_groups), dtype)
 
-    use_pallas = kernel == "pallas" or (
-        kernel == "auto" and jax.default_backend() == "tpu")
+    use_pallas = _use_pallas(kernel)
 
     scan_udas, full_udas, kernel_udas = {}, {}, {}
     for name, u in udas.items():
@@ -609,8 +629,10 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
         # kernel computes float value powers and takes the cast column.
         i = val_index[name]
         vals = val_sources[i] if isinstance(u, SumCF) else val_arrays[i]
+        ops_u = cf_operands.get(name) if cf_operands else None
         states[name] = _kernel_accumulate(u, states[name], probs, vals,
-                                          gids_full, max_groups)
+                                          gids_full, max_groups,
+                                          operands=ops_u)
     if not scan_udas:
         return states
 
@@ -646,46 +668,54 @@ def merge(udas, a, b):
 
 
 def tree_fold(u: UDA, parts):
-    """Fold partial states with ``u.merge`` in a balanced pairwise tree
-    (adjacent pairs first, odd tails pass through).
+    """Fold partial states with ``u.merge`` in the ONE canonical tree
+    shape: a balanced pairwise tree over the largest power-of-two prefix,
+    then a sequential left fold of the tail leaves.
 
-    The fixed tree shape is the bit-reproducibility contract of
-    :func:`accumulate_chunked`: a fold over C leaves equals S contiguous
-    groups of C/S leaves each pre-folded locally and then folded across
-    groups — provided C and C/S are powers of two — so moving the group
-    (= mesh shard) boundaries never changes the merge order.
+    For a power-of-two leaf count this is exactly the balanced pairwise
+    tree; the pow2-base + sequential-tail form extends the fixed shape to
+    ANY chunk count.  The tree depends only on the leaf count — never on
+    how leaves are distributed over shards — which is the
+    bit-reproducibility contract of :func:`accumulate_chunked`: the
+    sharded frontend computes every canonical chunk's state on exactly one
+    shard, gathers all C chunk states, and every shard finishes this SAME
+    tree (``db.distributed.allgather_merge``), so any shard count — power
+    of two or not — reproduces the single-device fold bit for bit.
     """
     parts = list(parts)
     if not parts:
         raise ValueError("tree_fold needs at least one partial state")
-    while len(parts) > 1:
-        parts = [u.merge(parts[i], parts[i + 1]) if i + 1 < len(parts)
-                 else parts[i]
-                 for i in range(0, len(parts), 2)]
-    return parts[0]
+    base_len = 1 << (len(parts).bit_length() - 1)   # largest pow2 <= len
+    base, tail = parts[:base_len], parts[base_len:]
+    while len(base) > 1:
+        base = [u.merge(base[i], base[i + 1])
+                for i in range(0, len(base), 2)]
+    out = base[0]
+    for t in tail:
+        out = u.merge(out, t)
+    return out
 
 
-def accumulate_chunked(udas, probs, values=None, gids=None, *,
-                       max_groups: int = 1, num_chunks: int = 8,
-                       block: int = 8192, kernel: str = "auto"):
-    """Canonical chunk-grid Accumulate + tree Merge (the sharded-frontend
-    accumulation semantics).
+def accumulate_chunk_states(udas, probs, values=None, gids=None, *,
+                            max_groups: int = 1, num_chunks: int = 8,
+                            block: int = 8192, kernel: str = "auto",
+                            cf_operands=None) -> list:
+    """Per-canonical-chunk partial states: the Accumulate half of
+    :func:`accumulate_chunked`, without the fold.
 
     The tuple column is split into ``num_chunks`` contiguous equal chunks
     (zero-padded with p = 0 rows to a chunk multiple); each chunk runs the
-    ONE canonical loop (:func:`accumulate`) independently and the partial
-    states fold in the balanced pairwise tree of :func:`tree_fold`.  The
-    plan compiler uses the same grid on every mesh: a shard owns a
-    contiguous run of chunks, pre-folds its subtree locally, and the
-    cross-shard Merge (``db.distributed.allgather_merge``) finishes the
-    SAME tree — which is what makes ``compile_plan(root, mesh)`` outputs
-    bit-identical to the single-device compile.
+    ONE canonical loop (:func:`accumulate`) independently.  Returns the
+    list of per-chunk ``{name: state}`` dicts in chunk order — the sharded
+    frontend gathers these across shards so every shard can finish the
+    identical :func:`tree_fold`.
+
+    ``cf_operands``: optional ``{name: [per-chunk operands]}`` pre-sorted
+    grouped-CF kernel operands (:func:`cf_chunk_operands`) so the exact-CF
+    frequency-slab loop pays the argsort once, not once per slab.
     """
     probs = jnp.asarray(probs)
     n = probs.shape[0]
-    if num_chunks <= 1:
-        return accumulate(udas, probs, values, gids, max_groups=max_groups,
-                          block=block, kernel=kernel)
     csz = -(-n // num_chunks)
     pad = csz * num_chunks - n
     if pad:
@@ -714,12 +744,84 @@ def accumulate_chunked(udas, probs, values=None, gids=None, *,
         ccache: dict = {}
         vals_i = {name: None if c is None else ccache.setdefault(id(c), c[sl])
                   for name, c in cols.items()}
+        ops_i = ({name: per_chunk[i]
+                  for name, per_chunk in cf_operands.items()}
+                 if cf_operands else None)
         parts.append(accumulate(udas, probs[sl], vals_i,
                                 None if gids is None else gids[sl],
                                 max_groups=max_groups, block=block,
-                                kernel=kernel))
+                                kernel=kernel, cf_operands=ops_i))
+    return parts
+
+
+def accumulate_chunked(udas, probs, values=None, gids=None, *,
+                       max_groups: int = 1, num_chunks: int = 8,
+                       block: int = 8192, kernel: str = "auto",
+                       cf_operands=None):
+    """Canonical chunk-grid Accumulate + tree Merge (the sharded-frontend
+    accumulation semantics).
+
+    :func:`accumulate_chunk_states` computes one partial state per
+    contiguous chunk and the partials fold in the fixed pow2-base +
+    sequential-tail tree of :func:`tree_fold`.  The plan compiler uses the
+    same grid in every compile: on a mesh each shard computes the states
+    of its contiguous chunk run and the cross-shard Merge
+    (``db.distributed.allgather_merge``) gathers ALL chunk states and
+    finishes the SAME tree — which is what makes
+    ``compile_plan(root, mesh)`` outputs bit-identical to the
+    single-device compile for ANY shard count.
+    """
+    if num_chunks <= 1:
+        ops_0 = ({name: per_chunk[0]
+                  for name, per_chunk in cf_operands.items()}
+                 if cf_operands else None)
+        return accumulate(udas, probs, values, gids, max_groups=max_groups,
+                          block=block, kernel=kernel, cf_operands=ops_0)
+    parts = accumulate_chunk_states(udas, probs, values, gids,
+                                    max_groups=max_groups,
+                                    num_chunks=num_chunks, block=block,
+                                    kernel=kernel, cf_operands=cf_operands)
     return {name: tree_fold(u, [p[name] for p in parts])
             for name, u in udas.items()}
+
+
+def cf_chunk_operands(num_freq: int, probs, values, gids, *,
+                      max_groups: int, num_chunks: int,
+                      kernel: str = "auto"):
+    """Pre-sorted per-chunk grouped-CF kernel operands for an exact-CF
+    aggregation, or None when the Pallas kernel would not be dispatched.
+
+    The exact-CF frequency-slab loop re-runs :func:`accumulate` once per
+    slab over the SAME tuples; the grouped kernel's argsort(gids) and
+    split-modmult operand prep depend only on (values, gids, num_freq) —
+    not on the slab window — so the planner calls this once per
+    aggregation pass and threads the result through every slab's
+    ``cf_operands``.  Mirrors the dispatch guards of :func:`accumulate`
+    (backend, dtype, size, integrality); a None return means the caller
+    should simply not pass operands (the scan/oracle paths sort nothing).
+    """
+    from ..kernels import ops as kops
+    probs = jnp.asarray(probs)
+    n = probs.shape[0]
+    if n % num_chunks:
+        return None            # planner columns divide the grid exactly
+    csz = n // num_chunks
+    if values is None:
+        vals = jnp.ones((n,), probs.dtype)
+        integral = True        # COUNT: all-ones
+    else:
+        vals = jnp.asarray(values)
+        integral = _integral_dtype(vals.dtype)
+    probe = SumCF(num_freq)    # static freq_lo=0: same verdict as any slab
+    if not (_use_pallas(kernel)
+            and _kernel_eligible(probe, max_groups, probs[:csz], integral)):
+        return None
+    g = (jnp.zeros((n,), jnp.int32) if gids is None
+         else jnp.asarray(gids))
+    return [kops.presort_group_operands(probs[i * csz:(i + 1) * csz],
+                                        vals[i * csz:(i + 1) * csz],
+                                        g[i * csz:(i + 1) * csz], num_freq)
+            for i in range(num_chunks)]
 
 
 def reduce_collective(udas, states, data_axes, model_axis=None):

@@ -20,24 +20,35 @@ replicated over 'model'; frequency grids of the exact CF path are sharded
 over 'model' so the O(n*F) phase work splits both ways (the beyond-paper
 optimization validated in §Perf).
 
-The sharded relational frontend (`db/plans.py compile_plan(root, mesh)`)
-runs the WHOLE plan inside one shard_map and uses the collective helpers
-below instead of a per-node step:
+The sharded relational frontend (`db/plans.py`, strategies lowered by
+`db/physical.py`) runs the WHOLE physical plan inside one shard_map and
+uses the collective helpers below instead of a per-node step:
 
-    gather_table        broadcast a row-partitioned Table (FK-join build
-                        sides, final sharded results): one tiled
+    gather_table        broadcast a row-partitioned Table (small FK-join
+                        build sides, final sharded results): one tiled
                         all-gather per column, shard-major == global row
                         order under the contiguous row partitioning
+    shuffle_by_key      static-shape all_to_all exchange: each row goes to
+                        shard ``key % n_shards`` through per-destination
+                        send buckets of fixed capacity, with overflow
+                        accounting (operators.bucket_slots)
+    shuffle_fk_join     the ShuffleJoin executor: build rows hashed to
+                        their key's owner shard, probe keys exchanged as
+                        requests, matched shard-locally (ops.fk_join on
+                        the hash bucket), responses shuffled home — peak
+                        build rows/device O(build/shards), output
+                        bit-identical to the gathered join
     group_ids_sharded   two-phase distributed group-id assignment —
                         per-shard jnp.unique, all-gather + merge of the
                         per-shard code tables, searchsorted against the
                         merged codes (exact vs the single-pass oracle,
                         overflow included: operators.merge_group_codes)
     allgather_merge     ONE collective Merge per aggregation pass: gather
-                        every shard's partial UDA state and fold with the
-                        canonical pairwise tree (uda.tree_fold) — the
-                        bit-reproducible form of the additive psum, which
-                        also covers non-additive states (MinMax)
+                        every shard's per-canonical-chunk partial states
+                        and fold ALL chunk states with the one fixed tree
+                        (uda.tree_fold) — the bit-reproducible form of the
+                        additive psum for ANY shard count (pow2 or not),
+                        which also covers non-additive states (MinMax)
     group_key_columns_sharded   per-shard segment_max + one pmax (max is
                         exact, so bit-equal to the replicated reduction)
 """
@@ -52,6 +63,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..compat import shard_map
 from ..core import uda
 from . import operators as ops
+from . import physical as phys
 from .table import Table
 
 
@@ -134,7 +146,143 @@ def gather_table(t: Table, axis_names) -> Table:
     axis_names = tuple(axis_names)
     g = lambda x: jax.lax.all_gather(x, axis_names, axis=0, tiled=True)
     return Table({k: g(v) for k, v in t.columns.items()},
-                 g(t.prob), g(t.valid))
+                 g(t.prob), g(t.valid), phys.Replicated())
+
+
+def shuffle_by_key(keys, cols: dict, axis_names, *, n_shards: int,
+                   capacity: int, valid=None):
+    """Static-shape shuffle exchange (call inside shard_map): row i goes
+    to shard ``keys[i] % n_shards``.
+
+    Every shard fills ``n_shards`` send buckets of ``capacity`` rows
+    (``operators.bucket_slots`` assigns slots; ok-rows beyond a bucket's
+    capacity overflow and are DROPPED but counted) and one ``all_to_all``
+    transposes the buckets, so per-device exchange memory is the static
+    ``n_shards * capacity`` rows regardless of skew.
+
+    Returns ``(recv, recv_mask, slot, sent, overflow)``:
+        recv       {name: (n_shards * capacity,) array} — bucket j*capacity
+                   + r holds sender j's r-th row for THIS shard; empty
+                   slots zero
+        recv_mask  (n_shards * capacity,) bool occupancy
+        slot, sent the local send-slot bookkeeping (route responses home
+                   through the same buckets: ``shuffle_back`` +
+                   ``operators.take_from_buckets``)
+        overflow   local count of ok-rows dropped for capacity
+    """
+    axis_names = tuple(axis_names)
+    ok = jnp.ones(keys.shape, bool) if valid is None else valid
+    dest = jnp.mod(keys.astype(jnp.int32), n_shards)
+    slot, sent, overflow = ops.bucket_slots(dest, ok, n_shards, capacity)
+    size = n_shards * capacity
+    send = ops.scatter_to_buckets(cols, slot, size)
+    mask = jnp.zeros((size,), bool).at[slot].set(sent, mode="drop")
+    recv = {k: _all_to_all_rows(v, axis_names, n_shards, capacity)
+            for k, v in send.items()}
+    recv_mask = _all_to_all_rows(mask, axis_names, n_shards, capacity)
+    return recv, recv_mask, slot, sent, overflow
+
+
+def shuffle_back(cols: dict, axis_names, n_shards: int, capacity: int):
+    """Return per-request responses to their origin shards: the inverse
+    exchange of :func:`shuffle_by_key` (all_to_all is an involution on the
+    (n_shards, capacity) bucket layout), landing each response in the send
+    slot its request came from."""
+    axis_names = tuple(axis_names)
+    return {k: _all_to_all_rows(v, axis_names, n_shards, capacity)
+            for k, v in cols.items()}
+
+
+def _all_to_all_rows(x, axis_names, n_shards: int, capacity: int):
+    b = x.reshape((n_shards, capacity) + x.shape[1:])
+    out = jax.lax.all_to_all(b, axis_names, split_axis=0, concat_axis=0,
+                             tiled=False)
+    return out.reshape((n_shards * capacity,) + x.shape[1:])
+
+
+def shuffle_fk_join(left: Table, right: Table, left_key: str,
+                    right_key: str, right_cols: Sequence[str], axis_names,
+                    *, n_shards: int, build_bucket: int,
+                    probe_bucket: int) -> Table:
+    """Hash-partitioned FK join (call inside shard_map): the ShuffleJoin
+    strategy of :mod:`repro.db.physical`.
+
+    1. Build exchange: the (row-partitioned) build side's valid rows are
+       shuffled to shard ``right_key % n_shards`` — each owner holds its
+       hash bucket of the dimension table, O(build/shards) rows.
+    2. Probe requests: each shard shuffles its probe keys to the same
+       owners.
+    3. Local match: one ``ops.fk_join`` of the request rows against the
+       local build bucket (requests carry p = 1, so the join returns the
+       matched build probability directly, zero / zero-filled columns on
+       miss).
+    4. Responses shuffle home through the same static buckets and land in
+       the probe rows' original positions — the output keeps the LEFT
+       side's RowBlocked layout and is bit-identical to the gathered
+       ``ops.fk_join`` (same matches, same float products, same
+       deterministic zeros on miss).
+
+    Overflow accounting: bucket overflows on either exchange lose rows the
+    exact result needs, so the total overflow (one psum, so every shard
+    agrees) POISONS the output probabilities with NaN rather than
+    returning silently wrong masses.  The NaN propagates through every
+    probabilistic epilogue (confidence / group_confidence / aggregate all
+    consume the p column), but a purely BOOLEAN consumer of the join —
+    e.g. a deterministic-mode predicate like ``p > 0.5`` — collapses NaN
+    to False and can present the corruption as an empty result; validity
+    flags and integer columns have no NaN to carry.  Where that matters,
+    make overflow impossible instead of detectable: ``shuffle_slack >=
+    n_shards`` pins every bucket at the sender's full local rows (the
+    default slack 4.0 already guarantees this for meshes of up to 4 data
+    shards), or keep join keys balanced mod n_shards.
+    """
+    axis_names = tuple(axis_names)
+    right_cols = list(right_cols)
+    # Internal exchange fields ride the same bucket dicts as the carried
+    # user columns; the "\x00" prefix keeps them out of any legal column
+    # namespace (a user column can't collide silently — it is rejected).
+    KEY, PROB, HIT = "\x00key", "\x00prob", "\x00hit"
+    bad = [c for c in right_cols if c.startswith("\x00")]
+    if bad:
+        raise ValueError(f"shuffle_fk_join right_cols may not start with "
+                         f"'\\x00' (reserved for exchange fields): {bad}")
+
+    # 1. build side -> hash owners
+    bcols = {KEY: right[right_key].astype(jnp.int32), PROB: right.prob}
+    for c in right_cols:
+        bcols[c] = right[c]
+    brecv, bmask, _, _, b_over = shuffle_by_key(
+        bcols[KEY], bcols, axis_names, n_shards=n_shards,
+        capacity=build_bucket, valid=right.valid)
+    build = Table({right_key: brecv[KEY],
+                   **{c: brecv[c] for c in right_cols}},
+                  brecv[PROB], bmask, phys.HashPartitioned(right_key))
+
+    # 2. probe keys -> the same owners
+    lkey = left[left_key].astype(jnp.int32)
+    preq, pmask, slot, sent, p_over = shuffle_by_key(
+        lkey, {KEY: lkey}, axis_names, n_shards=n_shards,
+        capacity=probe_bucket, valid=left.valid)
+
+    # 3. shard-local match on the hash bucket
+    req = Table({left_key: preq[KEY]},
+                jnp.ones(pmask.shape, left.prob.dtype), pmask)
+    matched = ops.fk_join(req, build, left_key, right_key, right_cols)
+
+    # 4. responses home, into the probe rows' original positions
+    resp = {PROB: matched.prob, HIT: matched.valid}
+    for c in right_cols:
+        resp[c] = matched[c]
+    back = shuffle_back(resp, axis_names, n_shards, probe_bucket)
+    got = ops.take_from_buckets(back, slot, sent)
+
+    over = jax.lax.psum(b_over + p_over, axis_names)
+    prob = left.prob * got[PROB]
+    prob = jnp.where(over > 0, jnp.asarray(jnp.nan, prob.dtype), prob)
+    cols = dict(left.columns)
+    for c in right_cols:
+        cols[c] = got[c]
+    return Table(cols, prob, left.valid & got[HIT], left.part)
 
 
 def group_ids_sharded(table: Table, keys: Sequence[str], max_groups: int,
@@ -168,27 +316,48 @@ def group_key_columns_sharded(table: Table, keys: Sequence[str], ids,
     return {k: jax.lax.pmax(v, axis_names) for k, v in cols.items()}
 
 
-def allgather_merge(udas: dict, states: dict, axis_names) -> dict:
+def allgather_merge(udas: dict, parts: list, axis_names,
+                    num_chunks: int, shards: int) -> dict:
     """The sharded frontend's ONE collective Merge per aggregation pass:
-    all-gather every shard's partial state (shard-major, so the leaf order
-    is the canonical chunk order) and fold with ``uda.tree_fold``.
+    all-gather every shard's per-canonical-chunk partial states and fold
+    ALL ``num_chunks`` chunk states with ``uda.tree_fold``, identically on
+    every shard.
 
-    For additive states this computes exactly what a psum would, but in
-    the fixed pairwise tree that continues the shard-local
-    ``uda.accumulate_chunked`` fold — hence bit-identical to the
-    single-device compile — and it covers non-additive states (MinMax)
-    with the same code path.
+    ``parts`` is this shard's list of per-chunk state dicts
+    (``uda.accumulate_chunk_states`` over its contiguous chunk run); under
+    the contiguous chunk assignment the shard-major gather order IS the
+    global chunk order, and slots past the canonical grid (the padding
+    chunks of shard counts that don't divide ``num_chunks``) sort last and
+    are sliced away before the fold.  Because the fold consumes the SAME
+    chunk leaves in the SAME fixed tree as the single-device
+    ``uda.accumulate_chunked``, the result is bit-identical for ANY shard
+    count — power of two or not.  For additive states this computes
+    exactly what a psum would; non-additive states (MinMax) ride the same
+    code path.
+
+    Bandwidth: when every shard's chunk run is an ALIGNED power-of-two
+    subtree of the canonical tree (pow2 shard count dividing a pow2 grid
+    — the common case), each shard pre-folds its run locally and the
+    gather moves ONE state per shard; only non-dividing shard counts pay
+    for gathering ceil(num_chunks / shards) chunk states each.
     """
     axis_names = tuple(axis_names)
+    local = len(parts)
+    aligned = (shards * local == num_chunks
+               and local & (local - 1) == 0 and shards & (shards - 1) == 0)
     out = {}
     for name, u in udas.items():
+        mine = [p[name] for p in parts]
+        if aligned:
+            mine = [uda.tree_fold(u, mine)]     # the local aligned subtree
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *mine)
         g = jax.tree.map(
-            lambda x: jax.lax.all_gather(x, axis_names, axis=0, tiled=False),
-            states[name])
-        shards = jax.tree.leaves(g)[0].shape[0]        # static
-        parts = [jax.tree.map(lambda x, s=s: x[s], g)
-                 for s in range(shards)]
-        out[name] = uda.tree_fold(u, parts)
+            lambda x: jax.lax.all_gather(x, axis_names, axis=0, tiled=True),
+            stacked)
+        leaves = shards if aligned else num_chunks
+        states = [jax.tree.map(lambda x, c=c: x[c], g)
+                  for c in range(leaves)]
+        out[name] = uda.tree_fold(u, states)
     return out
 
 

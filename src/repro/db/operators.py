@@ -39,10 +39,10 @@ def check_nonneg_keys(table: Table, keys: Sequence[str]) -> None:
     """Enforce the nonnegative-key contract of :func:`encode_keys` /
     :func:`group_key_columns`.
 
-    Invalid rows write the identity 0 into per-group representatives and
-    key codes, so a negative value in a valid row would silently corrupt
-    both (a negative representative loses to the 0 identity under
-    segment_max; a negative code breaks the positional key packing).  The
+    The positional key packing of :func:`encode_keys` multiplies fields
+    into one nonnegative code, so a negative value in a valid row would
+    silently corrupt the grouping (and overflow the hash routing of the
+    shuffle exchanges, which reduce codes mod the shard count).  The
     check runs when the data is concrete — direct operator calls and the
     eager ``compile_plan`` execution path — and is skipped under tracing
     (shard_map / jit), where only shapes are visible.
@@ -59,9 +59,9 @@ def check_nonneg_keys(table: Table, keys: Sequence[str]) -> None:
         if live.size and live.min() < 0:
             raise ValueError(
                 f"group key column {k!r} contains negative values in valid "
-                "rows; group-id codes and per-group representatives assume "
-                "nonnegative keys (invalid rows write the identity 0) — "
-                "shift or re-encode the column first")
+                "rows; group-id codes assume nonnegative keys (the "
+                "positional packing of encode_keys and the mod-shard hash "
+                "routing) — shift or re-encode the column first")
 
 
 def encode_keys(table: Table, keys: Sequence[str],
@@ -109,9 +109,18 @@ def merge_group_codes(codes: jnp.ndarray, max_groups: int) -> jnp.ndarray:
 
 def codes_to_ids(code_live: jnp.ndarray, group_codes: jnp.ndarray):
     """Row codes -> group ids in [0, max_groups) against a merged code
-    table (dead/overflow rows land in the last, fill bucket)."""
+    table (dead/overflow rows land in the last, fill bucket).
+
+    Dead rows (the ``big`` sentinel) go to the fill bucket EXPLICITLY, not
+    to their searchsorted position: the first empty slot of a non-full
+    code table would otherwise collect dead writers' identity values,
+    making dead-group representatives depend on how much invalid padding
+    a compile added (the sharded frontend pads more than mesh=None for
+    shard counts that don't divide the chunk grid)."""
+    big = jnp.iinfo(code_live.dtype).max
     ids = jnp.searchsorted(group_codes, code_live)
-    return jnp.clip(ids, 0, group_codes.shape[0] - 1)
+    ids = jnp.clip(ids, 0, group_codes.shape[0] - 1)
+    return jnp.where(code_live == big, group_codes.shape[0] - 1, ids)
 
 
 def group_ids(table: Table, keys: Sequence[str], max_groups: int):
@@ -133,15 +142,25 @@ def group_key_columns(table: Table, keys: Sequence[str], ids, max_groups: int):
     """Representative value of each key column per group.
 
     All valid writers of a group agree by construction; invalid rows write
-    the identity 0, so this requires nonnegative key columns (enforced by
-    :func:`check_nonneg_keys` whenever the data is concrete).
+    the segment_max IDENTITY (integer min / -inf), so they are
+    indistinguishable from absent rows and a group with no valid writers
+    keeps the identity in every compile — however much invalid padding a
+    given mesh added.  Nonnegative key columns remain the grouping
+    contract (:func:`check_nonneg_keys`, for the positional key packing
+    of :func:`encode_keys`).
     """
     check_nonneg_keys(table, keys)
     out = {}
     for k in keys:
         col = table[k]
+        if col.dtype == jnp.bool_:
+            ident = jnp.zeros((), col.dtype)       # False: the OR identity
+        elif jnp.issubdtype(col.dtype, jnp.integer):
+            ident = jnp.asarray(jnp.iinfo(col.dtype).min, col.dtype)
+        else:
+            ident = jnp.asarray(-jnp.inf, col.dtype)
         out[k] = jax.ops.segment_max(
-            jnp.where(table.valid, col, jnp.zeros_like(col)), ids,
+            jnp.where(table.valid, col, ident), ids,
             num_segments=max_groups)
     return out
 
@@ -204,8 +223,15 @@ def fk_join(left: Table, right: Table, left_key: str, right_key: str,
     the build side is concrete).  Output capacity = left capacity;
     p = p_l * p_r.  Right lookup is sort + searchsorted, the XLA-friendly
     hash-join stand-in.  Under the sharded frontend the build side arrives
-    pre-gathered (`db.distributed.gather_table`) while `left` stays a
+    pre-gathered (`db.distributed.gather_table`) — or only its key-matched
+    responses do (`db.distributed.shuffle_fk_join`) — while `left` stays a
     shard-local block.
+
+    Dead output rows — a miss (no valid key match) or an invalid left row
+    — carry p = 0 and ZERO-FILLED right columns: deterministic dead
+    values, so every execution strategy of the same join (gathered,
+    shuffled, replicated) produces bit-identical Tables including the
+    dead rows.
     """
     check_unique_fk_keys(right, right_key)
     rkey = right[right_key]
@@ -217,14 +243,68 @@ def fk_join(left: Table, right: Table, left_key: str, right_key: str,
     pos = jnp.searchsorted(rk_sorted, lk)
     pos = jnp.clip(pos, 0, right.capacity - 1)
     src = order[pos]
-    hit = rk_sorted[jnp.clip(pos, 0, right.capacity - 1)] == lk
+    hit = rk_sorted[pos] == lk
 
+    valid = left.valid & hit
     cols = dict(left.columns)
     for c in right_cols:
-        cols[c + suffix] = right[c][src]
-    prob = left.prob * jnp.where(hit, right.prob[src], 0.0)
-    valid = left.valid & hit
-    return Table(cols, prob, valid)
+        fetched = right[c][src]
+        cols[c + suffix] = jnp.where(valid, fetched,
+                                     jnp.zeros_like(fetched))
+    prob = jnp.where(valid, left.prob * right.prob[src],
+                     jnp.zeros_like(left.prob))
+    return Table(cols, prob, valid, left.part)
+
+
+# ------------------------------------------- shuffle-exchange bucket math
+def bucket_slots(dest: jnp.ndarray, ok: jnp.ndarray, n_shards: int,
+                 capacity: int):
+    """Static-shape send-bucket slot assignment for a shuffle exchange.
+
+    Row i with ``ok[i]`` goes to bucket ``dest[i]`` (in [0, n_shards)) at
+    its rank among earlier ok-rows of the same destination; ranks >=
+    ``capacity`` overflow and are dropped (but counted).  Rows with
+    ``ok[i]`` False are parked in a phantom bucket and never sent.
+
+    Returns ``(slot, sent, overflow_count)``: ``slot[i]`` indexes the flat
+    (n_shards * capacity,) send buffer — out-of-range (== the buffer size)
+    exactly for unsent rows, so a ``.at[slot].set(..., mode="drop")``
+    scatter places rows and drops the rest; ``sent = ok & fits``;
+    ``overflow_count`` = ok rows dropped for capacity.  Pure integer math
+    (stable sorts), shared by the collective exchange
+    (`db.distributed.shuffle_by_key`) and the host-side protocol tests.
+    """
+    n = dest.shape[0]
+    d = jnp.where(ok, dest.astype(jnp.int32), n_shards)
+    order = jnp.argsort(d, stable=True)
+    ds = d[order]
+    # rank within its destination run = sorted position - run start
+    starts = jnp.searchsorted(ds, jnp.arange(n_shards + 1))
+    rank_sorted = jnp.arange(n) - starts[jnp.clip(ds, 0, n_shards)]
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    sent = ok & (rank < capacity)
+    slot = jnp.where(sent, d * capacity + rank, n_shards * capacity)
+    overflow = jnp.sum(ok & ~sent)
+    return slot.astype(jnp.int32), sent, overflow
+
+
+def scatter_to_buckets(cols: dict, slot: jnp.ndarray, size: int) -> dict:
+    """Place rows into the flat (size,) send buffer at ``slot`` (unsent
+    rows carry slot == size and are dropped); empty slots are zero."""
+    return {k: jnp.zeros((size,) + v.shape[1:], v.dtype)
+            .at[slot].set(v, mode="drop")
+            for k, v in cols.items()}
+
+
+def take_from_buckets(cols: dict, slot: jnp.ndarray, sent: jnp.ndarray):
+    """Inverse of :func:`scatter_to_buckets` for response routing: read
+    each row's bucket slot back (zero / False for unsent rows)."""
+    out = {}
+    for k, v in cols.items():
+        safe = v[jnp.clip(slot, 0, v.shape[0] - 1)]
+        out[k] = jnp.where(sent, safe, jnp.zeros_like(safe))
+    return out
 
 
 def general_join(left: Table, right: Table,

@@ -1,0 +1,314 @@
+"""Physical plan IR: explicit execution strategies for the sharded
+relational frontend.
+
+``repro.db.plans.compile_plan`` used to be one 500-line recursive closure
+whose distribution strategy lived in ``if mesh_mode and ...`` branches.
+This module splits compilation into two stages:
+
+    logical plan (plans.Node DAG)
+        --lower_plan-->  physical plan (this module's PhysNode DAG)
+        --plans executor-->  one jit-able tables -> result function
+
+so the *strategy* — which join exchanges what, where each relation's rows
+live, where aggregation state is partial vs merged — is an inspectable,
+testable data structure instead of control flow (tests/test_physical.py
+golden-asserts the strategies picked at each budget).
+
+Partitioning properties
+-----------------------
+Every physical node carries ``part``, the placement of its output rows on
+the mesh's data shards — one of three points of a small lattice:
+
+    Replicated              every shard holds the identical full table.
+                            Top of the lattice: valid input for every
+                            operator, and the only property with no
+                            per-device memory savings.
+    RowBlocked              contiguous equal row blocks, shard s holding
+                            rows [s*B, (s+1)*B) of the canonical
+                            (chunk-grid padded) global row order.  The
+                            O(rows/shards) workhorse; shard-major
+                            concatenation IS the global row order.
+    HashPartitioned(key)    row lives on shard ``key % n_shards``.  The
+                            co-location property: two relations hashed on
+                            their join keys can be joined shard-locally.
+
+Exchange operators move between the points:
+
+    all-gather   RowBlocked       -> Replicated      (dist.gather_table)
+    shuffle      RowBlocked       -> HashPartitioned (dist.shuffle_by_key)
+    shuffle home HashPartitioned  -> RowBlocked      (responses routed back
+                                                      through the same
+                                                      static send buckets)
+
+Node zoo (the executor in plans.py interprets these inside shard_map):
+
+    ShardScan(name)                  base table; RowBlocked on a mesh,
+                                     Replicated single-device
+    PhysSelect / PhysMap             elementwise on the local block;
+                                     preserve the child's partitioning
+    GatherJoin(l, r, ...)            broadcast FK join: build side
+                                     all-gathered to Replicated (a no-op
+                                     when it already is), probe local
+    ShuffleJoin(l, r, ...)           hash-partitioned FK join: build rows
+                                     shuffled to HashPartitioned(right_key)
+                                     owners, probe keys shuffled to the
+                                     same owners as requests, matched
+                                     shard-locally, responses shuffled home
+                                     — output stays RowBlocked and
+                                     bit-identical to GatherJoin, with
+                                     O(build/shards) peak build rows/device
+    PartialAgg(child, keys, specs)   per-shard, per-canonical-chunk UDA
+                                     Accumulate over the local tuples;
+                                     output = partitioned partial states
+    MergeAgg(partial, kind)          ONE collective per aggregation pass
+                                     assembling every canonical chunk
+                                     state, the shard-count-invariant
+                                     tree fold, and the replicated
+                                     Finalize; kind selects the epilogue
+                                     (groupagg dict / project Table /
+                                     reweight Table)
+
+Join strategy choice (the lowering pass): an FKJoin whose build-side
+capacity exceeds ``join_gather_budget`` (the per-node override first, then
+the compile_plan global) lowers to ShuffleJoin whenever both inputs are
+RowBlocked; everything else — small builds, single-device compiles,
+replicated inputs (e.g. group-level tables) — lowers to GatherJoin.  There
+is no replicated-subtree fallback anymore: every base table is fed
+row-partitioned.
+
+ShuffleJoin bucket capacities are static (XLA shapes): each shard sends at
+most ``*_bucket`` rows to each owner, ``ceil(local_rows * slack /
+n_shards)`` capped at ``local_rows``.  With ``slack >= n_shards`` overflow
+is impossible; below that a skewed key distribution can overflow a bucket,
+which is *accounted* (dropped rows are counted, the count is psum-shared,
+and the executor poisons the join output probabilities with NaN, which
+every probabilistic epilogue propagates — see ``dist.shuffle_fk_join``
+for the boolean-consumer caveat and how to make overflow impossible).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+
+# ---------------------------------------------------------------- properties
+@dataclasses.dataclass(frozen=True)
+class Replicated:
+    """Every shard holds the identical full table."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RowBlocked:
+    """Contiguous equal row blocks of the canonical global row order."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HashPartitioned:
+    """Row lives on shard ``key % n_shards`` (key = this column)."""
+    key: str
+
+
+# ---------------------------------------------------------------------- IR
+class PhysNode:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardScan(PhysNode):
+    name: str
+    part: object
+    rows: int              # global (padded) capacity of the base table
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysSelect(PhysNode):
+    child: PhysNode
+    pred: Callable
+    part: object
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysMap(PhysNode):
+    child: PhysNode
+    name: str
+    fn: Callable
+    part: object
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherJoin(PhysNode):
+    left: PhysNode
+    right: PhysNode
+    left_key: str
+    right_key: str
+    right_cols: tuple
+    build_rows: int        # global capacity of the build side
+    part: object           # = left.part
+
+
+@dataclasses.dataclass(frozen=True)
+class ShuffleJoin(PhysNode):
+    left: PhysNode
+    right: PhysNode
+    left_key: str
+    right_key: str
+    right_cols: tuple
+    build_rows: int
+    exchange: HashPartitioned   # intermediate placement of both sides
+    build_bucket: int           # static per-(sender, owner) bucket rows
+    probe_bucket: int
+    part: object                # = left.part (responses shuffled home)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialAgg(PhysNode):
+    child: PhysNode
+    keys: tuple
+    specs: tuple           # ((name, value_col, agg, method), ...)
+    max_groups: int
+    kappa: int
+    num_freq: int
+    part: object           # = child.part (states partial per shard)
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeAgg(PhysNode):
+    child: PartialAgg
+    kind: str              # groupagg | project | reweight
+    threshold_col: str = ""
+    threshold: float | None = None
+    carry_cols: tuple = ()
+    part: object = Replicated()
+
+
+_RESERVED_OUT_KEYS = frozenset({"valid", "keys", "confidence"})
+
+
+def bucket_capacity(local_rows: int, n_shards: int, slack: float) -> int:
+    """Static per-(sender, owner) shuffle bucket rows: ``slack`` times the
+    uniform share, capped at the sender's local rows (at which point
+    overflow is impossible) and floored at 1."""
+    return max(1, min(local_rows,
+                      int(math.ceil(local_rows * slack / n_shards))))
+
+
+def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
+               join_gather_budget: int = 1 << 20,
+               shuffle_slack: float = 4.0) -> PhysNode:
+    """Lower a logical plan to the physical IR.
+
+    caps: base-table name -> global padded capacity (the compiler pads to
+    the canonical chunk grid and the shard count first; golden tests may
+    pass any capacities).  ``sharded`` selects mesh mode: scans become
+    RowBlocked and join strategies are chosen against
+    ``join_gather_budget`` — an ``FKJoin.gather_budget`` override wins
+    over the global.  Pure: no tables are touched.
+    """
+    from . import plans as L
+
+    def go(node):
+        """-> (phys_node, global output rows of the subtree)."""
+        if isinstance(node, L.Scan):
+            part = RowBlocked() if sharded else Replicated()
+            return ShardScan(node.name, part, caps[node.name]), \
+                caps[node.name]
+        if isinstance(node, L.Select):
+            c, rows = go(node.child)
+            return PhysSelect(c, node.pred, c.part), rows
+        if isinstance(node, L.Map):
+            c, rows = go(node.child)
+            return PhysMap(c, node.name, node.fn, c.part), rows
+        if isinstance(node, L.FKJoin):
+            left, lrows = go(node.left)
+            right, rrows = go(node.right)
+            budget = node.gather_budget if node.gather_budget is not None \
+                else join_gather_budget
+            if sharded and rrows > budget \
+                    and isinstance(left.part, RowBlocked) \
+                    and isinstance(right.part, RowBlocked):
+                bb = bucket_capacity(-(-rrows // n_shards), n_shards,
+                                     shuffle_slack)
+                pb = bucket_capacity(-(-lrows // n_shards), n_shards,
+                                     shuffle_slack)
+                return ShuffleJoin(
+                    left, right, node.left_key, node.right_key,
+                    tuple(node.right_cols), rrows,
+                    HashPartitioned(node.right_key), bb, pb,
+                    left.part), lrows
+            return GatherJoin(left, right, node.left_key, node.right_key,
+                              tuple(node.right_cols), rrows, left.part), \
+                lrows
+        if isinstance(node, L.Project):
+            c, _ = go(node.child)
+            pa = PartialAgg(c, tuple(node.keys), (), node.max_groups,
+                            64, 0, c.part)
+            return MergeAgg(pa, "project"), node.max_groups
+        if isinstance(node, L.GroupAgg):
+            c, _ = go(node.child)
+            specs = ((L._out_key(node.agg, node.method), node.value,
+                      node.agg, node.method),) + tuple(node.extra)
+            names = [s[0] for s in specs]
+            clashes = set(names) & _RESERVED_OUT_KEYS
+            if clashes or len(set(names)) != len(names):
+                raise ValueError(
+                    f"GroupAgg aggregate names must be unique and avoid "
+                    f"{sorted(_RESERVED_OUT_KEYS)}; got {names}")
+            pa = PartialAgg(c, tuple(node.keys), specs, node.max_groups,
+                            node.kappa, node.num_freq, c.part)
+            return MergeAgg(pa, "groupagg"), node.max_groups
+        if isinstance(node, L.ReweightGreater):
+            if not node.threshold_col and node.threshold is None:
+                raise ValueError("ReweightGreater needs threshold_col "
+                                 "or a constant threshold")
+            c, _ = go(node.child)
+            pa = PartialAgg(c, tuple(node.keys),
+                            (("sum", node.value, "SUM", "normal"),),
+                            node.max_groups, 64, 0, c.part)
+            return MergeAgg(pa, "reweight", node.threshold_col,
+                            node.threshold, tuple(node.carry_cols)), \
+                node.max_groups
+        raise TypeError(node)
+
+    return go(root)[0]
+
+
+def explain(node: PhysNode, indent: int = 0) -> str:
+    """Human/golden-test-readable rendering of a physical plan."""
+    pad = "  " * indent
+
+    def tag(n):
+        return type(n.part).__name__ if not isinstance(n.part,
+                                                       HashPartitioned) \
+            else f"HashPartitioned({n.part.key})"
+
+    if isinstance(node, ShardScan):
+        return f"{pad}ShardScan({node.name}, rows={node.rows}) :: {tag(node)}"
+    if isinstance(node, PhysSelect):
+        return (f"{pad}Select :: {tag(node)}\n"
+                + explain(node.child, indent + 1))
+    if isinstance(node, PhysMap):
+        return (f"{pad}Map({node.name}) :: {tag(node)}\n"
+                + explain(node.child, indent + 1))
+    if isinstance(node, GatherJoin):
+        return (f"{pad}GatherJoin({node.left_key}={node.right_key}, "
+                f"build={node.build_rows}) :: {tag(node)}\n"
+                + explain(node.left, indent + 1) + "\n"
+                + explain(node.right, indent + 1))
+    if isinstance(node, ShuffleJoin):
+        return (f"{pad}ShuffleJoin({node.left_key}={node.right_key}, "
+                f"build={node.build_rows}, "
+                f"exchange=HashPartitioned({node.exchange.key}), "
+                f"buckets=(build={node.build_bucket}, "
+                f"probe={node.probe_bucket})) :: {tag(node)}\n"
+                + explain(node.left, indent + 1) + "\n"
+                + explain(node.right, indent + 1))
+    if isinstance(node, PartialAgg):
+        return (f"{pad}PartialAgg(keys={list(node.keys)}, "
+                f"specs={[s[0] for s in node.specs]}, "
+                f"G={node.max_groups}) :: {tag(node)}\n"
+                + explain(node.child, indent + 1))
+    if isinstance(node, MergeAgg):
+        return (f"{pad}MergeAgg[{node.kind}] :: {tag(node)}\n"
+                + explain(node.child, indent + 1))
+    raise TypeError(node)

@@ -1,52 +1,57 @@
-"""Probabilistic -> deterministic plan mapping (paper §VI, Table I),
-mesh-aware.
+"""Probabilistic -> deterministic plan compilation (paper §VI, Table I):
+a two-stage compiler over the logical plan DAG.
 
-A Plan is a small dataflow DAG of operator nodes.  ``compile_plan`` walks
-the DAG and emits one jit-able function  tables -> results , realising the
+A Plan is a small dataflow DAG of LOGICAL operator nodes (the zoo below).
+``compile_plan`` no longer interprets it directly: it first LOWERS the
+logical DAG to an explicit physical-plan IR — :mod:`repro.db.physical`,
+where every node carries its execution strategy and a partitioning
+property (Replicated / RowBlocked / HashPartitioned) — and then an
+EXECUTOR (this module) interprets the physical plan, realising the
 paper's central claim: probabilistic queries run on a *deterministic*
 engine (here: XLA) once every probabilistic operator is rewritten to a
 deterministic one + segment-UDA calls (:mod:`repro.core.uda`).
 
-``compile_plan(root, mesh)`` compiles the SAME plan for a device mesh with
-the WHOLE pipeline sharded — no stage keeps a replicated copy of the data.
-Every base table is row-partitioned over the mesh's data axes (contiguous
-blocks, valid masks riding along; :mod:`repro.db.table`) and the plan runs
-inside ONE shard_map:
+``compile_plan(root, mesh)`` lowers the SAME logical plan for a device
+mesh and runs the whole physical plan inside ONE shard_map — no stage
+keeps a replicated copy of any base table:
 
-    Scan            the shard-local block of the (chunk-padded) base table
+    ShardScan       the shard-local block of the (chunk-padded) base table
     Select / Map    embarrassingly parallel on the local block
-    FKJoin          build-side broadcast: all-gather the right relation's
-                    (key, p, cols) columns, probe locally by sort +
-                    searchsorted; right subtrees above
-                    ``join_gather_budget`` rows are evaluated replicated
-                    instead (their scans are fed unsharded)
-    group ids       two-phase distributed unique: per-shard jnp.unique of
-                    the live key codes -> all-gather + merge of the
-                    per-shard code tables -> globally consistent ids via
-                    searchsorted (`db.distributed.group_ids_sharded`) —
-                    no replicated full-table unique on the data axis
-    GroupAgg /      per-shard UDA Accumulate over the local tuples, ONE
-    ReweightGreater collective Merge per aggregation pass
-    / Project       (`db.distributed.allgather_merge`), replicated
-                    Finalize; group-level outputs are replicated Tables
+    GatherJoin      small build side: all-gather the right relation's
+                    (key, p, cols) columns, probe locally
+    ShuffleJoin     build side above ``join_gather_budget`` (the
+                    ``FKJoin.gather_budget`` per-node override wins):
+                    hash-partition build rows AND probe keys to
+                    ``key % n_shards`` owners with ``dist.shuffle_by_key``
+                    (static buckets, overflow accounted), match
+                    shard-locally, shuffle responses home — peak build
+                    rows/device O(build/shards), no replicated fallback
+    group ids       two-phase distributed unique (exact under overflow;
+                    `db.distributed.group_ids_sharded`)
+    PartialAgg /    per-shard, per-canonical-chunk UDA Accumulate, then
+    MergeAgg        ONE collective per aggregation pass assembling every
+                    chunk state (`db.distributed.allgather_merge`) and the
+                    replicated Finalize; group-level outputs are
+                    replicated Tables
 
-Determinism contract: every aggregation pass folds its tuples over a fixed
-grid of ``canonical_chunks`` contiguous chunks and merges the partial
-states in a balanced pairwise tree (:func:`repro.core.uda.
-accumulate_chunked`).  A mesh whose shard count divides the grid computes
-each shard's subtree locally and the cross-shard Merge finishes the SAME
-tree, so ``compile_plan(root, mesh)`` results are BIT-IDENTICAL to
+Determinism contract: every aggregation pass folds its tuples over a
+fixed grid of ``canonical_chunks`` contiguous chunks and merges the chunk
+states in the one fixed tree of :func:`repro.core.uda.tree_fold`
+(pow2-base + sequential tail).  Each chunk is computed wholly on one
+shard and ALL chunk states are gathered before the fold, so ANY shard
+count — 2, 3, 4, ... — computes the SAME tree and
+``compile_plan(root, mesh)`` results are BIT-IDENTICAL to
 ``compile_plan(root, None)`` — asserted per-plan by the mesh-equivalence
-harness in tests/conftest.py.  Per-device memory is O(rows / shards) for
-every pipeline stage (plus gathered join build sides and group-level
-state), not O(total rows).
+harness in tests/conftest.py, including plans that lower to ShuffleJoin.
+Per-device memory is O(rows / shards) for every pipeline stage (plus
+gathered small build sides and group-level state), not O(total rows).
 
 Node zoo (Table I rows in brackets):
 
     Scan(name)                               [I]   R -> R^p
     Select(child, pred)                      [II]  sigma, deterministic cond
     Map(child, name, fn)                     [--]  computed column
-    FKJoin(l, r, lk, rk, cols)               [IV]  join, deterministic cond
+    FKJoin(l, r, lk, rk, cols[, budget])     [IV]  join, deterministic cond
     Project(child, keys, max_groups)         [V]   GROUP BY + AtLeastOne
     GroupAgg(child, keys, agg, value, ...)   [VI]  GROUP BY + PGF UDAs
                                                    (+ `extra` riders share
@@ -64,6 +69,7 @@ from jax.sharding import PartitionSpec as P
 from ..compat import shard_map
 from ..core import uda
 from . import operators as ops
+from . import physical as phys
 from .table import Table
 
 
@@ -92,11 +98,16 @@ class Map(Node):
 
 @dataclasses.dataclass(frozen=True)
 class FKJoin(Node):
+    """Many-to-one equijoin.  ``gather_budget`` overrides the compiler's
+    global ``join_gather_budget`` for THIS join (rows of build side that
+    may be all-gathered; larger builds lower to ShuffleJoin on a mesh), so
+    mixed plans can gather small dimensions while shuffling large ones."""
     left: Node
     right: Node
     left_key: str
     right_key: str
     right_cols: tuple
+    gather_budget: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,7 +134,7 @@ class GroupAgg(Node):
     num_freq) row-stochastic coefficient matrix.  When max_groups *
     num_freq exceeds the planner's ``cf_budget_elems``, the compiler
     accumulates the state in multiple passes over frequency slabs (each
-    slab additively psum-merged on a mesh) — see ``compile_plan``.
+    slab additively merged on a mesh) — see ``compile_plan``.
     """
     child: Node
     keys: tuple
@@ -196,17 +207,17 @@ def _freq_slabs(num_freq: int, max_groups: int, budget: int) -> tuple:
                  for lo in range(0, num_freq, f_slab))
 
 
-_RESERVED_OUT_KEYS = frozenset({"valid", "keys", "confidence"})
-
-
-@dataclasses.dataclass
-class _Rel:
-    """A relation mid-plan: a (possibly shard-local) Table plus whether its
-    rows are partitioned over the mesh's data axes.  Group-level outputs
-    (ReweightGreater / Project) and gathered build sides are replicated —
-    every shard holds the identical full Table."""
-    table: Table
-    sharded: bool
+def shard_capacity(capacity: int, canonical_chunks: int, shards: int) -> int:
+    """The padded capacity ``compile_plan`` gives a base table: first the
+    canonical chunk grid (chunk size csz = ceil(n / chunks)), then enough
+    whole PADDING CHUNKS that every shard owns the same number of chunk
+    slots — shards * ceil(chunks / shards) * csz rows.  For shard counts
+    dividing the grid this adds nothing beyond the chunk padding; padding
+    chunks hold only invalid p = 0 rows and their (identity) states are
+    sliced away before the canonical fold."""
+    csz = -(-capacity // canonical_chunks)
+    local = -(-canonical_chunks // shards)
+    return shards * local * csz
 
 
 def compile_plan(root: Node, mesh=None, *,
@@ -214,22 +225,28 @@ def compile_plan(root: Node, mesh=None, *,
                  model_axis: str | None = "model",
                  cf_budget_elems: int = 1 << 22,
                  canonical_chunks: int = 8,
-                 join_gather_budget: int = 1 << 20):
+                 join_gather_budget: int = 1 << 20,
+                 shuffle_slack: float = 4.0):
     """Emit a function tables -> result (Table or dict of arrays).
 
-    With ``mesh``, the WHOLE plan runs inside one shard_map over the
-    mesh's data axes — scans, selects, joins, group-id assignment and
-    aggregation all consume shard-local row blocks (see module docstring
-    for the per-operator protocol); results are bit-identical to the
-    mesh=None compile.  Tuples stay replicated over ``model_axis`` (every
-    collective here runs on the data axes only, so model replicas remain
+    With ``mesh``, the logical plan lowers to a sharded physical plan
+    (:func:`repro.db.physical.lower_plan`) and the WHOLE plan runs inside
+    one shard_map over the mesh's data axes — scans, selects, joins,
+    group-id assignment and aggregation all consume shard-local row
+    blocks (see module docstring for the per-operator strategies);
+    results are bit-identical to the mesh=None compile for ANY data-shard
+    count.  Tuples stay replicated over ``model_axis`` (every collective
+    here runs on the data axes only, so model replicas remain
     bit-identical and need no reconciliation).
 
-    ``canonical_chunks`` is the fixed accumulation grid that makes results
-    shard-count-invariant: it must be a power of two and a multiple of the
-    mesh's data-shard count.  ``join_gather_budget`` caps the rows of an
-    FKJoin build side that may be all-gathered; larger right subtrees are
-    evaluated replicated instead.
+    ``canonical_chunks`` (any positive count) is the fixed accumulation
+    grid that makes results shard-count-invariant.  ``join_gather_budget``
+    caps the rows of an FKJoin build side that may be all-gathered; larger
+    build sides lower to the shuffle-partitioned join, whose static bucket
+    capacities are ``shuffle_slack`` times the uniform share (overflow is
+    counted and poisons the join output with NaN — see
+    ``dist.shuffle_fk_join``).  A per-node ``FKJoin.gather_budget``
+    overrides the global for that join.
 
     ``cf_budget_elems`` bounds the total live exact-CF state elements of a
     `GroupAgg(method="exact")` node — counting both the log-abs and angle
@@ -237,7 +254,9 @@ def compile_plan(root: Node, mesh=None, *,
     the full (max_groups, num_freq) state would exceed it, the compiler
     runs multiple accumulation passes over frequency slabs (each slab
     collective-merged on a mesh) and concatenates the slab states before
-    the one batched-FFT Finalize.
+    the one batched-FFT Finalize; the grouped kernel's argsort/operand
+    prep is hoisted above the slab loop (:func:`repro.core.uda.
+    cf_chunk_operands`).
     """
     from . import distributed as dist
 
@@ -247,251 +266,242 @@ def compile_plan(root: Node, mesh=None, *,
     for a in axes:
         shards *= mesh.shape[a]
     chunks = canonical_chunks
-    if chunks & (chunks - 1) or chunks <= 0:
-        raise ValueError(f"canonical_chunks must be a power of two, "
-                         f"got {chunks}")
-    if chunks % shards:
-        raise ValueError(
-            f"the canonical chunk grid ({chunks}) must be a multiple of the "
-            f"mesh's data-shard count ({shards}): pass a larger power-of-two "
-            f"canonical_chunks to compile_plan (bit-reproducible sharding "
-            f"needs a power-of-two data-shard count)")
-    local_chunks = chunks // shards
+    if chunks <= 0:
+        raise ValueError(f"canonical_chunks must be positive, got {chunks}")
+    local_chunks = -(-chunks // shards)
 
-    # Global (pre-shard) padded capacities of the current compile, set by
-    # `compiled` before tracing: the build-side budget must see global row
-    # counts even inside shard_map, where tables are 1/shards-sized blocks.
-    global_caps: dict = {}
+    # Canonical (chunk-grid-only) capacities of the base tables, set by
+    # `compiled` before tracing: the shape a relational result has in the
+    # mesh=None compile, before any shard-alignment padding chunks.
+    canon_caps: dict = {}
 
-    def _cap(node: Node) -> int:
-        """Static GLOBAL output capacity (rows) of a relational subtree."""
-        if isinstance(node, Scan):
-            return global_caps[node.name]
-        if isinstance(node, (Select, Map)):
-            return _cap(node.child)
-        if isinstance(node, FKJoin):
-            return _cap(node.left)
-        if isinstance(node, (Project, ReweightGreater)):
-            return node.max_groups
-        raise TypeError(node)
+    def _canonical_rows(pnode: phys.PhysNode) -> int:
+        """Root output rows of a relational subtree under mesh=None padding
+        (row capacity follows the probe/left lineage down to its scan)."""
+        if isinstance(pnode, phys.ShardScan):
+            return canon_caps[pnode.name]
+        if isinstance(pnode, (phys.PhysSelect, phys.PhysMap)):
+            return _canonical_rows(pnode.child)
+        if isinstance(pnode, (phys.GatherJoin, phys.ShuffleJoin)):
+            return _canonical_rows(pnode.left)
+        if isinstance(pnode, phys.MergeAgg):
+            return pnode.child.max_groups
+        raise TypeError(pnode)
 
-    def _repl_scans(node: Node, out: set, repl: bool = False):
-        """Names of base tables that some over-budget FKJoin build subtree
-        scans — these are fed into the shard_map replicated as well."""
-        if isinstance(node, Scan):
-            if repl:
-                out.add(node.name)
-        elif isinstance(node, FKJoin):
-            _repl_scans(node.left, out, repl)
-            big = _cap(node.right) > join_gather_budget
-            _repl_scans(node.right, out, repl or big)
-        else:
-            _repl_scans(node.child, out, repl)
+    def run_plan(sh_tables: Dict[str, Table], proot: phys.PhysNode):
+        """Interpret the physical plan; in mesh mode this body runs inside
+        shard_map (sh_tables are shard-local row blocks)."""
 
-    def run_plan(sh_tables: Dict[str, Table], rp_tables: Dict[str, Table]):
-        """Execute the plan; in mesh mode this body runs inside shard_map
-        (sh_tables are local row blocks, rp_tables replicated)."""
+        def sharded(t: Table) -> bool:
+            return bool(axes) and isinstance(t.part, phys.RowBlocked)
 
-        def acc(udas_d, rel: _Rel, values, ids, max_groups):
+        def acc(udas_d, table: Table, values, ids, max_groups,
+                cf_operands=None):
             """ONE canonical chunked pass over the relation's tuples for
-            every UDA of the node, plus the cross-shard Merge when the
-            rows are partitioned.  The chunk grid is the same in every
-            compile: a sharded pass runs its chunks/shards local chunks
-            and allgather_merge finishes the identical fold tree."""
-            probs = rel.table.masked_prob()
-            states = uda.accumulate_chunked(
+            every UDA of the pass.  The chunk grid is the same in every
+            compile: a sharded pass computes its local chunk slots' states
+            and allgather_merge assembles ALL chunk states so every shard
+            finishes the identical fold tree."""
+            probs = table.masked_prob()
+            if sharded(table):
+                parts = uda.accumulate_chunk_states(
+                    udas_d, probs, values, ids, max_groups=max_groups,
+                    num_chunks=local_chunks, cf_operands=cf_operands)
+                return dist.allgather_merge(udas_d, parts, axes, chunks,
+                                            shards)
+            return uda.accumulate_chunked(
                 udas_d, probs, values, ids, max_groups=max_groups,
-                num_chunks=local_chunks if rel.sharded else chunks)
-            if rel.sharded and axes:
-                states = dist.allgather_merge(udas_d, states, axes)
-            return states
+                num_chunks=chunks, cf_operands=cf_operands)
 
-        def rel_group_ids(rel: _Rel, keys, max_groups):
-            if rel.sharded and axes:
-                return dist.group_ids_sharded(rel.table, list(keys),
-                                              max_groups, axes)
-            return ops.group_ids(rel.table, list(keys), max_groups)
+        def rel_group_ids(t: Table, keys, max_groups):
+            if sharded(t):
+                return dist.group_ids_sharded(t, list(keys), max_groups,
+                                              axes)
+            return ops.group_ids(t, list(keys), max_groups)
 
-        def rel_key_columns(rel: _Rel, keys, ids, max_groups):
-            if rel.sharded and axes:
-                return dist.group_key_columns_sharded(rel.table, keys, ids,
+        def rel_key_columns(t: Table, keys, ids, max_groups):
+            if sharded(t):
+                return dist.group_key_columns_sharded(t, keys, ids,
                                                       max_groups, axes)
-            return ops.group_key_columns(rel.table, keys, ids, max_groups)
+            return ops.group_key_columns(t, keys, ids, max_groups)
 
-        def run(node: Node, repl: bool):
-            if isinstance(node, Scan):
-                if repl:
-                    return _Rel(rp_tables[node.name], False)
-                return _Rel(sh_tables[node.name], mesh_mode and bool(axes))
-            if isinstance(node, Select):
-                r = run(node.child, repl)
-                return _Rel(ops.select(r.table, node.pred), r.sharded)
-            if isinstance(node, Map):
-                r = run(node.child, repl)
-                return _Rel(r.table.with_column(node.name, node.fn(r.table)),
-                            r.sharded)
-            if isinstance(node, FKJoin):
-                lrel = run(node.left, repl)
-                big = mesh_mode and _cap(node.right) > join_gather_budget
-                rrel = run(node.right, repl or big)
-                rtab = rrel.table
-                if rrel.sharded and axes:
+        def run_agg(node: phys.MergeAgg):
+            """The PartialAgg/MergeAgg pair executes as one unit: group
+            ids, then per frequency slab one Accumulate (per-chunk
+            partials) + ONE collective Merge, then the replicated Finalize
+            selected by ``kind``."""
+            pa = node.child
+            t = run(pa.child)
+            mg = pa.max_groups
+            ids, _, gvalid = rel_group_ids(t, pa.keys, mg)
+
+            specs = list(pa.specs)
+            values: dict = {}
+            cols: dict = {}    # fetch each source column exactly once
+            for name, value, agg, method in specs:
+                if agg == "COUNT" or not value:
+                    values[name] = None
+                else:
+                    # Keep the raw column (uda.accumulate casts to the
+                    # prob dtype itself): an integer source dtype is
+                    # what makes an exact-CF aggregate eligible for the
+                    # Pallas kernel.
+                    if value not in cols:
+                        cols[value] = t[value]
+                    values[name] = cols[value]
+
+            # Exact-CF states are (G, F) — chunk F against the memory
+            # budget.  Pass 0 carries every aggregate (the riders share
+            # ONE accumulation); later passes re-stream the tuples for
+            # the remaining frequency slabs of the exact aggregates.
+            exact_names = [s[0] for s in specs if s[3] == "exact"]
+            # The budget bounds TOTAL live exact-state elements: each
+            # exact aggregate carries two (G, slab) arrays (log-abs +
+            # angle) and every exact aggregate rides the same slab pass.
+            slabs = (_freq_slabs(pa.num_freq, mg,
+                                 cf_budget_elems // (2 * len(exact_names)))
+                     if exact_names else ((0, pa.num_freq),))
+            cf_operands: dict = {}
+            if len(slabs) > 1:
+                # Hoist the grouped kernel's argsort(gids) + operand prep
+                # above the slab loop: prepared once per canonical chunk,
+                # reused by every slab pass (None when the kernel would
+                # not be dispatched — the scan/oracle paths sort nothing).
+                probs_m = t.masked_prob()
+                nloc = local_chunks if sharded(t) else chunks
+                for name in exact_names:
+                    prepared = uda.cf_chunk_operands(
+                        pa.num_freq, probs_m, values[name], ids,
+                        max_groups=mg, num_chunks=nloc)
+                    if prepared is not None:
+                        cf_operands[name] = prepared
+            udas: dict = {}
+            states: dict = {}
+            for si, (lo, cnt) in enumerate(slabs):
+                udas_i: dict = {}
+                vals_i: dict = {}
+                if si == 0:
+                    udas_i["confidence"] = uda.AtLeastOne()
+                    vals_i["confidence"] = None
+                    for name, value, agg, method in specs:
+                        if method != "exact":
+                            udas_i[name] = _agg_uda(agg, method, pa.kappa)
+                            vals_i[name] = values[name]
+                for name, value, agg, method in specs:
+                    if method == "exact":
+                        udas_i[name] = _agg_uda(agg, method, pa.kappa,
+                                                pa.num_freq, lo, cnt)
+                        vals_i[name] = values[name]
+                sts = acc(udas_i, t, vals_i, ids, mg,
+                          cf_operands=cf_operands or None)
+                for name, st in sts.items():
+                    if name in states:          # append the frequency slab
+                        prev = states[name]
+                        states[name] = uda.CFState(
+                            jnp.concatenate([prev.log_abs, st.log_abs], -1),
+                            jnp.concatenate([prev.angle, st.angle], -1))
+                    else:
+                        states[name] = st
+                        udas[name] = udas_i[name]
+            for name in exact_names:            # full-range Finalize UDA
+                udas[name] = _agg_uda("SUM", "exact", pa.kappa, pa.num_freq)
+
+            conf = udas["confidence"].finalize(states["confidence"])
+            if node.kind == "project":
+                gcols = rel_key_columns(t, list(pa.keys), ids, mg)
+                return Table(gcols, conf, gvalid, node.part)
+            if node.kind == "reweight":
+                mu, var = udas["sum"].finalize(states["sum"])
+                carry = list(pa.keys) + list(node.carry_cols)
+                if node.threshold_col:
+                    gcols = rel_key_columns(t, carry + [node.threshold_col],
+                                            ids, mg)
+                    thr = gcols[node.threshold_col].astype(mu.dtype)
+                else:
+                    gcols = rel_key_columns(t, carry, ids, mg)
+                    thr = jnp.asarray(node.threshold, mu.dtype)
+                p_gt = ops.normal_greater(mu, var, thr)
+                return Table({k: gcols[k] for k in carry}, conf * p_gt,
+                             gvalid, node.part)
+            out = dict(valid=gvalid,
+                       keys=rel_key_columns(t, list(pa.keys), ids, mg),
+                       confidence=conf)
+            for name, value, agg, method in specs:
+                u, st = udas[name], states[name]
+                if agg in ("MIN", "MAX"):
+                    out[name] = ops.minmax_runs(u, st)
+                else:
+                    out[name] = u.finalize(st)
+            return out
+
+        def run(node: phys.PhysNode):
+            if isinstance(node, phys.ShardScan):
+                return sh_tables[node.name].with_part(node.part)
+            if isinstance(node, phys.PhysSelect):
+                return ops.select(run(node.child), node.pred)
+            if isinstance(node, phys.PhysMap):
+                t = run(node.child)
+                return t.with_column(node.name, node.fn(t))
+            if isinstance(node, phys.GatherJoin):
+                lt = run(node.left)
+                rt = run(node.right)
+                if sharded(rt):
                     # Broadcast the small build side: all-gather only the
                     # probe key + carried columns (plus p and valid).
-                    rtab = dist.gather_table(
-                        rtab.select_columns(
+                    rt = dist.gather_table(
+                        rt.select_columns(
                             dict.fromkeys((node.right_key,)
                                           + tuple(node.right_cols))),
                         axes)
-                return _Rel(ops.fk_join(lrel.table, rtab, node.left_key,
-                                        node.right_key,
-                                        list(node.right_cols)),
-                            lrel.sharded)
-            if isinstance(node, Project):
-                rel = run(node.child, repl)
-                ids, _, gvalid = rel_group_ids(rel, node.keys,
-                                               node.max_groups)
-                u = uda.AtLeastOne()
-                st = acc({"conf": u}, rel, {"conf": None}, ids,
-                         node.max_groups)["conf"]
-                cols = rel_key_columns(rel, list(node.keys), ids,
-                                       node.max_groups)
-                return _Rel(Table(cols, u.finalize(st), gvalid), False)
-            if isinstance(node, GroupAgg):
-                rel = run(node.child, repl)
-                ids, _, gvalid = rel_group_ids(rel, node.keys,
-                                               node.max_groups)
-
-                specs = [(_out_key(node.agg, node.method), node.value,
-                          node.agg, node.method)] + list(node.extra)
-                names = [s[0] for s in specs]
-                clashes = set(names) & _RESERVED_OUT_KEYS
-                if clashes or len(set(names)) != len(names):
-                    raise ValueError(
-                        f"GroupAgg aggregate names must be unique and avoid "
-                        f"{sorted(_RESERVED_OUT_KEYS)}; got {names}")
-                values: dict = {}
-                cols: dict = {}    # fetch each source column exactly once
-                for name, value, agg, method in specs:
-                    if agg == "COUNT" or not value:
-                        values[name] = None
-                    else:
-                        # Keep the raw column (uda.accumulate casts to the
-                        # prob dtype itself): an integer source dtype is
-                        # what makes an exact-CF aggregate eligible for the
-                        # Pallas kernel.
-                        if value not in cols:
-                            cols[value] = rel.table[value]
-                        values[name] = cols[value]
-
-                # Exact-CF states are (G, F) — chunk F against the memory
-                # budget.  Pass 0 carries every aggregate (the riders share
-                # ONE accumulation); later passes re-stream the tuples for
-                # the remaining frequency slabs of the exact aggregates.
-                exact_names = [s[0] for s in specs if s[3] == "exact"]
-                # The budget bounds TOTAL live exact-state elements: each
-                # exact aggregate carries two (G, slab) arrays (log-abs +
-                # angle) and every exact aggregate rides the same slab pass.
-                slabs = (_freq_slabs(node.num_freq, node.max_groups,
-                                     cf_budget_elems // (2 * len(exact_names)))
-                         if exact_names else ((0, node.num_freq),))
-                udas: dict = {}
-                states: dict = {}
-                for si, (lo, cnt) in enumerate(slabs):
-                    udas_i: dict = {}
-                    vals_i: dict = {}
-                    if si == 0:
-                        udas_i["confidence"] = uda.AtLeastOne()
-                        vals_i["confidence"] = None
-                        for name, value, agg, method in specs:
-                            if method != "exact":
-                                udas_i[name] = _agg_uda(agg, method,
-                                                        node.kappa)
-                                vals_i[name] = values[name]
-                    for name, value, agg, method in specs:
-                        if method == "exact":
-                            udas_i[name] = _agg_uda(agg, method, node.kappa,
-                                                    node.num_freq, lo, cnt)
-                            vals_i[name] = values[name]
-                    sts = acc(udas_i, rel, vals_i, ids, node.max_groups)
-                    for name, st in sts.items():
-                        if name in states:      # append the frequency slab
-                            prev = states[name]
-                            states[name] = uda.CFState(
-                                jnp.concatenate([prev.log_abs, st.log_abs],
-                                                -1),
-                                jnp.concatenate([prev.angle, st.angle], -1))
-                        else:
-                            states[name] = st
-                            udas[name] = udas_i[name]
-                for name in exact_names:        # full-range Finalize UDA
-                    udas[name] = _agg_uda("SUM", "exact", node.kappa,
-                                          node.num_freq)
-
-                out = dict(valid=gvalid,
-                           keys=rel_key_columns(rel, list(node.keys), ids,
-                                                node.max_groups),
-                           confidence=udas["confidence"].finalize(
-                               states["confidence"]))
-                for name, value, agg, method in specs:
-                    u, st = udas[name], states[name]
-                    if agg in ("MIN", "MAX"):
-                        out[name] = ops.minmax_runs(u, st)
-                    else:
-                        out[name] = u.finalize(st)
-                return out
-            if isinstance(node, ReweightGreater):
-                if not node.threshold_col and node.threshold is None:
-                    raise ValueError("ReweightGreater needs threshold_col "
-                                     "or a constant threshold")
-                rel = run(node.child, repl)
-                ids, _, gvalid = rel_group_ids(rel, node.keys,
-                                               node.max_groups)
-                udas = {"confidence": uda.AtLeastOne(),
-                        "sum": uda.SumNormal()}
-                values = {"sum":
-                          rel.table[node.value].astype(rel.table.prob.dtype)}
-                states = acc(udas, rel, values, ids, node.max_groups)
-                mu, var = udas["sum"].finalize(states["sum"])
-                conf = udas["confidence"].finalize(states["confidence"])
-
-                carry = list(node.keys) + list(node.carry_cols)
-                if node.threshold_col:
-                    gcols = rel_key_columns(
-                        rel, carry + [node.threshold_col], ids,
-                        node.max_groups)
-                    thr = gcols[node.threshold_col].astype(mu.dtype)
-                else:
-                    gcols = rel_key_columns(rel, carry, ids,
-                                            node.max_groups)
-                    thr = jnp.asarray(node.threshold, mu.dtype)
-                p_gt = ops.normal_greater(mu, var, thr)
-                cols = {k: gcols[k] for k in carry}
-                return _Rel(Table(cols, conf * p_gt, gvalid), False)
+                return ops.fk_join(lt, rt, node.left_key, node.right_key,
+                                   list(node.right_cols))
+            if isinstance(node, phys.ShuffleJoin):
+                lt = run(node.left)
+                rt = run(node.right)
+                return dist.shuffle_fk_join(
+                    lt, rt, node.left_key, node.right_key,
+                    list(node.right_cols), axes, n_shards=shards,
+                    build_bucket=node.build_bucket,
+                    probe_bucket=node.probe_bucket)
+            if isinstance(node, phys.MergeAgg):
+                return run_agg(node)
             raise TypeError(node)
 
-        out = run(root, False)
-        if isinstance(out, _Rel):
-            if out.sharded and axes:
-                return dist.gather_table(out.table, axes)
-            return out.table
+        out = run(proot)
+        if isinstance(out, Table):
+            if sharded(out):
+                out = dist.gather_table(out, axes)
+                # Drop the whole-padding chunks appended for shard counts
+                # that don't divide the grid: the caller-visible capacity
+                # is the canonical (chunk-grid) one of the mesh=None
+                # compile (the dropped rows are all invalid p = 0).
+                n = _canonical_rows(proot)
+                if n < out.capacity:
+                    out = Table({k: v[:n] for k, v in out.columns.items()},
+                                out.prob[:n], out.valid[:n], out.part)
+            return out.with_part(phys.Replicated())
         return out
 
     def compiled(tables: Dict[str, Table]):
-        # Both compiles pad every base table to the canonical chunk grid:
-        # the chunk boundaries define the deterministic fold tree (and the
-        # even contiguous row partition on a mesh).
-        padded = {k: t.pad_to_multiple(chunks) for k, t in tables.items()}
-        global_caps.clear()
-        global_caps.update({k: t.capacity for k, t in padded.items()})
+        # Every compile pads every base table to the canonical chunk grid
+        # (the chunk boundaries define the deterministic fold tree) plus
+        # whole padding chunks so any shard count owns equal chunk runs.
+        padded = {k: t.pad_to_multiple(chunks)
+                   .pad_to(shard_capacity(t.capacity, chunks, shards))
+                  for k, t in tables.items()}
+        caps = {k: t.capacity for k, t in padded.items()}
+        canon_caps.clear()
+        canon_caps.update({k: -(-t.capacity // chunks) * chunks
+                           for k, t in tables.items()})
+        proot = phys.lower_plan(root, caps, n_shards=shards,
+                                sharded=mesh_mode and bool(axes),
+                                join_gather_budget=join_gather_budget,
+                                shuffle_slack=shuffle_slack)
         if not mesh_mode:
-            return run_plan(padded, padded)
-        repl_names: set = set()
-        _repl_scans(root, repl_names)
-        rp_tables = {k: padded[k] for k in sorted(repl_names)}
-        fn = shard_map(run_plan, mesh=mesh,
-                       in_specs=(P(axes), P()), out_specs=P(),
+            return run_plan(padded, proot)
+        fn = shard_map(lambda sh: run_plan(sh, proot), mesh=mesh,
+                       in_specs=(P(axes),), out_specs=P(),
                        check_vma=False)
-        return fn(padded, rp_tables)
+        return fn(padded)
 
     return compiled

@@ -26,6 +26,14 @@ grid first (pad rows are invalid with p = 0, indistinguishable from absent
 tuples for every operator), which makes the global row order the
 concatenation of the shard blocks and keeps chunk boundaries aligned
 across shard counts.
+
+``part`` is the table's partitioning metadata: which placement the rows of
+this (possibly shard-local) Table have on the mesh.  It is any hashable
+marker — the physical planner (:mod:`repro.db.physical`) uses its
+``Replicated`` / ``RowBlocked`` / ``HashPartitioned(key)`` properties —
+carried as static pytree aux data, so functional updates and jit
+boundaries preserve it and operators can assert/propagate layout without
+a side table.  ``None`` means "unspecified" (plain single-device use).
 """
 from __future__ import annotations
 
@@ -43,17 +51,19 @@ class Table:
     columns: Dict[str, jnp.ndarray]
     prob: jnp.ndarray
     valid: jnp.ndarray
+    #: partitioning metadata (static, hashable; see module docstring).
+    part: object = None
 
     # -- pytree plumbing ---------------------------------------------------
     def tree_flatten(self):
         names = tuple(sorted(self.columns))
         return ((tuple(self.columns[k] for k in names), self.prob, self.valid),
-                (names,))
+                (names, self.part))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         cols, prob, valid = children
-        return cls(dict(zip(aux[0], cols)), prob, valid)
+        return cls(dict(zip(aux[0], cols)), prob, valid, aux[1])
 
     # -- constructors --------------------------------------------------------
     @classmethod
@@ -82,18 +92,23 @@ class Table:
 
     # -- functional updates ----------------------------------------------------
     def with_valid(self, valid: jnp.ndarray) -> "Table":
-        return Table(self.columns, self.prob, valid)
+        return Table(self.columns, self.prob, valid, self.part)
 
     def with_prob(self, prob: jnp.ndarray) -> "Table":
-        return Table(self.columns, prob, self.valid)
+        return Table(self.columns, prob, self.valid, self.part)
+
+    def with_part(self, part) -> "Table":
+        """Retag the partitioning metadata (rows untouched)."""
+        return Table(self.columns, self.prob, self.valid, part)
 
     def with_column(self, name: str, values: jnp.ndarray) -> "Table":
         cols = dict(self.columns)
         cols[name] = values
-        return Table(cols, self.prob, self.valid)
+        return Table(cols, self.prob, self.valid, self.part)
 
     def select_columns(self, names) -> "Table":
-        return Table({k: self.columns[k] for k in names}, self.prob, self.valid)
+        return Table({k: self.columns[k] for k in names}, self.prob,
+                     self.valid, self.part)
 
     def masked_prob(self) -> jnp.ndarray:
         """p with invalid rows zeroed — the UDA-facing view (a dead tuple is
@@ -113,7 +128,7 @@ class Table:
         pad = capacity - n
         cols = {k: jnp.pad(v, (0, pad)) for k, v in self.columns.items()}
         return Table(cols, jnp.pad(self.prob, (0, pad)),
-                     jnp.pad(self.valid, (0, pad)))
+                     jnp.pad(self.valid, (0, pad)), self.part)
 
     def pad_to_multiple(self, multiple: int) -> "Table":
         """Pad with invalid p = 0 rows so `multiple` divides the capacity —
@@ -127,4 +142,4 @@ def concat(a: Table, b: Table) -> Table:
     assert keys == sorted(b.columns)
     cols = {k: jnp.concatenate([a.columns[k], b.columns[k]]) for k in keys}
     return Table(cols, jnp.concatenate([a.prob, b.prob]),
-                 jnp.concatenate([a.valid, b.valid]))
+                 jnp.concatenate([a.valid, b.valid]), a.part)

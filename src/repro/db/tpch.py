@@ -156,16 +156,22 @@ def generate(n_orders: int = 2000, lines_per_order: int = 4,
 
 
 # --------------------------------------------------------------- queries
-def _confidence_of(plan, db: TPCH, mesh):
+def _confidence_of(plan, db: TPCH, mesh, opts=None):
     """P(result non-empty): one-group AtLeastOne over the plan's output."""
     agg = GroupAgg(plan, keys=(), value="", agg="COUNT", max_groups=1)
-    out = compile_plan(agg, mesh)(db.tables())
+    out = compile_plan(agg, mesh, **(opts or {}))(db.tables())
     return dict(confidence=out["confidence"][0])
 
 
-def q1(db: TPCH, mode: str = "aggregate", mesh=None):
+def q1(db: TPCH, mode: str = "aggregate", mesh=None, plan_opts=None):
     """Pricing summary: GROUP BY (returnflag, linestatus); SUM(quantity),
-    SUM(extendedprice), COUNT(*) over shipped lineitems."""
+    SUM(extendedprice), COUNT(*) over shipped lineitems.
+
+    ``plan_opts`` (every query): extra ``compile_plan`` keywords —
+    ``join_gather_budget``, ``shuffle_slack``, ``canonical_chunks``, ... —
+    so callers steer the physical planner's strategy choices (e.g. force
+    the shuffle-partitioned join with a tiny gather budget) without
+    rebuilding the logical plans."""
     sel = Select(Scan("lineitem"),
                  lambda t: t["l_shipdate"] <= DAY0_1995 + 500)
     keys = ("l_returnflag", "l_linestatus")
@@ -180,10 +186,10 @@ def q1(db: TPCH, mode: str = "aggregate", mesh=None):
         cnt = jax.ops.segment_sum(m.astype(jnp.int32), ids, num_segments=8)
         return dict(valid=gvalid, sum_qty=qty, sum_price=price, count=cnt)
     if mode == "confidence":
-        return _confidence_of(sel, db, mesh)
+        return _confidence_of(sel, db, mesh, plan_opts)
     if mode == "group_confidence":
-        out = compile_plan(GroupAgg(sel, keys, "", "COUNT", 8), mesh)(
-            db.tables())
+        out = compile_plan(GroupAgg(sel, keys, "", "COUNT", 8), mesh,
+                           **(plan_opts or {}))(db.tables())
         return dict(valid=out["valid"], confidence=out["confidence"])
     # aggregate: Normal + moment terms per group, all in ONE UDA pass
     plan = GroupAgg(sel, keys, "l_quantity", "SUM", 8, "normal",
@@ -191,13 +197,13 @@ def q1(db: TPCH, mode: str = "aggregate", mesh=None):
                            ("count", "", "COUNT", "normal"),
                            ("cumulants_qty", "l_quantity", "SUM",
                             "cumulants")))
-    out = compile_plan(plan, mesh)(db.tables())
+    out = compile_plan(plan, mesh, **(plan_opts or {}))(db.tables())
     return dict(valid=out["valid"], qty=out["sum"], price=out["price"],
                 count=out["count"], cumulants_qty=out["cumulants_qty"])
 
 
 def q3(db: TPCH, mode: str = "aggregate", segment: int = 1,
-       max_groups: int = 512, mesh=None):
+       max_groups: int = 512, mesh=None, plan_opts=None):
     """Shipping priority: revenue per order for one market segment."""
     cust = Select(Scan("customer"), lambda t: t["c_mktsegment"] == segment)
     orders = Select(Scan("orders"), lambda t: t["o_orderdate"] < DAY0_1995)
@@ -213,22 +219,23 @@ def q3(db: TPCH, mode: str = "aggregate", segment: int = 1,
             num_segments=max_groups)
         return dict(valid=gvalid, revenue=rev)
     if mode == "confidence":
-        return _confidence_of(j, db, mesh)
+        return _confidence_of(j, db, mesh, plan_opts)
     if mode == "group_confidence":
         out = compile_plan(GroupAgg(j, ("l_orderkey",), "", "COUNT",
-                                    max_groups), mesh)(db.tables())
+                                    max_groups), mesh,
+                           **(plan_opts or {}))(db.tables())
         return dict(valid=out["valid"], confidence=out["confidence"])
     plan = GroupAgg(j, ("l_orderkey",), "l_extendedprice", "SUM", max_groups,
                     "normal",
                     extra=(("cumulants", "l_extendedprice", "SUM",
                             "cumulants"),))
-    out = compile_plan(plan, mesh)(db.tables())
+    out = compile_plan(plan, mesh, **(plan_opts or {}))(db.tables())
     return dict(valid=out["valid"], revenue=out["sum"],
                 cumulants=out["cumulants"])
 
 
 def q6(db: TPCH, mode: str = "aggregate", num_freq: int | None = None,
-       mesh=None):
+       mesh=None, plan_opts=None):
     """Forecast revenue change: scalar SUM over filtered lineitem.
 
     The single-group scalar aggregate — the paper's Figure 9 COUNT(*)
@@ -245,7 +252,7 @@ def q6(db: TPCH, mode: str = "aggregate", num_freq: int | None = None,
         return dict(revenue=jnp.sum(jnp.where(li.valid, li["l_quantity"]
                                               * li["l_discount"], 0)))
     if mode in ("confidence", "group_confidence"):
-        return _confidence_of(sel, db, mesh)
+        return _confidence_of(sel, db, mesh, plan_opts)
     # Integer-typed computed column: keeps the exact-CF aggregate eligible
     # for the Pallas kernel's integer-phase arithmetic (uda.accumulate
     # casts to the prob dtype itself and tracks source integrality).
@@ -255,7 +262,7 @@ def q6(db: TPCH, mode: str = "aggregate", num_freq: int | None = None,
         extra += (("exact", "q6_value", "SUM", "exact"),)
     plan = GroupAgg(val, (), "q6_value", "SUM", 1, "normal", extra=extra,
                     num_freq=num_freq or 0)
-    r = compile_plan(plan, mesh)(db.tables())
+    r = compile_plan(plan, mesh, **(plan_opts or {}))(db.tables())
     mu, var = r["sum"]
     out = dict(normal=(mu[0], var[0]), cumulants=r["cumulants"][0])
     if num_freq:
@@ -265,7 +272,7 @@ def q6(db: TPCH, mode: str = "aggregate", num_freq: int | None = None,
 
 def q18(db: TPCH, mode: str = "aggregate", qty_threshold: int = 150,
         max_groups: int = 2048, mesh=None, method: str = "normal",
-        num_freq: int = 256):
+        num_freq: int = 256, plan_opts=None):
     """Large-volume customers: orders whose SUM(l_quantity) > threshold.
 
     The probabilistic version keeps every order with
@@ -286,28 +293,29 @@ def q18(db: TPCH, mode: str = "aggregate", qty_threshold: int = 150,
                           threshold=float(qty_threshold))
     if mode == "confidence":
         # P(at least one order qualifies) = 1 - prod_g (1 - conf_g * p_gt_g)
-        return _confidence_of(rew, db, mesh)
+        return _confidence_of(rew, db, mesh, plan_opts)
     if mode == "group_confidence":
-        t = compile_plan(rew, mesh)(db.tables())
+        t = compile_plan(rew, mesh, **(plan_opts or {}))(db.tables())
         return dict(valid=t.valid, confidence=t.prob)
     if method == "exact":
         plan = GroupAgg(li, ("l_orderkey",), "l_quantity", "SUM", max_groups,
                         "exact", num_freq=num_freq)
-        out = compile_plan(plan, mesh)(db.tables())
+        out = compile_plan(plan, mesh, **(plan_opts or {}))(db.tables())
         coeffs = out["exact"]                        # (G, num_freq) rows
         gt = jnp.arange(num_freq) > qty_threshold
         p_gt = jnp.sum(coeffs * gt[None, :], axis=-1)
         return dict(valid=out["valid"], sum_dist=coeffs, p_qualifies=p_gt)
     plan = GroupAgg(li, ("l_orderkey",), "l_quantity", "SUM", max_groups,
                     "normal")
-    out = compile_plan(plan, mesh)(db.tables())
+    out = compile_plan(plan, mesh, **(plan_opts or {}))(db.tables())
     mu, var = out["sum"]
     p_gt = ops.normal_greater(mu, var, jnp.asarray(qty_threshold, mu.dtype))
     return dict(valid=out["valid"], sum_qty=(mu, var), p_qualifies=p_gt)
 
 
 def q20(db: TPCH, mode: str = "aggregate", nation_name: int = 3,
-        max_groups: int = 1024, avail_frac: float = 0.05, mesh=None):
+        max_groups: int = 1024, avail_frac: float = 0.05, mesh=None,
+        plan_opts=None):
     """The paper's Fig. 6 plan: suppliers in one nation with excess stock of
     'forest' parts.
 
@@ -337,12 +345,12 @@ def q20(db: TPCH, mode: str = "aggregate", nation_name: int = 3,
                 ("n_name",))
     r10 = FKJoin(r7, r9, "ps_suppkey", "s_suppkey", ("s_name", "s_address"))
     if mode == "deterministic":
-        t = compile_plan(r10, mesh)(db.tables())
+        t = compile_plan(r10, mesh, **(plan_opts or {}))(db.tables())
         return dict(valid=t.valid & (t.prob > 0.5), s_name=t["s_name"])
     proj = Project(r10, ("s_name",), 64)
     if mode == "confidence":
-        return _confidence_of(proj, db, mesh)
-    result = compile_plan(proj, mesh)(db.tables())
+        return _confidence_of(proj, db, mesh, plan_opts)
+    result = compile_plan(proj, mesh, **(plan_opts or {}))(db.tables())
     if mode == "group_confidence":
         return dict(valid=result.valid, s_name=result["s_name"],
                     confidence=result.prob)

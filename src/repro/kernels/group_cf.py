@@ -117,18 +117,40 @@ def _group_logcf_kernel(gmin_ref, gmax_ref, p_ref, a_ref, a2_ref, g_ref,
                                            preferred_element_type=p.dtype)
 
 
+def presort_operands(probs: jnp.ndarray, values: jnp.ndarray,
+                     gids: jnp.ndarray, num_freq: int):
+    """The argsort(gids) + split-modmult operand prep of
+    :func:`group_logcf`, hoisted so callers can run it ONCE and reuse it
+    across frequency slabs (the prep depends only on (values, gids,
+    num_freq), never on the slab window; each slab is a separately
+    dispatched step, so nothing else de-duplicates the sort).
+
+    Returns ``(p_sorted, a, a2, g_sorted)`` — pass as ``operands=`` to
+    :func:`group_logcf` (directly or through ``kernels.ops.group_logcf``).
+    """
+    order = jnp.argsort(jnp.asarray(gids))
+    a, a2, _ = pb_cf.split_modmult_operands(jnp.asarray(values)[order],
+                                            num_freq)
+    return (probs[order], a, a2,
+            jnp.asarray(gids)[order].astype(jnp.int32))
+
+
 @functools.partial(jax.jit, static_argnames=(
     "num_groups", "num_freq", "freq_lo", "freq_cnt", "gb", "fb", "tb",
     "interpret"))
 def group_logcf(probs: jnp.ndarray, values: jnp.ndarray, gids: jnp.ndarray,
                 *, num_groups: int, num_freq: int, freq_lo: int = 0,
                 freq_cnt: int | None = None, gb: int = 8, fb: int = 256,
-                tb: int = 512, interpret: bool | None = None):
+                tb: int = 512, interpret: bool | None = None,
+                operands=None):
     """(G, F)-tiled Pallas grouped log-CF accumulation.
 
     probs:  (n,) float tuple probabilities (p = 0 rows contribute nothing).
     values: (n,) integer tuple values (any int dtype; reduced mod num_freq).
     gids:   (n,) int group ids in [0, num_groups).
+    operands: optional pre-sorted columns from :func:`presort_operands`;
+    when given, probs/values/gids are ignored and the per-call sort +
+    operand prep is skipped (the frequency-slab hoist).
     Returns (log_abs, angle), each (num_groups, freq_cnt) float, matching
     :func:`repro.kernels.ref.group_logcf_ref` — frequencies
     [freq_lo, freq_lo + freq_cnt) of the num_freq-point DFT grid.
@@ -142,13 +164,16 @@ def group_logcf(probs: jnp.ndarray, values: jnp.ndarray, gids: jnp.ndarray,
 
     nt = probs.shape[0]
     ntp = pl.cdiv(nt, tb) * tb
-    # Sort tuples by group id so each block spans a narrow group range and
-    # the kernel's block-range skip prunes non-intersecting (gi, ti) steps.
-    order = jnp.argsort(jnp.asarray(gids))
-    a, a2, shift = pb_cf.split_modmult_operands(jnp.asarray(values)[order], n)
+    if operands is None:
+        # Sort tuples by group id so each block spans a narrow group range
+        # and the kernel's block-range skip prunes non-intersecting
+        # (gi, ti) steps.
+        operands = presort_operands(probs, values, gids, n)
+    p, a, a2, g = operands
+    shift = pb_cf.phase_shift(n)
     # p = 0 padding contributes log(1) = 0 to both outputs (any group row).
-    p = jnp.pad(probs[order], (0, ntp - nt))
-    g = jnp.pad(jnp.asarray(gids)[order].astype(jnp.int32), (0, ntp - nt),
+    p = jnp.pad(p, (0, ntp - nt))
+    g = jnp.pad(g, (0, ntp - nt),
                 constant_values=max(0, num_groups - 1))
     a = jnp.pad(a, (0, ntp - nt))
     a2 = jnp.pad(a2, (0, ntp - nt))

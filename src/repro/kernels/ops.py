@@ -36,15 +36,26 @@ def logcf(probs: jnp.ndarray, values: jnp.ndarray, num_freq: int,
     return ref.logcf_ref(probs, values, num_freq)
 
 
+def presort_group_operands(probs: jnp.ndarray, values: jnp.ndarray,
+                           gids: jnp.ndarray, num_freq: int):
+    """Pre-sorted grouped-CF kernel operands (argsort(gids) + split-modmult
+    prep) to reuse across frequency slabs — see
+    :func:`repro.kernels.group_cf.presort_operands`."""
+    return _gcf.presort_operands(probs, values, gids, num_freq)
+
+
 def group_logcf(probs: jnp.ndarray, values: jnp.ndarray, gids: jnp.ndarray,
                 num_groups: int, num_freq: int, *, freq_lo: int = 0,
-                freq_cnt: int | None = None, use_kernel: bool | None = None):
+                freq_cnt: int | None = None, use_kernel: bool | None = None,
+                operands=None):
     """Per-group summed log CF -> (G, F) log_abs/angle. Kernel or oracle.
 
     The kernel truncates values to int32 for its exact integer-phase
     arithmetic, so the auto guard additionally requires an integer-typed
     values array; callers that know their float column is integral (e.g.
     the UDA layer, which tracks source dtypes) pass ``use_kernel=True``.
+    ``operands`` (from :func:`presort_group_operands`) skip the kernel's
+    per-call sort/prep; the oracle path ignores them.
     """
     if use_kernel is None:
         use_kernel = (probs.shape[0] >= MIN_KERNEL_TUPLES
@@ -54,7 +65,7 @@ def group_logcf(probs: jnp.ndarray, values: jnp.ndarray, gids: jnp.ndarray,
     if use_kernel:
         return _gcf.group_logcf(probs, values, gids, num_groups=num_groups,
                                 num_freq=num_freq, freq_lo=freq_lo,
-                                freq_cnt=freq_cnt)
+                                freq_cnt=freq_cnt, operands=operands)
     return ref.group_logcf_ref(probs, values, gids, num_groups, num_freq,
                                freq_lo, freq_cnt)
 

@@ -74,6 +74,13 @@ def _logcf_kernel(p_ref, a_ref, a2_ref, la_ref, an_ref, *,
     an_ref[...] += an.sum(axis=1)[None, :]
 
 
+def phase_shift(num_freq: int) -> int:
+    """The static split-modmult shift S for an N-point grid (k = k_hi*2^S +
+    k_lo; see module docstring) — shared so callers holding precomputed
+    operands recover the same S without re-running the prep."""
+    return max(1, (num_freq - 1).bit_length() // 2 + 1)
+
+
 def split_modmult_operands(values: jnp.ndarray, num_freq: int):
     """Exact int32 phase operands shared by the CF kernels (this module and
     :mod:`repro.kernels.group_cf`): reduce ``values`` mod N in the SOURCE
@@ -88,7 +95,7 @@ def split_modmult_operands(values: jnp.ndarray, num_freq: int):
     n = num_freq
     # int32 split-modmult exactness bound (see module docstring).
     assert n <= 1 << 20, f"num_freq {n} > 2^20 overflows the exact phase"
-    shift = max(1, (n - 1).bit_length() // 2 + 1)
+    shift = phase_shift(n)
     v = jnp.asarray(values)
     if jnp.issubdtype(v.dtype, jnp.integer) or v.dtype == jnp.bool_:
         v = v % n

@@ -88,9 +88,10 @@ def mesh_equiv():
     subprocess exposes `mesh`, `tpch`, every plan Node and `compile_plan`.
     """
     def check(setup: str, devices: int = 2) -> str:
+        # setup first so its own __DEVICES__ occurrences resolve too
         script = (_MESH_EQUIV_TEMPLATE
-                  .replace("__DEVICES__", str(devices))
-                  .replace("__SETUP__", setup))
+                  .replace("__SETUP__", setup)
+                  .replace("__DEVICES__", str(devices)))
         out = run_sub(script, devices=devices)
         assert "BITEQ OK" in out
         return out

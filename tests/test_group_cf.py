@@ -303,3 +303,63 @@ for got in (compile_plan(plan, mesh)(tables),
 print("OK")
 """)
     assert "OK" in out
+
+
+def test_presorted_operands_bit_equal():
+    """group_logcf with hoisted presort_operands == the self-sorting call,
+    bit for bit, across frequency slabs (the exact-CF slab loop reuses ONE
+    prep for every slab)."""
+    import numpy as np
+    from repro.kernels import group_cf, ops as kops
+    r = np.random.default_rng(0)
+    n, G, F = 640, 24, 96
+    p = jnp.asarray(r.uniform(0.01, 0.99, n), jnp.float32)
+    v = jnp.asarray(r.integers(0, 4, n), jnp.int32)
+    g = jnp.asarray(r.integers(0, G, n), jnp.int32)
+    operands = group_cf.presort_operands(p, v, g, F)
+    for lo, cnt in ((0, F), (0, 32), (32, 32), (64, F - 64)):
+        la_ref, an_ref = group_cf.group_logcf(
+            p, v, g, num_groups=G, num_freq=F, freq_lo=lo, freq_cnt=cnt)
+        la, an = group_cf.group_logcf(
+            p, v, g, num_groups=G, num_freq=F, freq_lo=lo, freq_cnt=cnt,
+            operands=operands)
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(la_ref))
+        np.testing.assert_array_equal(np.asarray(an), np.asarray(an_ref))
+    # the dispatch wrapper threads operands through to the kernel too
+    la, an = kops.group_logcf(p, v, g, G, F, use_kernel=True,
+                              operands=kops.presort_group_operands(p, v, g,
+                                                                   F))
+    la_ref, an_ref = kops.group_logcf(p, v, g, G, F, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(la_ref))
+
+
+def test_cf_chunk_operands_planner_hoist():
+    """uda.cf_chunk_operands mirrors the kernel dispatch guards (None when
+    the kernel would not run) and its operands reproduce the accumulate
+    result bit for bit when forced through the kernel path."""
+    import numpy as np
+    from repro.core import uda
+    r = np.random.default_rng(1)
+    n, G, F = 1024, 8, 64
+    p = jnp.asarray(r.uniform(0.01, 0.99, n), jnp.float32)
+    v = jnp.asarray(r.integers(0, 3, n), jnp.int32)
+    g = jnp.asarray(r.integers(0, G, n), jnp.int32)
+    # CPU backend ('auto' => no Pallas dispatch): must decline the hoist
+    assert uda.cf_chunk_operands(F, p, v, g, max_groups=G,
+                                 num_chunks=4) is None \
+        or jax.default_backend() == "tpu"
+    ops4 = uda.cf_chunk_operands(F, p, v, g, max_groups=G, num_chunks=4,
+                                 kernel="pallas")
+    assert ops4 is not None and len(ops4) == 4
+    udas = {"cf": uda.SumCF(F)}
+    a = uda.accumulate_chunked(udas, p, v, g, max_groups=G, num_chunks=4,
+                               kernel="pallas")["cf"]
+    b = uda.accumulate_chunked(udas, p, v, g, max_groups=G, num_chunks=4,
+                               kernel="pallas",
+                               cf_operands={"cf": ops4})["cf"]
+    np.testing.assert_array_equal(np.asarray(a.log_abs),
+                                  np.asarray(b.log_abs))
+    np.testing.assert_array_equal(np.asarray(a.angle), np.asarray(b.angle))
+    # ragged columns (chunks don't divide) decline rather than misalign
+    assert uda.cf_chunk_operands(F, p, v, g, max_groups=G,
+                                 num_chunks=3, kernel="pallas") is None

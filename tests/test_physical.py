@@ -1,0 +1,142 @@
+"""Golden tests for the logical -> physical lowering pass: which strategy
+the planner picks at each budget, which partitioning property every node
+carries, and the static shuffle bucket sizing — all without executing a
+single table (physical.lower_plan is pure)."""
+import pytest
+
+from repro.db import physical as phys
+from repro.db.plans import (FKJoin, GroupAgg, Map, Project, ReweightGreater,
+                            Scan, Select)
+
+CAPS = {"lineitem": 4096, "orders": 1024, "customer": 256}
+
+
+def _q3ish(budget=None):
+    li = Select(Scan("lineitem"), lambda t: t["x"] > 0)
+    o = FKJoin(Scan("orders"), Scan("customer"), "o_custkey", "c_custkey",
+               ("c_mktsegment",))
+    j = FKJoin(li, o, "l_orderkey", "o_orderkey", ("o_orderdate",),
+               gather_budget=budget)
+    return GroupAgg(j, ("l_orderkey",), "l_quantity", "SUM", 512)
+
+
+def test_single_device_lowers_fully_replicated():
+    p = phys.lower_plan(_q3ish(), CAPS, n_shards=1, sharded=False)
+    assert isinstance(p, phys.MergeAgg) and p.kind == "groupagg"
+    assert isinstance(p.part, phys.Replicated)
+    pa = p.child
+    assert isinstance(pa, phys.PartialAgg)
+    j = pa.child
+    assert isinstance(j, phys.GatherJoin)       # never shuffles off-mesh
+    assert isinstance(j.part, phys.Replicated)
+    assert isinstance(j.right, phys.GatherJoin)
+
+
+def test_strategy_flips_to_shuffle_at_the_budget():
+    """The build side (orders joined customer: 1024 rows) gathers at
+    budget >= 1024 and shuffles below it; the inner customer join (256)
+    flips independently."""
+    lowered = lambda b: phys.lower_plan(
+        _q3ish(), CAPS, n_shards=4, sharded=True, join_gather_budget=b)
+    big = lowered(1024).child.child
+    assert isinstance(big, phys.GatherJoin)
+    assert isinstance(big.right, phys.GatherJoin)
+    mid = lowered(1023).child.child
+    assert isinstance(mid, phys.ShuffleJoin)
+    assert mid.build_rows == 1024
+    assert mid.exchange == phys.HashPartitioned("o_orderkey")
+    assert isinstance(mid.part, phys.RowBlocked)    # responses come home
+    assert isinstance(mid.right, phys.GatherJoin)   # customer still small
+    small = lowered(255).child.child
+    assert isinstance(small, phys.ShuffleJoin)
+    assert isinstance(small.right, phys.ShuffleJoin)
+    assert small.right.exchange == phys.HashPartitioned("c_custkey")
+
+
+def test_per_join_gather_budget_override_wins():
+    """FKJoin.gather_budget overrides the global: mixed plans gather the
+    small dim while shuffling the big one (and vice versa)."""
+    p = phys.lower_plan(_q3ish(budget=1 << 20), CAPS, n_shards=4,
+                        sharded=True, join_gather_budget=1)
+    outer = p.child.child
+    assert isinstance(outer, phys.GatherJoin)       # forced gather
+    assert isinstance(outer.right, phys.ShuffleJoin)  # global budget 1
+    p2 = phys.lower_plan(_q3ish(budget=1), CAPS, n_shards=4, sharded=True,
+                         join_gather_budget=1 << 20)
+    outer2 = p2.child.child
+    assert isinstance(outer2, phys.ShuffleJoin)     # forced shuffle
+    assert isinstance(outer2.right, phys.GatherJoin)
+
+
+def test_replicated_build_or_probe_never_shuffles():
+    """Group-level (Replicated) inputs can't hash-exchange: a join probing
+    from a ReweightGreater output stays a GatherJoin even over budget."""
+    rew = ReweightGreater(Scan("lineitem"), ("l_orderkey",), "l_quantity",
+                          "", 2048, threshold=1.0)
+    j = FKJoin(rew, Scan("orders"), "l_orderkey", "o_orderkey", ("o_x",))
+    p = phys.lower_plan(j, CAPS, n_shards=4, sharded=True,
+                        join_gather_budget=1)
+    assert isinstance(p, phys.GatherJoin)
+    assert isinstance(p.left, phys.MergeAgg) and p.left.kind == "reweight"
+    assert isinstance(p.part, phys.Replicated)      # = left's property
+
+
+def test_partitioning_properties_propagate():
+    plan = Map(Select(Scan("lineitem"), lambda t: t["x"]), "y",
+               lambda t: t["x"])
+    p = phys.lower_plan(plan, CAPS, n_shards=2, sharded=True)
+    assert isinstance(p, phys.PhysMap)
+    assert isinstance(p.part, phys.RowBlocked)
+    assert isinstance(p.child.part, phys.RowBlocked)
+    assert isinstance(p.child.child.part, phys.RowBlocked)
+
+
+def test_agg_lowering_pairs_partial_and_merge():
+    proj = Project(Scan("orders"), ("o_custkey",), 64)
+    p = phys.lower_plan(proj, CAPS, n_shards=2, sharded=True)
+    assert isinstance(p, phys.MergeAgg) and p.kind == "project"
+    assert isinstance(p.child, phys.PartialAgg)
+    assert p.child.specs == () and p.child.max_groups == 64
+    assert isinstance(p.child.part, phys.RowBlocked)
+
+    agg = GroupAgg(Scan("orders"), ("o_custkey",), "o_totalprice", "SUM",
+                   128, "exact", num_freq=256,
+                   extra=(("cnt", "", "COUNT", "normal"),))
+    p = phys.lower_plan(agg, CAPS, n_shards=2, sharded=True)
+    assert p.child.specs == (("exact", "o_totalprice", "SUM", "exact"),
+                             ("cnt", "", "COUNT", "normal"))
+    assert p.child.num_freq == 256
+
+
+def test_lowering_validates_spec_names():
+    bad = GroupAgg(Scan("orders"), ("o_custkey",), "o_totalprice", "SUM",
+                   128, extra=(("valid", "", "COUNT", "normal"),))
+    with pytest.raises(ValueError, match="unique and avoid"):
+        phys.lower_plan(bad, CAPS)
+    bad2 = ReweightGreater(Scan("orders"), ("o_custkey",), "o_totalprice",
+                           "", 128)
+    with pytest.raises(ValueError, match="threshold"):
+        phys.lower_plan(bad2, CAPS)
+
+
+def test_bucket_capacity_bounds():
+    """slack x uniform share, floored at 1, capped at the sender's local
+    rows (where overflow becomes impossible)."""
+    assert phys.bucket_capacity(1024, 4, 4.0) == 1024   # slack >= shards
+    assert phys.bucket_capacity(1024, 8, 4.0) == 512
+    assert phys.bucket_capacity(1024, 8, 1.0) == 128
+    assert phys.bucket_capacity(3, 8, 1.0) == 1         # floor
+    sj = phys.lower_plan(
+        FKJoin(Scan("lineitem"), Scan("orders"), "a", "b", ()), CAPS,
+        n_shards=8, sharded=True, join_gather_budget=1, shuffle_slack=2.0)
+    assert sj.build_bucket == phys.bucket_capacity(1024 // 8, 8, 2.0)
+    assert sj.probe_bucket == phys.bucket_capacity(4096 // 8, 8, 2.0)
+
+
+def test_explain_renders_every_node():
+    text = phys.explain(phys.lower_plan(
+        _q3ish(), CAPS, n_shards=4, sharded=True, join_gather_budget=1))
+    for token in ("MergeAgg[groupagg]", "PartialAgg", "ShuffleJoin",
+                  "HashPartitioned(o_orderkey)", "ShardScan(lineitem",
+                  "RowBlocked", "Replicated"):
+        assert token in text, (token, text)

@@ -1,6 +1,6 @@
 """The sharded relational frontend's protocol pieces vs brute force.
 
-Three layers:
+Four layers:
   * the distributed group-id protocol (local unique -> merge of per-shard
     code tables -> searchsorted) is pure integer math, so it is fuzzed
     in-process against the single-pass `jnp.unique` oracle — under
@@ -8,8 +8,14 @@ Three layers:
     test_pgf.py pattern);
   * fk_join contract enforcement (duplicate build keys, nonnegative group
     keys) and possible-worlds parity, single-device;
-  * subprocess tests on a real 2-device mesh: sharded fk_join
-    possible-worlds parity and the replicated build-side budget fallback.
+  * the shuffle-partitioned join protocol (operators.bucket_slots /
+    scatter_to_buckets / take_from_buckets + the per-owner fk_join), also
+    pure math once the all_to_all is emulated host-side: fuzzed against
+    the global fk_join oracle and the possible-worlds enumeration,
+    duplicate-key rejection and bucket-overflow accounting included;
+  * subprocess tests on real 2- and 3-device meshes: sharded fk_join
+    possible-worlds parity, gather- and shuffle-strategy bit-equality,
+    and the overflow NaN poisoning.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -112,12 +118,19 @@ def test_compile_plan_surfaces_negative_key_error():
         compile_plan(plan)({"t": t})
 
 
-def test_compile_plan_rejects_bad_chunk_grids():
-    t = Table.from_columns({"g": jnp.asarray([0, 1]),
-                            "v": jnp.asarray([1, 1])})
+def test_compile_plan_accepts_any_chunk_grid():
+    """Non-power-of-two canonical chunk grids are legal now (the pow2-base
+    + sequential-tail tree of uda.tree_fold covers any chunk count); only
+    non-positive grids are rejected."""
+    t = Table.from_columns({"g": jnp.asarray([0, 1, 0, 1, 0]),
+                            "v": jnp.asarray([1, 2, 3, 4, 5])},
+                           prob=jnp.asarray([.5, .4, .3, .2, .1]))
     plan = GroupAgg(Scan("t"), ("g",), "v", "SUM", 4)
-    with pytest.raises(ValueError, match="power of two"):
-        compile_plan(plan, canonical_chunks=6)
+    mu8, _ = compile_plan(plan, canonical_chunks=8)({"t": t})["sum"]
+    mu6, _ = compile_plan(plan, canonical_chunks=6)({"t": t})["sum"]
+    np.testing.assert_allclose(np.asarray(mu8), np.asarray(mu6), rtol=1e-12)
+    with pytest.raises(ValueError, match="positive"):
+        compile_plan(plan, canonical_chunks=0)
 
 
 # ---------------------------------------------------- fk_join semantics
@@ -193,10 +206,12 @@ def test_fk_join_possible_worlds_parity(rng):
 def test_fk_join_sharded_worlds_parity(mesh_equiv):
     """FKJoin through the sharded frontend: bit-equal to the single-device
     compile, possible-worlds parity for the carried probabilities, and the
-    same answers when the build side falls back to replicated under a
-    tiny join_gather_budget."""
+    same answers when a tiny join_gather_budget lowers the join to the
+    shuffle-partitioned strategy (NO replicated fallback exists anymore —
+    asserted against the physical plan)."""
     mesh_equiv("""
 import numpy as np
+from repro.db import physical as phys
 rng = np.random.default_rng(7)
 left = Table.from_columns(
     {"k": jnp.asarray([0, 1, 2, 3, 1, 0, 2, 1]),
@@ -210,10 +225,13 @@ right = Table.from_columns(
     valid=jnp.asarray([True, True, True, False]))
 tables = {"L": left, "R": right}
 plan = FKJoin(Scan("L"), Scan("R"), "k", "k", ("pay",))
+proot = phys.lower_plan(plan, {"L": 8, "R": 8}, n_shards=__DEVICES__,
+                        sharded=True, join_gather_budget=1)
+assert isinstance(proot, phys.ShuffleJoin), phys.explain(proot)
 ref = compile_plan(plan, None)(tables)
 got = compile_plan(plan, mesh)(tables)
-repl = compile_plan(plan, mesh, join_gather_budget=1)(tables)
-pairs = [("gathered", ref, got), ("replicated-fallback", ref, repl)]
+shuf = compile_plan(plan, mesh, join_gather_budget=1)(tables)
+pairs = [("gathered", ref, got), ("shuffled", ref, shuf)]
 
 # possible-worlds parity of the sharded output (padded rows are invalid)
 lp, rp = np.asarray(left.prob), np.asarray(right.prob)
@@ -264,3 +282,214 @@ ids, codes, gv = shard_map(f, mesh=mesh, in_specs=(P("data"),),
                            out_specs=P(), check_vma=False)(t)
 pairs = [("group_ids", (ids_ref, codes_ref, gv_ref), (ids, codes, gv))]
 """)
+
+
+# ------------------------------------------- shuffle-exchange protocol
+def _emulated_shuffle_fk_join(left, right, lk, rk, right_cols, n_shards,
+                              probe_cap, build_cap):
+    """Host-side emulation of dist.shuffle_fk_join: same per-shard bucket
+    math and per-owner fk_join, with the two all_to_alls replaced by a
+    numpy transpose of the (sender, owner) bucket grid.  Returns the
+    reassembled global output Table pieces + the total overflow count."""
+    nl, nr = left.capacity, right.capacity
+    assert nl % n_shards == 0 and nr % n_shards == 0
+    bl, br = nl // n_shards, nr // n_shards
+
+    def shard(t, s, n):
+        sl = slice(s * n, (s + 1) * n)
+        return Table({k: v[sl] for k, v in t.columns.items()},
+                     t.prob[sl], t.valid[sl])
+
+    # per-shard send buckets (build side and probe requests)
+    bsend, bmask, psend, pmask, slots, sents = [], [], [], [], [], []
+    overflow = 0
+    for s in range(n_shards):
+        rt = shard(right, s, br)
+        key = rt[rk].astype(jnp.int32)
+        slot, sent, over = ops.bucket_slots(key % n_shards, rt.valid,
+                                            n_shards, build_cap)
+        overflow += int(over)
+        cols = {"_key": key, "_prob": rt.prob,
+                **{c: rt[c] for c in right_cols}}
+        bsend.append(ops.scatter_to_buckets(cols, slot,
+                                            n_shards * build_cap))
+        bmask.append(np.asarray(jnp.zeros((n_shards * build_cap,), bool)
+                                .at[slot].set(sent, mode="drop")))
+        lt = shard(left, s, bl)
+        lkey = lt[lk].astype(jnp.int32)
+        slot, sent, over = ops.bucket_slots(lkey % n_shards, lt.valid,
+                                            n_shards, probe_cap)
+        overflow += int(over)
+        psend.append(ops.scatter_to_buckets({"_key": lkey}, slot,
+                                            n_shards * probe_cap))
+        pmask.append(np.asarray(jnp.zeros((n_shards * probe_cap,), bool)
+                                .at[slot].set(sent, mode="drop")))
+        slots.append(slot)
+        sents.append(sent)
+
+    def transpose(bufs, cap):   # the all_to_all: out_d[s] = in_s[d]
+        return [{k: np.concatenate([np.asarray(b[k]).reshape(
+            n_shards, cap, -1)[d, :, 0] if np.asarray(b[k]).ndim == 1
+            else np.asarray(b[k])[d * cap:(d + 1) * cap]
+            for b in bufs]) for k in bufs[0]} for d in range(n_shards)]
+
+    brecv = transpose(bsend, build_cap)
+    bmrecv = [np.concatenate([m.reshape(n_shards, build_cap)[d]
+                              for m in bmask]) for d in range(n_shards)]
+    precv = transpose(psend, probe_cap)
+    pmrecv = [np.concatenate([m.reshape(n_shards, probe_cap)[d]
+                              for m in pmask]) for d in range(n_shards)]
+
+    # per-owner local match, responses transposed home
+    resp = []
+    for d in range(n_shards):
+        build = Table({rk: jnp.asarray(brecv[d]["_key"]),
+                       **{c: jnp.asarray(brecv[d][c]) for c in right_cols}},
+                      jnp.asarray(brecv[d]["_prob"]),
+                      jnp.asarray(bmrecv[d]))
+        req = Table({lk: jnp.asarray(precv[d]["_key"])},
+                    jnp.ones((n_shards * probe_cap,), left.prob.dtype),
+                    jnp.asarray(pmrecv[d]))
+        m = ops.fk_join(req, build, lk, rk, right_cols)
+        resp.append({"_p": m.prob, "_hit": m.valid,
+                     **{c: m[c] for c in right_cols}})
+    back = transpose(resp, probe_cap)
+
+    # per-origin reassembly into the original row positions
+    probs, valids, cols_out = [], [], {c: [] for c in right_cols}
+    for s in range(n_shards):
+        got = ops.take_from_buckets(
+            {k: jnp.asarray(v) for k, v in back[s].items()},
+            slots[s], sents[s])
+        lt = shard(left, s, bl)
+        probs.append(np.asarray(lt.prob * got["_p"]))
+        valids.append(np.asarray(lt.valid & got["_hit"]))
+        for c in right_cols:
+            cols_out[c].append(np.asarray(got[c]))
+    return (np.concatenate(probs), np.concatenate(valids),
+            {c: np.concatenate(v) for c, v in cols_out.items()}, overflow)
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("n_shards", [2, 3, 4])
+def test_shuffle_join_protocol_matches_fk_join_oracle(seed, n_shards):
+    """The emulated shuffle protocol == the global fk_join, bit for bit
+    (probabilities, validity, carried columns including the deterministic
+    zero-fill of miss rows), at full bucket capacity (no overflow)."""
+    r = np.random.default_rng(seed)
+    nl, nr = 6 * n_shards, 2 * n_shards
+    left = Table.from_columns(
+        {"k": jnp.asarray(r.integers(0, nr + 2, nl)),
+         "lv": jnp.asarray(r.integers(0, 50, nl))},
+        prob=jnp.asarray(r.uniform(0.05, 0.95, nl)),
+        valid=jnp.asarray(r.uniform(0, 1, nl) > 0.2))
+    right = Table.from_columns(
+        {"k": jnp.asarray(np.arange(nr)),
+         "pay": jnp.asarray(r.integers(10, 99, nr))},
+        prob=jnp.asarray(r.uniform(0.05, 0.95, nr)),
+        valid=jnp.asarray(r.uniform(0, 1, nr) > 0.2))
+    ref = ops.fk_join(left, right, "k", "k", ["pay"])
+    prob, valid, cols, overflow = _emulated_shuffle_fk_join(
+        left, right, "k", "k", ["pay"], n_shards,
+        probe_cap=nl // n_shards, build_cap=nr // n_shards)
+    assert overflow == 0
+    np.testing.assert_array_equal(prob, np.asarray(ref.prob))
+    np.testing.assert_array_equal(valid, np.asarray(ref.valid))
+    np.testing.assert_array_equal(cols["pay"], np.asarray(ref["pay"]))
+
+
+def test_shuffle_join_protocol_possible_worlds_parity(rng):
+    """End-to-end semantics of the shuffled join against the 2^n worlds
+    enumeration (not just against fk_join)."""
+    left, right = _tiny_join_tables(rng)
+    left = left.pad_to(6)
+    right = right.pad_to(6)
+    marg = _worlds_fk_join_marginals(left, right, "k", "k")
+    prob, valid, _, overflow = _emulated_shuffle_fk_join(
+        left, right, "k", "k", ["pay"], 3, probe_cap=2, build_cap=2)
+    assert overflow == 0
+    np.testing.assert_allclose(np.where(valid, prob, 0.0), marg, atol=1e-12)
+
+
+def test_shuffle_join_protocol_rejects_duplicate_build_keys():
+    """Duplicate valid build keys land on the same hash owner, where the
+    local fk_join's many-to-one contract check rejects them (concrete
+    data, as in eager execution)."""
+    left = Table.from_columns({"k": jnp.asarray([0, 1, 2, 3])})
+    right = Table.from_columns({"k": jnp.asarray([1, 3, 3, 2]),
+                                "pay": jnp.asarray([10, 11, 12, 13])})
+    with pytest.raises(ValueError, match="duplicate valid keys"):
+        _emulated_shuffle_fk_join(left, right, "k", "k", ["pay"], 2,
+                                  probe_cap=2, build_cap=2)
+
+
+def test_bucket_slots_overflow_accounting():
+    """Rows beyond a bucket's capacity are dropped but counted; in-range
+    ranks are dense per destination."""
+    dest = jnp.asarray([0, 0, 0, 1, 0, 1])
+    ok = jnp.asarray([True, True, True, True, True, False])
+    slot, sent, over = ops.bucket_slots(dest, ok, 2, 2)
+    assert int(over) == 2                      # 4 ok-rows to bucket 0, cap 2
+    np.testing.assert_array_equal(np.asarray(sent),
+                                  [True, True, False, True, False, False])
+    np.testing.assert_array_equal(np.asarray(slot)[np.asarray(sent)],
+                                  [0, 1, 2])   # dest*cap + rank
+    # dropped and not-ok rows park out of range (scatter mode="drop")
+    assert (np.asarray(slot)[~np.asarray(sent)] == 4).all()
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_bucket_slots_roundtrip_fuzz(seed):
+    """scatter_to_buckets o take_from_buckets is the identity on sent rows
+    (the response-routing invariant of the shuffle join)."""
+    r = np.random.default_rng(seed)
+    n, shards = int(r.integers(4, 40)), int(r.integers(2, 5))
+    cap = int(r.integers(1, 6))
+    dest = jnp.asarray(r.integers(0, shards, n))
+    ok = jnp.asarray(r.uniform(0, 1, n) > 0.25)
+    payload = jnp.asarray(r.integers(0, 1000, n))
+    slot, sent, over = ops.bucket_slots(dest, ok, shards, cap)
+    assert int(jnp.sum(sent)) + int(over) == int(jnp.sum(ok))
+    bufs = ops.scatter_to_buckets({"x": payload}, slot, shards * cap)
+    got = ops.take_from_buckets(bufs, slot, sent)["x"]
+    np.testing.assert_array_equal(np.asarray(got)[np.asarray(sent)],
+                                  np.asarray(payload)[np.asarray(sent)])
+    assert (np.asarray(got)[~np.asarray(sent)] == 0).all()
+
+
+@pytest.mark.multidevice
+def test_shuffle_join_3shard_mesh_and_overflow_poisoning():
+    """On a real 3-device mesh: the shuffle-lowered plan is bit-equal to
+    mesh=None, and shrinking the bucket slack until buckets overflow
+    poisons the join probabilities with NaN (accounted, never silently
+    wrong)."""
+    from conftest import run_sub
+    run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
+from repro.core import enable_x64
+enable_x64()
+from repro.db.plans import FKJoin, Scan, compile_plan
+from repro.db.table import Table
+mesh = make_mesh((3,), ("data",))
+rng = np.random.default_rng(5)
+# skewed: every left key hits owner 0 (key % 3 == 0)
+left = Table.from_columns(
+    {"k": jnp.asarray([0, 3, 6, 9, 0, 3, 6, 9, 0, 3, 6, 9])},
+    prob=jnp.asarray(rng.uniform(0.1, 0.9, 12)))
+right = Table.from_columns(
+    {"k": jnp.asarray([0, 3, 6, 9, 12, 15]),
+     "pay": jnp.asarray([10, 11, 12, 13, 14, 15])},
+    prob=jnp.asarray(rng.uniform(0.1, 0.9, 6)))
+tables = {"L": left, "R": right}
+plan = FKJoin(Scan("L"), Scan("R"), "k", "k", ("pay",))
+ref = compile_plan(plan, None)(tables)
+ok = compile_plan(plan, mesh, join_gather_budget=1)(tables)
+for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(ok)):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+# slack 1.0 -> bucket capacity ceil(local/3) < the skewed demand
+bad = compile_plan(plan, mesh, join_gather_budget=1,
+                   shuffle_slack=1.0)(tables)
+assert np.isnan(np.asarray(bad.prob)).all(), np.asarray(bad.prob)
+print("OK")
+""", devices=3)

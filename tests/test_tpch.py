@@ -105,6 +105,26 @@ pairs = [(mode, fn(db, mode), fn(db, mode, mesh=mesh))
 """)
 
 
+@pytest.mark.multidevice
+@pytest.mark.parametrize("devices", [2, 3, 4])
+def test_all_queries_mesh_bit_equal_any_shard_count(mesh_equiv, devices):
+    """The determinism contract on 2-, 3- and 4-shard meshes for ALL five
+    TPC-H queries (aggregate mode), both with the default gather-join
+    lowering and with a tiny join_gather_budget that lowers every
+    over-budget FK join to the shuffle-partitioned strategy — one
+    subprocess per shard count."""
+    mesh_equiv("""
+db = tpch.generate(n_orders=48, seed=3)
+shuffle = dict(join_gather_budget=4)
+pairs = []
+for qname, fn in sorted(tpch.QUERIES.items()):
+    ref = fn(db, "aggregate")
+    pairs.append((qname, ref, fn(db, "aggregate", mesh=mesh)))
+    pairs.append((qname + "/shuffle", ref,
+                  fn(db, "aggregate", mesh=mesh, plan_opts=shuffle)))
+""", devices=devices)
+
+
 def test_deterministic_db_gives_deterministic_answers():
     """p = 1 everywhere: aggregate mode's mean == deterministic answer,
     variance == 0 (the gamma-embedding sanity check, §IV-E)."""
