@@ -9,11 +9,14 @@ It also measures the grouped-exact planner path against a per-group scalar
 ``logcf`` loop (the pre-kernel execution strategy) at G >= 64, the
 sharded relational frontend (the full shard_map pipeline on a 1-device
 ('data',) mesh) so the distributed scan/join/group-id path is gated too,
-and the gather- vs shuffle-lowered FK join (a per-join gather_budget
-forces the ShuffleJoin strategy).  The baseline JSON additionally records
-the static replicated-vs-sharded peak rows/device accounting of the
-frontend AND the gather-vs-shuffle build-side rows/device of a join whose
-build side exceeds the gather budget (the ShuffleJoin memory contract).
+the gather- vs shuffle-lowered FK join (a per-join gather_budget forces
+the hash-exchange strategies), and the fused CoPartitionedJoin +
+PartitionedAgg pipeline vs shuffle + gather-home on the Q3-shaped
+workload (with the shuffle_back round-trips saved, gated structurally).
+The baseline JSON additionally records the static replicated-vs-sharded
+peak rows/device accounting of the frontend AND the gather-vs-shuffle
+build-side rows/device of a join whose build side exceeds the gather
+budget (the ShuffleJoin memory contract).
 
     PYTHONPATH=src python benchmarks/smoke.py [--mesh] [--check] [--update]
 
@@ -216,10 +219,46 @@ def bench_shuffle_join(n_orders: int = 1000, repeat: int = 5):
                    ("o_totalprice",), gather_budget=budget)
         plan = GroupAgg(j, ("l_orderkey",), "l_quantity", "SUM", 256,
                         "normal")
-        fn = jax.jit(compile_plan(plan, mesh))
+        # copartition=False pins the ShuffleJoin + shuffle-home strategy
+        # (the GROUP BY keys on the join key, so the cost model would
+        # otherwise fuse it — bench_copartitioned_agg measures that).
+        fn = jax.jit(compile_plan(plan, mesh, copartition=False))
         dt = _time(fn, (db.tables(),), repeat)
         rows.append((f"smoke/shuffle_join/{tag}/mesh1", dt * 1e6,
                      f"n_orders={n_orders}"))
+    return rows
+
+
+def bench_copartitioned_agg(n_orders: int = 1000, repeat: int = 5):
+    """The fused shuffle -> aggregate pipeline vs shuffle + gather-home on
+    the Q3-shaped workload (GROUP BY on the FK-join key, build side over
+    the gather budget): same logical plan, compiled once with the fused
+    CoPartitionedJoin + PartitionedAgg lowering and once with
+    ``copartition=False`` (ShuffleJoin + shuffle_back + PartialAgg).
+    Alongside the wall times, counts the shuffle_back round-trips each
+    strategy traces — the fused pipeline must save at least one, and
+    ``--check`` gates both the saving and fused-beats-shuffle."""
+    from repro.compat import make_mesh
+    from repro.db import distributed as dist
+    from repro.db.plans import FKJoin
+
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    mesh = make_mesh((1,), ("data",))
+    li = Select(Scan("lineitem"), lambda t: t["l_shipdate"] > tpch.DAY0_1995)
+    j = FKJoin(li, Scan("orders"), "l_orderkey", "o_orderkey",
+               ("o_totalprice",), gather_budget=1)
+    plan = GroupAgg(j, ("l_orderkey",), "l_quantity", "SUM", 256, "normal")
+    rows, back = [], {}
+    for tag, copart in (("fused", True), ("shuffle_home", False)):
+        fn = jax.jit(compile_plan(plan, mesh, copartition=copart))
+        dist.reset_collective_counts()
+        dt = _time(fn, (db.tables(),), repeat)   # warm call traces once
+        back[tag] = dist.COLLECTIVE_COUNTS.get("shuffle_back", 0)
+        rows.append((f"smoke/copartitioned_agg/{tag}/mesh1", dt * 1e6,
+                     f"n_orders={n_orders}"))
+    rows.append(("smoke/copartitioned_agg/roundtrips_saved",
+                 back["shuffle_home"] - back["fused"],
+                 f"shuffle_back {back['shuffle_home']}->{back['fused']}"))
     return rows
 
 
@@ -236,7 +275,25 @@ def _check(rows) -> int:
         print(f"FAIL {name}: in baseline but not measured "
               "(renamed or broken method? run --update to drop it)")
         failures += 1              # not a silently disarmed gate
+    values = {name: value for name, value, _ in rows}
+    saved = values.get("smoke/copartitioned_agg/roundtrips_saved")
+    if saved is not None:
+        base_saved = base_all.get("copartitioned_roundtrips_saved", 1)
+        if saved < base_saved:
+            print(f"FAIL copartitioned_agg: {saved} shuffle_back "
+                  f"round-trips saved < baseline {base_saved} (the fused "
+                  "pipeline is paying the trip home again)")
+            failures += 1
+        fused = values.get("smoke/copartitioned_agg/fused/mesh1")
+        home = values.get("smoke/copartitioned_agg/shuffle_home/mesh1")
+        if fused is not None and home is not None and fused > home * TOLERANCE:
+            print(f"FAIL copartitioned_agg: fused {fused:.1f}us > "
+                  f"{TOLERANCE} x shuffle_home {home:.1f}us (the fused "
+                  "pipeline stopped beating shuffle + gather-home)")
+            failures += 1
     for name, value, _ in rows:
+        if name == "smoke/copartitioned_agg/roundtrips_saved":
+            continue                     # structural row, gated above
         if name.startswith("smoke/exact_speedup"):
             if value < MIN_EXACT_SPEEDUP:
                 print(f"FAIL {name}: speedup {value:.2f}x < "
@@ -283,12 +340,17 @@ def _check(rows) -> int:
 
 
 def _update(rows):
+    skip = ("smoke/exact_speedup", "smoke/copartitioned_agg/roundtrips")
     recorded = {name: us for name, us, _ in rows
-                if not name.startswith("smoke/exact_speedup")}
+                if not name.startswith(skip)}
+    saved = {name: v for name, v, _ in rows
+             if name == "smoke/copartitioned_agg/roundtrips_saved"}
     with open(BASELINE_PATH, "w") as f:
         json.dump({"tolerance": TOLERANCE, "repeat": "best-of",
                    "peak_rows_per_device": frontend_layout(),
                    "shuffle_join_rows_per_device": shuffle_layout(),
+                   "copartitioned_roundtrips_saved":
+                       int(min(saved.values())) if saved else 1,
                    "rows": recorded}, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"wrote {BASELINE_PATH} ({len(recorded)} rows)")
@@ -298,6 +360,7 @@ def main() -> int:
     rows = bench()
     rows += bench_sharded_frontend()
     rows += bench_shuffle_join()
+    rows += bench_copartitioned_agg()
     rows += bench_exact_speedup()
     if "--mesh" in sys.argv and len(jax.devices()) > 1:
         from repro.launch.mesh import make_host_mesh

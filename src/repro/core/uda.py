@@ -90,6 +90,9 @@ class UDA:
     #: streaming UDAs accumulate block-by-block inside the canonical scan;
     #: non-streaming ones (MinMax) consume the full column at once.
     streaming: bool = True
+    #: additive states merge by elementwise add (psum-able inside
+    #: shard_map); non-additive ones (MinMax) must gather-fold instead.
+    additive: bool = True
     #: a scalar UDA ignores group ids and keeps one global group (e.g. the
     #: exact global CF of the canonical query step).
     scalar: bool = False
@@ -319,6 +322,7 @@ class MinMax(UDA):
     """
 
     streaming = False
+    additive = False
 
     def __init__(self, kappa: int = 64, sign: float = 1.0):
         self.kappa = int(kappa)
@@ -333,18 +337,22 @@ class MinMax(UDA):
             jnp.zeros((max_groups,), dtype))
 
     def accumulate_full(self, state, probs, values, gids, max_groups):
-        dtype = state.values.dtype
+        """``state=None`` means "fresh init" (the canonical loop's hint):
+        the constructed chunk buffer is returned directly."""
+        dtype = probs.dtype if state is None else state.values.dtype
         p = jnp.asarray(probs, dtype)
         v = jnp.asarray(values, dtype) * self.sign
         v = jnp.where(p > 0, v, jnp.inf)     # masked / p=0 tuples never matter
         logq = jnp.log1p(-p)
         n = p.shape[0]
-        # Lexsort rows by (group, folded value) via two stable argsorts — a
-        # combined float key would lose value bits to ULP at large group ids.
-        ord1 = jnp.argsort(v, stable=True)
-        ord2 = jnp.argsort(gids[ord1], stable=True)
-        order = ord1[ord2]
-        gs, vs, lqs = gids[order], v[order], logq[order]
+        # Lexsort rows by (group, folded value): ONE stable two-key
+        # lax.sort carrying the payload column — the same permutation the
+        # old argsort(v)-then-argsort(gids) pair produced (stable lexsort
+        # is unique), without the second sort and the three gathers.  A
+        # combined float key would lose value bits to ULP at large group
+        # ids, hence two keys.
+        gs, vs, lqs = jax.lax.sort((gids, v, logq), dimension=0,
+                                   is_stable=True, num_keys=2)
 
         # Fold duplicate (group, value) runs.
         head = jnp.concatenate([jnp.ones((1,), bool),
@@ -373,23 +381,30 @@ class MinMax(UDA):
         chunk_tail = jnp.zeros((max_groups,), dtype) \
             .at[run_g].add(jnp.where(evicted, run_lq, 0.0))
         chunk_total = jnp.zeros((max_groups,), dtype).at[gids].add(logq)
-        return self.merge(state, MinMaxState(chunk_v, chunk_lq, chunk_tail,
-                                             chunk_total))
+        chunk = MinMaxState(chunk_v, chunk_lq, chunk_tail, chunk_total)
+        # A fresh-init state needs no merge: the chunk buffer already
+        # satisfies the invariant (sorted, distinct, inf-padded) and
+        # merge(init, x) == x bitwise — the canonical chunked path calls
+        # this once per chunk with a fresh state, so skipping the merge
+        # halves the chunked MinMax merge count.
+        return chunk if state is None else self.merge(state, chunk)
 
     def merge(self, a: MinMaxState, b: MinMaxState) -> MinMaxState:
-        """Bitonic two-way merge + top-k truncation, sort- and
-        scatter-free: both inputs keep their rows sorted (the state
+        """Bitonic two-way merge + in-network run fold + top-k truncation,
+        sort-free: both inputs keep their rows sorted (the state
         invariant), so ascending(a) ++ descending(b) is bitonic and
         log2(2k) elementwise compare-exchange stages finish the merge —
-        XLA CPU row sorts and scatters serialise and were the hot spot of
-        the chunked/tree merge path.
+        XLA CPU row sorts serialise and were the hot spot of the
+        chunked/tree merge path.
 
-        Duplicate (group, value) entries may occupy several buffer slots
-        after a merge; that is exact: finalize's per-slot masses telescope
-        (exp(prefix) (1-Q_a) + exp(prefix) Q_a (1-Q_b) == the folded-run
-        mass), and consumers aggregate run lists by value.  Only the
-        §V-B.2 truncation tail can get looser under heavy duplication —
-        split slots compete for the kappa capacity."""
+        A value present in both inputs lands in two adjacent slots of the
+        sorted 2k buffer; the run fold collapses each equal-value run
+        into its head slot (log_none sums — the masses telescope exactly:
+        exp(prefix) (1-Q_a) + exp(prefix) Q_a (1-Q_b) == the folded-run
+        mass) BEFORE the top-k truncation, so duplicates never compete
+        for the kappa capacity and the §V-B.2 truncation tail stays tight
+        under heavy duplication — at one segment-sum on top of the
+        bitonic stages."""
         k = self.kappa
         pw = 1 << (k - 1).bit_length()       # bitonic needs a 2^m half
         inf_pad = ((0, 0), (0, pw - k))
@@ -412,8 +427,45 @@ class MinMax(UDA):
                             jnp.where(swap, lr[:, :, 0], lr[:, :, 1])],
                            axis=2).reshape(g, -1)
             s //= 2
-        evicted = jnp.where(jnp.isfinite(v[:, k:]), lq[:, k:], 0.0)
-        return MinMaxState(v[:, :k], lq[:, :k],
+        # Run fold, scatter-free (XLA CPU scatters serialise): both inputs
+        # hold DISTINCT values (the state invariant this fold maintains),
+        # so an equal-value run in the sorted buffer spans at most TWO
+        # slots and its log_none total is one pairwise add; heads then
+        # compact to their run index — dense, still sorted — with a
+        # batched binary search + gather.  (Empty +inf slots form one
+        # trailing run; their log_none is 0, so any fold of it is exact.)
+        w = v.shape[1]
+        finite = jnp.isfinite(v)
+        dup = jnp.concatenate([jnp.zeros_like(finite[:, :1]),
+                               v[:, 1:] == v[:, :-1]], axis=1)
+        head = ~dup
+        absorb = jnp.concatenate([dup[:, 1:],
+                                  jnp.zeros_like(dup[:, :1])], axis=1)
+        lq_next = jnp.concatenate([lq[:, 1:],
+                                   jnp.zeros_like(lq[:, :1])], axis=1)
+        tot = lq + jnp.where(absorb, lq_next, 0.0)   # per-run log_none
+        run = jnp.cumsum(head, axis=1) - 1           # run index per slot
+        evicted = jnp.where(head & finite & (run >= k), tot, 0.0)
+        # Branchless batched lower_bound over the k KEPT output slots only
+        # (truncation discards the rest): src[g, j] = head slot of run j
+        # (first position with run >= j).  XLA CPU gathers dominate this
+        # epilogue, so: probe width k not 2k, one complex gather fetches
+        # (v, tot) together, and run-existence is a slice compare instead
+        # of another gather.
+        idx = jnp.arange(k)
+        pos = jnp.full((g, k), -1, jnp.int32)        # last slot with run < j
+        step = w
+        while step > 1:
+            step //= 2
+            cand = jnp.minimum(pos + step, w - 1)
+            less = jnp.take_along_axis(run, cand, axis=1) < idx[None, :]
+            pos = jnp.where(less, cand, pos)
+        src = jnp.clip(pos + 1, 0, w - 1)            # head slot of run j
+        ok = idx[None, :] <= run[:, -1:]             # run j exists
+        got = jnp.take_along_axis(jax.lax.complex(v, tot), src, axis=1)
+        v = jnp.where(ok, got.real, jnp.inf)
+        lq = jnp.where(ok, got.imag, 0.0)
+        return MinMaxState(v, lq,
                            a.tail_log_none + b.tail_log_none + evicted.sum(1),
                            a.total_log_none + b.total_log_none)
 
@@ -603,9 +655,13 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
     if states is None:
         states = {}
     states = dict(states)
-    for name, u in udas.items():
-        if name not in states:
-            states[name] = u.init(_groups_of(u, max_groups), dtype)
+    fresh = {name for name in udas if name not in states}
+    for name in fresh:
+        # Fresh non-streaming states stay unmaterialized: accumulate_full
+        # receives None and skips the no-op merge with the init buffer.
+        if udas[name].streaming:
+            states[name] = udas[name].init(
+                _groups_of(udas[name], max_groups), dtype)
 
     use_pallas = _use_pallas(kernel)
 
@@ -621,9 +677,11 @@ def accumulate(udas, probs, values=None, gids=None, *, max_groups: int = 1,
 
     for name, u in full_udas.items():
         g_u = jnp.zeros_like(gids_full) if u.scalar else gids_full
-        states[name] = u.accumulate_full(states[name], probs,
-                                         val_arrays[val_index[name]],
-                                         g_u, _groups_of(u, max_groups))
+        # A fresh init state is passed as None so non-streaming UDAs can
+        # skip the no-op merge with it (MinMax: merge(init, x) == x).
+        states[name] = u.accumulate_full(
+            None if name in fresh else states[name], probs,
+            val_arrays[val_index[name]], g_u, _groups_of(u, max_groups))
     for name, u in kernel_udas.items():
         # CF kernels take the pre-cast (integer) source; the cumulant
         # kernel computes float value powers and takes the cast column.

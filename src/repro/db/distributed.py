@@ -38,6 +38,20 @@ uses the collective helpers below instead of a per-node step:
                         the hash bucket), responses shuffled home — peak
                         build rows/device O(build/shards), output
                         bit-identical to the gathered join
+    copartitioned_fk_join   the CoPartitionedJoin executor: the same two
+                        exchanges, but probe rows carry (p, canonical
+                        chunk id, aggregation columns) and matched rows
+                        STAY at their key's owner — no shuffle_back
+                        round-trip; output is HashPartitioned(left_key)
+    repartition_by_key  hash-exchange aggregation inputs to their
+                        group-key owner (the no-join feed of
+                        PartitionedAgg)
+    partitioned_merge   the HashPartitioned Merge: every group lives
+                        wholly at one owner, so each owner finishes the
+                        canonical chunk tree_fold LOCALLY and ONE psum
+                        combines the folded additive states (exact zeros
+                        elsewhere => bit-identical to allgather_merge);
+                        MinMax states gather-fold across owners
     group_ids_sharded   two-phase distributed group-id assignment —
                         per-shard jnp.unique, all-gather + merge of the
                         per-shard code tables, searchsorted against the
@@ -70,6 +84,32 @@ from .table import Table
 def _tuple_axes(mesh: Mesh, data_axes: Sequence[str]) -> tuple:
     return tuple(a for a in ("pod",) + tuple(data_axes)
                  if a in mesh.axis_names)
+
+
+#: trace-time counts of the collective exchanges issued by the sharded
+#: frontend, keyed by kind ("shuffle", "shuffle_back", "gather_table",
+#: "merge_psum", "merge_gather").  Incremented while a plan traces (once
+#: per eager execution, once per jit trace), so tests and benchmarks can
+#: assert structural properties — e.g. that a co-partitioned pipeline
+#: issues ZERO shuffle_back round-trips.
+COLLECTIVE_COUNTS: dict = {}
+
+
+def reset_collective_counts() -> None:
+    COLLECTIVE_COUNTS.clear()
+
+
+def _count(kind: str) -> None:
+    COLLECTIVE_COUNTS[kind] = COLLECTIVE_COUNTS.get(kind, 0) + 1
+
+
+def data_rank(axis_names):
+    """Linearized shard rank over the data axes (row-major — the order of
+    the contiguous row partitioning).  Call inside shard_map."""
+    r = jnp.zeros((), jnp.int32)
+    for a in tuple(axis_names):
+        r = r * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return r
 
 
 def make_uda_step(mesh: Mesh, uda_factory: Callable[[int, object], dict], *,
@@ -144,6 +184,7 @@ def gather_table(t: Table, axis_names) -> Table:
     original global row order, so the gathered table is bit-identical to
     the unsharded one."""
     axis_names = tuple(axis_names)
+    _count("gather_table")
     g = lambda x: jax.lax.all_gather(x, axis_names, axis=0, tiled=True)
     return Table({k: g(v) for k, v in t.columns.items()},
                  g(t.prob), g(t.valid), phys.Replicated())
@@ -171,12 +212,14 @@ def shuffle_by_key(keys, cols: dict, axis_names, *, n_shards: int,
         overflow   local count of ok-rows dropped for capacity
     """
     axis_names = tuple(axis_names)
+    _count("shuffle")
     ok = jnp.ones(keys.shape, bool) if valid is None else valid
     dest = jnp.mod(keys.astype(jnp.int32), n_shards)
     slot, sent, overflow = ops.bucket_slots(dest, ok, n_shards, capacity)
     size = n_shards * capacity
-    send = ops.scatter_to_buckets(cols, slot, size)
-    mask = jnp.zeros((size,), bool).at[slot].set(sent, mode="drop")
+    inv = ops.bucket_fill_index(slot, size)
+    send = ops.scatter_to_buckets(cols, slot, size, inv=inv)
+    mask = inv < keys.shape[0]          # slot filled by a sent row
     recv = {k: _all_to_all_rows(v, axis_names, n_shards, capacity)
             for k, v in send.items()}
     recv_mask = _all_to_all_rows(mask, axis_names, n_shards, capacity)
@@ -189,6 +232,7 @@ def shuffle_back(cols: dict, axis_names, n_shards: int, capacity: int):
     (n_shards, capacity) bucket layout), landing each response in the send
     slot its request came from."""
     axis_names = tuple(axis_names)
+    _count("shuffle_back")
     return {k: _all_to_all_rows(v, axis_names, n_shards, capacity)
             for k, v in cols.items()}
 
@@ -198,6 +242,45 @@ def _all_to_all_rows(x, axis_names, n_shards: int, capacity: int):
     out = jax.lax.all_to_all(b, axis_names, split_axis=0, concat_axis=0,
                              tiled=False)
     return out.reshape((n_shards * capacity,) + x.shape[1:])
+
+
+# Internal exchange fields ride the same bucket dicts as the carried
+# user columns; the "\x00" prefix keeps them out of any legal column
+# namespace (a user column can't collide silently — it is rejected).
+_KEY, _PROB = "\x00key", "\x00prob"
+
+
+def _check_exchange_cols(what: str, cols) -> None:
+    bad = [c for c in cols if c.startswith("\x00")]
+    if bad:
+        raise ValueError(f"{what} may not start with '\\x00' (reserved "
+                         f"for exchange fields): {bad}")
+
+
+def _exchange_build(right: Table, right_key: str, right_cols, axis_names,
+                    n_shards: int, build_bucket: int):
+    """Shuffle the build side's valid rows to their ``right_key %
+    n_shards`` owner: each owner holds its hash bucket of the dimension
+    table, O(build/shards) rows.  Returns (bucket Table, local overflow)."""
+    bcols = {_KEY: right[right_key].astype(jnp.int32), _PROB: right.prob}
+    for c in right_cols:
+        bcols[c] = right[c]
+    brecv, bmask, _, _, b_over = shuffle_by_key(
+        bcols[_KEY], bcols, axis_names, n_shards=n_shards,
+        capacity=build_bucket, valid=right.valid)
+    return Table({right_key: brecv[_KEY],
+                  **{c: brecv[c] for c in right_cols}},
+                 brecv[_PROB], bmask,
+                 phys.HashPartitioned(right_key)), b_over
+
+
+def _chunk_ids(capacity: int, axis_names, chunk_size: int,
+               num_chunks: int):
+    """Canonical-chunk id of each local row (clipped into the canonical
+    grid; shard-alignment padding rows are invalid and never shipped)."""
+    gid0 = data_rank(axis_names) * capacity
+    return jnp.clip((gid0 + jnp.arange(capacity)) // chunk_size,
+                    0, num_chunks - 1).astype(jnp.int32)
 
 
 def shuffle_fk_join(left: Table, right: Table, left_key: str,
@@ -238,25 +321,12 @@ def shuffle_fk_join(left: Table, right: Table, left_key: str,
     """
     axis_names = tuple(axis_names)
     right_cols = list(right_cols)
-    # Internal exchange fields ride the same bucket dicts as the carried
-    # user columns; the "\x00" prefix keeps them out of any legal column
-    # namespace (a user column can't collide silently — it is rejected).
-    KEY, PROB, HIT = "\x00key", "\x00prob", "\x00hit"
-    bad = [c for c in right_cols if c.startswith("\x00")]
-    if bad:
-        raise ValueError(f"shuffle_fk_join right_cols may not start with "
-                         f"'\\x00' (reserved for exchange fields): {bad}")
+    KEY, PROB, HIT = _KEY, _PROB, "\x00hit"
+    _check_exchange_cols("shuffle_fk_join right_cols", right_cols)
 
     # 1. build side -> hash owners
-    bcols = {KEY: right[right_key].astype(jnp.int32), PROB: right.prob}
-    for c in right_cols:
-        bcols[c] = right[c]
-    brecv, bmask, _, _, b_over = shuffle_by_key(
-        bcols[KEY], bcols, axis_names, n_shards=n_shards,
-        capacity=build_bucket, valid=right.valid)
-    build = Table({right_key: brecv[KEY],
-                   **{c: brecv[c] for c in right_cols}},
-                  brecv[PROB], bmask, phys.HashPartitioned(right_key))
+    build, b_over = _exchange_build(right, right_key, right_cols,
+                                    axis_names, n_shards, build_bucket)
 
     # 2. probe keys -> the same owners
     lkey = left[left_key].astype(jnp.int32)
@@ -283,6 +353,95 @@ def shuffle_fk_join(left: Table, right: Table, left_key: str,
     for c in right_cols:
         cols[c] = got[c]
     return Table(cols, prob, left.valid & got[HIT], left.part)
+
+
+def copartitioned_fk_join(left: Table, right: Table, left_key: str,
+                          right_key: str, right_cols: Sequence[str],
+                          carry_cols: Sequence[str], axis_names, *,
+                          n_shards: int, build_bucket: int,
+                          probe_bucket: int, chunk_size: int,
+                          num_chunks: int) -> Table:
+    """Hash-partitioned FK join WITHOUT the response round-trip (the
+    CoPartitionedJoin strategy of :mod:`repro.db.physical`): matched rows
+    STAY at their ``left_key % n_shards`` owner so a downstream GROUP BY
+    on the join key aggregates in place.
+
+    Differences from :func:`shuffle_fk_join`:
+
+    * probe rows ship (key, p, canonical-chunk id, ``carry_cols``) — the
+      columns the downstream aggregation reads — instead of the key alone;
+    * the owner-local ``ops.fk_join`` consumes the REAL probe
+      probabilities, so the output probability (p_l * p_r, deterministic
+      zero on miss) is final at the owner;
+    * there is no ``shuffle_back``: the output keeps the exchange's
+      (sender-major, in-sender row order) bucket layout — which IS the
+      global row order restricted to the owner — with the shipped chunk
+      id under ``physical.CHUNK_COL``, and carries
+      ``HashPartitioned(left_key)``.
+
+    Overflow on either exchange is psum-accounted and NaN-poisons the
+    output probabilities, exactly like :func:`shuffle_fk_join` (same
+    boolean-consumer caveat; concrete-key adaptive buckets or
+    ``shuffle_slack >= n_shards`` make overflow impossible).
+    """
+    axis_names = tuple(axis_names)
+    right_cols = list(right_cols)
+    carry_cols = list(carry_cols)
+    _check_exchange_cols("copartitioned_fk_join columns",
+                         right_cols + carry_cols)
+
+    build, b_over = _exchange_build(right, right_key, right_cols,
+                                    axis_names, n_shards, build_bucket)
+
+    # The routing key is int32 (hash arithmetic); the key COLUMN ships in
+    # its original dtype so group representatives keep their identity
+    # values bit-identical to the unshuffled paths.
+    lkey = left[left_key].astype(jnp.int32)
+    pcols = {_KEY: left[left_key], _PROB: left.prob,
+             phys.CHUNK_COL: _chunk_ids(left.capacity, axis_names,
+                                        chunk_size, num_chunks)}
+    for c in carry_cols:
+        pcols[c] = left[c]
+    precv, pmask, _, _, p_over = shuffle_by_key(
+        lkey, pcols, axis_names, n_shards=n_shards,
+        capacity=probe_bucket, valid=left.valid)
+
+    probe = Table({left_key: precv[_KEY],
+                   phys.CHUNK_COL: precv[phys.CHUNK_COL],
+                   **{c: precv[c] for c in carry_cols}},
+                  precv[_PROB], pmask, phys.HashPartitioned(left_key))
+    out = ops.fk_join(probe, build, left_key, right_key, right_cols)
+    over = jax.lax.psum(b_over + p_over, axis_names)
+    return out.with_prob(jnp.where(
+        over > 0, jnp.asarray(jnp.nan, out.prob.dtype), out.prob))
+
+
+def repartition_by_key(t: Table, key: str, carry_cols: Sequence[str],
+                       axis_names, *, n_shards: int, bucket: int,
+                       chunk_size: int, num_chunks: int) -> Table:
+    """Hash-exchange a RowBlocked relation to its ``key % n_shards``
+    owners (the Repartition strategy): the no-join feed of a
+    PartitionedAgg.  Rows ship (key, p, canonical-chunk id, carry_cols);
+    the output has the same bucket layout / chunk-id column /
+    overflow-NaN contract as :func:`copartitioned_fk_join`."""
+    axis_names = tuple(axis_names)
+    carry_cols = list(carry_cols)
+    _check_exchange_cols("repartition_by_key carry_cols", carry_cols)
+    kcol = t[key].astype(jnp.int32)     # routing only; column ships as-is
+    cols = {_KEY: t[key], _PROB: t.prob,
+            phys.CHUNK_COL: _chunk_ids(t.capacity, axis_names,
+                                       chunk_size, num_chunks)}
+    for c in carry_cols:
+        cols[c] = t[c]
+    recv, mask, _, _, over = shuffle_by_key(
+        kcol, cols, axis_names, n_shards=n_shards, capacity=bucket,
+        valid=t.valid)
+    over = jax.lax.psum(over, axis_names)
+    prob = jnp.where(over > 0, jnp.asarray(jnp.nan, recv[_PROB].dtype),
+                     recv[_PROB])
+    return Table({key: recv[_KEY], phys.CHUNK_COL: recv[phys.CHUNK_COL],
+                  **{c: recv[c] for c in carry_cols}},
+                 prob, mask, phys.HashPartitioned(key))
 
 
 def group_ids_sharded(table: Table, keys: Sequence[str], max_groups: int,
@@ -358,6 +517,46 @@ def allgather_merge(udas: dict, parts: list, axis_names,
         states = [jax.tree.map(lambda x, c=c: x[c], g)
                   for c in range(leaves)]
         out[name] = uda.tree_fold(u, states)
+    return out
+
+
+def partitioned_merge(udas: dict, parts: list, axis_names) -> dict:
+    """The HashPartitioned Merge (PartitionedAgg): combine per-owner
+    canonical-chunk states into the replicated final state.
+
+    ``parts`` is this owner's list of ALL ``num_chunks`` canonical chunk
+    states (the compound (chunk, group) accumulate of the fused pipeline
+    computes every chunk's slice locally; a chunk's slice is nonzero only
+    for groups this shard owns).  Because a group's tuples live wholly at
+    its ``key % n_shards`` owner, the owner's chunk-c state for group g
+    IS the global chunk-c state for g — so folding the chunks LOCALLY
+    with the one fixed :func:`repro.core.uda.tree_fold` gives the exact
+    canonical fold for the owned groups, and every other shard holds
+    exact init-zeros there.  The cross-shard merge is then
+
+    * additive states: ONE psum of the folded state — x + 0 + ... + 0 is
+      bitwise x, so the result is BIT-IDENTICAL to the RowBlocked
+      ``allgather_merge`` fold (and to mesh=None), while moving
+      O(state) bytes instead of O(num_chunks * state);
+    * non-additive states (MinMax): one all-gather + the owner-order
+      merge fold — ``MinMax.merge(init, x) == x`` bitwise (the run-fold
+      merge preserves singleton runs exactly), so the same argument
+      applies.
+
+    The bit-identity argument needs every group wholly at one owner,
+    which the group-id protocol guarantees as long as the key
+    cardinality fits ``max_groups``; the overflow fill bucket (invalid
+    in every path) may psum several owners' garbage together.
+    """
+    axis_names = tuple(axis_names)
+    out = {}
+    for name, u in udas.items():
+        folded = uda.tree_fold(u, [p[name] for p in parts])
+        # reduce_data IS the right cross-shard combine for both shapes:
+        # the additive default psums, MinMax overrides it with the
+        # all-gather + owner-order merge fold.
+        _count("merge_psum" if u.additive else "merge_gather")
+        out[name] = u.reduce_data(folded, axis_names)
     return out
 
 

@@ -289,12 +289,30 @@ def bucket_slots(dest: jnp.ndarray, ok: jnp.ndarray, n_shards: int,
     return slot.astype(jnp.int32), sent, overflow
 
 
-def scatter_to_buckets(cols: dict, slot: jnp.ndarray, size: int) -> dict:
+def bucket_fill_index(slot: jnp.ndarray, size: int) -> jnp.ndarray:
+    """Inverse of a bucket slot assignment: ``inv[s]`` = the row filling
+    buffer slot s, or ``n`` (the zero-pad row) for empty slots.  Sent
+    rows occupy distinct slots, so ONE int32 scatter builds it — and
+    every payload column then fills its buffer with a gather, which XLA
+    CPU executes far faster than a per-column scatter."""
+    n = slot.shape[0]
+    return jnp.full((size,), n, jnp.int32).at[slot].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+
+
+def scatter_to_buckets(cols: dict, slot: jnp.ndarray, size: int,
+                       inv=None) -> dict:
     """Place rows into the flat (size,) send buffer at ``slot`` (unsent
-    rows carry slot == size and are dropped); empty slots are zero."""
-    return {k: jnp.zeros((size,) + v.shape[1:], v.dtype)
-            .at[slot].set(v, mode="drop")
-            for k, v in cols.items()}
+    rows carry slot == size and are dropped); empty slots are zero.
+    Implemented as one shared :func:`bucket_fill_index` + per-column
+    gathers against a zero-padded copy."""
+    if inv is None:
+        inv = bucket_fill_index(slot, size)
+    out = {}
+    for k, v in cols.items():
+        pad = jnp.concatenate([v, jnp.zeros((1,) + v.shape[1:], v.dtype)])
+        out[k] = pad[inv]
+    return out
 
 
 def take_from_buckets(cols: dict, slot: jnp.ndarray, sent: jnp.ndarray):

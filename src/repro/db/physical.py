@@ -1,18 +1,28 @@
-"""Physical plan IR: explicit execution strategies for the sharded
-relational frontend.
+"""Physical plan IR: explicit, cost-chosen execution strategies for the
+sharded relational frontend.
 
-``repro.db.plans.compile_plan`` used to be one 500-line recursive closure
-whose distribution strategy lived in ``if mesh_mode and ...`` branches.
-This module splits compilation into two stages:
+``repro.db.plans.compile_plan`` splits compilation into two stages:
 
     logical plan (plans.Node DAG)
         --lower_plan-->  physical plan (this module's PhysNode DAG)
         --plans executor-->  one jit-able tables -> result function
 
-so the *strategy* — which join exchanges what, where each relation's rows
-live, where aggregation state is partial vs merged — is an inspectable,
-testable data structure instead of control flow (tests/test_physical.py
-golden-asserts the strategies picked at each budget).
+``lower_plan`` is itself a two-phase optimizer:
+
+    1. ENUMERATE — per logical node, build every legal physical candidate
+       (GatherJoin / ShuffleJoin / CoPartitionedJoin for an FKJoin;
+       PartialAgg on RowBlocked input vs Repartition + PartitionedAgg for
+       an aggregation, plus the fused CoPartitionedJoin + PartitionedAgg
+       pipeline when a GROUP BY keys on the join key);
+    2. COST — price each candidate with the explicit, unit-tested model
+       in :mod:`repro.db.cost` (bytes moved per collective, peak rows per
+       device, UDA flops) and pick the cheapest.
+
+The old budget knobs survive ONLY as cost-model overrides (an
+infinite-cost penalty on the forbidden side of the flip point), so
+``join_gather_budget`` reproduces the PR-4 golden flip behaviour exactly
+while everything inside the allowed region is decided by the estimates.
+Chosen nodes carry their modeled ``cost``; :func:`explain` prints it.
 
 Partitioning properties
 -----------------------
@@ -30,15 +40,23 @@ the mesh's data shards — one of three points of a small lattice:
                             concatenation IS the global row order.
     HashPartitioned(key)    row lives on shard ``key % n_shards``.  The
                             co-location property: two relations hashed on
-                            their join keys can be joined shard-locally.
+                            their join keys join shard-locally, and a
+                            GROUP BY on the hash key aggregates
+                            shard-locally (every group wholly at one
+                            owner).
 
 Exchange operators move between the points:
 
     all-gather   RowBlocked       -> Replicated      (dist.gather_table)
-    shuffle      RowBlocked       -> HashPartitioned (dist.shuffle_by_key)
+    shuffle      RowBlocked       -> HashPartitioned (dist.shuffle_by_key;
+                                                      ShuffleJoin's build
+                                                      leg, Repartition,
+                                                      CoPartitionedJoin)
     shuffle home HashPartitioned  -> RowBlocked      (responses routed back
                                                       through the same
-                                                      static send buckets)
+                                                      static send buckets
+                                                      — ONLY ShuffleJoin
+                                                      pays this leg)
 
 Node zoo (the executor in plans.py interprets these inside shard_map):
 
@@ -57,39 +75,97 @@ Node zoo (the executor in plans.py interprets these inside shard_map):
                                      — output stays RowBlocked and
                                      bit-identical to GatherJoin, with
                                      O(build/shards) peak build rows/device
+    CoPartitionedJoin(l, r, ...)     the fused shuffle -> aggregate
+                                     pipeline's join half: same build and
+                                     probe exchanges, but probe rows carry
+                                     their probability, canonical-chunk id
+                                     and the aggregation's value columns,
+                                     and matched rows STAY at their
+                                     ``key % n_shards`` owner (NO
+                                     shuffle-home round-trip); output is
+                                     HashPartitioned(left_key)
+    Repartition(child, key, ...)     hash-exchange of aggregation inputs
+                                     to their group-key owner (the no-join
+                                     path into PartitionedAgg)
     PartialAgg(child, keys, specs)   per-shard, per-canonical-chunk UDA
-                                     Accumulate over the local tuples;
-                                     output = partitioned partial states
-    MergeAgg(partial, kind)          ONE collective per aggregation pass
-                                     assembling every canonical chunk
-                                     state, the shard-count-invariant
-                                     tree fold, and the replicated
-                                     Finalize; kind selects the epilogue
-                                     (groupagg dict / project Table /
-                                     reweight Table)
+                                     Accumulate over the RowBlocked local
+                                     tuples; output = partitioned partial
+                                     states, merged by ONE all-gather of
+                                     all chunk states + the canonical fold
+    PartitionedAgg(child, ...)       UDA Accumulate over a HashPartitioned
+                                     buffer: group-id assignment runs
+                                     owner-locally, every canonical chunk
+                                     state is computed at the owner (one
+                                     compound (chunk, group) pass), each
+                                     owner finishes the canonical fold
+                                     LOCALLY, and the merge is ONE psum of
+                                     the folded additive states (groups
+                                     are owner-disjoint, so the psum adds
+                                     exact zeros — bit-identical to the
+                                     RowBlocked fold) + an n-way
+                                     gather-fold for MinMax states
+    MergeAgg(partial, kind)          the merge + replicated Finalize;
+                                     kind selects the epilogue (groupagg
+                                     dict / project Table / reweight
+                                     Table)
 
-Join strategy choice (the lowering pass): an FKJoin whose build-side
-capacity exceeds ``join_gather_budget`` (the per-node override first, then
-the compile_plan global) lowers to ShuffleJoin whenever both inputs are
-RowBlocked; everything else — small builds, single-device compiles,
-replicated inputs (e.g. group-level tables) — lowers to GatherJoin.  There
-is no replicated-subtree fallback anymore: every base table is fed
-row-partitioned.
+Worked example — TPC-H Q3 (revenue per order, GROUP BY l_orderkey) on a
+4-shard mesh with the orders build side over the gather budget::
 
-ShuffleJoin bucket capacities are static (XLA shapes): each shard sends at
-most ``*_bucket`` rows to each owner, ``ceil(local_rows * slack /
-n_shards)`` capped at ``local_rows``.  With ``slack >= n_shards`` overflow
-is impossible; below that a skewed key distribution can overflow a bucket,
-which is *accounted* (dropped rows are counted, the count is psum-shared,
-and the executor poisons the join output probabilities with NaN, which
-every probabilistic epilogue propagates — see ``dist.shuffle_fk_join``
-for the boolean-consumer caveat and how to make overflow impossible).
+    MergeAgg[groupagg] :: Replicated
+      PartitionedAgg(keys=[l_orderkey], ...) :: HashPartitioned(l_orderkey)
+        CoPartitionedJoin(l_orderkey=o_orderkey, carry=[l_extendedprice])
+            :: HashPartitioned(l_orderkey)
+          Select :: RowBlocked            (lineitem, shipdate filter)
+            ShardScan(lineitem) :: RowBlocked
+          ShuffleJoin(o_custkey=c_custkey, ...) :: RowBlocked
+            ...                           (orders |x| customer)
+
+    lineitem rows hash to shard ``l_orderkey % 4`` carrying
+    (p, chunk, l_extendedprice); orders rows hash to the same owners; the
+    match and the whole GROUP BY run at the owner; the only remaining
+    collective is one psum of the folded (G, 2) normal state.  The
+    ShuffleJoin alternative pays the same two exchanges PLUS the response
+    round-trip home and an all-gather of all canonical chunk states —
+    ``lower_plan`` picks the fused pipeline because
+    :func:`repro.db.cost.copartitioned_join` +
+    :func:`repro.db.cost.partitioned_agg` price strictly fewer bytes.
+
+Bit-reproducibility of the fused pipeline: each probe row ships its
+canonical-chunk id; the owner accumulates one compound (chunk, group)
+scatter pass whose received rows arrive in (sender, rank) = global row
+order, so every (chunk, group) slot folds the SAME tuples in the SAME
+order as the RowBlocked chunk pass; all chunks of a group live at its
+owner, so the owner's local canonical ``tree_fold`` equals the global
+one for its groups and the final psum adds exact zeros elsewhere.  The
+contract requires the group-key cardinality to fit ``max_groups`` (the
+overflow fill bucket is flagged invalid in every path but its garbage
+value is only deterministic per-layout).
+
+ShuffleJoin / CoPartitionedJoin / Repartition bucket capacities are
+static (XLA shapes): each shard sends at most ``*_bucket`` rows to each
+owner.  When the exchange key column is CONCRETE at lowering time (eager
+compiles), the capacity is sized from the actual ``key % n_shards``
+histogram of the base table — ``max`` per (sender, owner) demand, so a
+skewed key distribution gets exactly the buckets it needs and overflow is
+impossible; traced keys (jit) fall back to ``ceil(local_rows * slack /
+n_shards)`` capped at ``local_rows``, where overflow is *accounted*
+(dropped rows are counted, the count is psum-shared, and the executor
+poisons the output probabilities with NaN — see ``dist.shuffle_fk_join``
+for the boolean-consumer caveat; ``slack >= n_shards`` makes overflow
+impossible).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from typing import Callable
+
+from . import cost as C
+
+#: reserved column carrying each exchanged row's canonical-chunk id
+#: through a hash exchange ("\x00" keeps it out of the legal namespace).
+CHUNK_COL = "\x00chunk"
 
 
 # ---------------------------------------------------------------- properties
@@ -145,6 +221,7 @@ class GatherJoin(PhysNode):
     right_cols: tuple
     build_rows: int        # global capacity of the build side
     part: object           # = left.part
+    cost: object = None    # modeled repro.db.cost.Cost of the choice
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +236,37 @@ class ShuffleJoin(PhysNode):
     build_bucket: int           # static per-(sender, owner) bucket rows
     probe_bucket: int
     part: object                # = left.part (responses shuffled home)
+    cost: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CoPartitionedJoin(PhysNode):
+    """ShuffleJoin without the trip home: matched rows stay at their
+    ``left_key % n_shards`` owner, probe rows carry (p, chunk id, carry
+    columns), and only the build columns the consumer reads are fetched
+    (``right_cols`` here is already pruned to the aggregation's needs)."""
+    left: PhysNode
+    right: PhysNode
+    left_key: str
+    right_key: str
+    right_cols: tuple           # build columns the aggregation reads
+    carry_cols: tuple           # probe columns shipped with the requests
+    build_rows: int
+    build_bucket: int
+    probe_bucket: int
+    part: HashPartitioned       # = HashPartitioned(left_key)
+    cost: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Repartition(PhysNode):
+    """Hash-exchange aggregation inputs to their group-key owner."""
+    child: PhysNode
+    key: str
+    carry_cols: tuple           # value/threshold columns the pass reads
+    bucket: int
+    part: HashPartitioned       # = HashPartitioned(key)
+    cost: object = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,11 +278,27 @@ class PartialAgg(PhysNode):
     kappa: int
     num_freq: int
     part: object           # = child.part (states partial per shard)
+    cost: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedAgg(PhysNode):
+    """PartialAgg's HashPartitioned twin: owner-local group ids, one
+    compound (chunk, group) accumulate, owner-local canonical fold, ONE
+    psum merge (see module docstring)."""
+    child: PhysNode
+    keys: tuple
+    specs: tuple
+    max_groups: int
+    kappa: int
+    num_freq: int
+    part: HashPartitioned  # = child.part
+    cost: object = None
 
 
 @dataclasses.dataclass(frozen=True)
 class MergeAgg(PhysNode):
-    child: PartialAgg
+    child: PhysNode        # PartialAgg | PartitionedAgg
     kind: str              # groupagg | project | reweight
     threshold_col: str = ""
     threshold: float | None = None
@@ -193,19 +317,238 @@ def bucket_capacity(local_rows: int, n_shards: int, slack: float) -> int:
                       int(math.ceil(local_rows * slack / n_shards))))
 
 
+def concrete_bucket_capacity(table, key: str, n_shards: int) -> int | None:
+    """Skew-adaptive static bucket rows: the max per-(sender, owner)
+    demand of the ACTUAL ``key % n_shards`` histogram of a base table's
+    (shard-padded) key column, so heavy hitters get exactly the capacity
+    they need instead of the uniform ``slack`` tax — and overflow is
+    impossible, because downstream selection can only shrink the demand.
+    Returns None when the column is traced (jit compiles keep the slack
+    sizing and its overflow-NaN guard) or absent."""
+    import numpy as np
+
+    from .operators import _is_concrete
+    col = None if table is None else table.columns.get(key)
+    if col is None or not (_is_concrete(col) and _is_concrete(table.valid)):
+        return None
+    k = np.asarray(col)
+    ok = np.asarray(table.valid)
+    if k.ndim != 1 or k.shape[0] % n_shards:
+        return None
+    local = k.shape[0] // n_shards
+    # Mirror the runtime routing exactly (dist.shuffle_by_key hashes the
+    # int32-CAST key): a wider key must wrap the same way here, or the
+    # histogram would count a different owner than the exchange uses.
+    dest = k.reshape(n_shards, local).astype(np.int32) % n_shards
+    peak = 0
+    for s in range(n_shards):
+        d = dest[s][ok.reshape(n_shards, local)[s]]
+        if d.size:
+            peak = max(peak, int(np.bincount(d, minlength=n_shards).max()))
+    return max(1, peak)
+
+
 def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
                join_gather_budget: int = 1 << 20,
-               shuffle_slack: float = 4.0) -> PhysNode:
-    """Lower a logical plan to the physical IR.
+               shuffle_slack: float = 4.0,
+               copartition: object = "auto",
+               agg_shuffle_budget: int | None = None,
+               canonical_chunks: int = 8,
+               model: C.CostModel | None = None,
+               tables: dict | None = None) -> PhysNode:
+    """Lower a logical plan to the physical IR: enumerate physical
+    candidates per node, cost them with :mod:`repro.db.cost`, pick the
+    cheapest.
 
     caps: base-table name -> global padded capacity (the compiler pads to
     the canonical chunk grid and the shard count first; golden tests may
-    pass any capacities).  ``sharded`` selects mesh mode: scans become
-    RowBlocked and join strategies are chosen against
-    ``join_gather_budget`` — an ``FKJoin.gather_budget`` override wins
-    over the global.  Pure: no tables are touched.
+    pass any capacities).  ``sharded`` selects mesh mode.  The budget
+    knobs are cost-model overrides (see :class:`repro.db.cost.CostModel`):
+
+    * ``join_gather_budget`` — builds over it may not gather, builds at or
+      under it must (``FKJoin.gather_budget`` per-node override wins);
+    * ``copartition`` — "auto" lets the estimates choose between
+      ShuffleJoin + PartialAgg and the fused CoPartitionedJoin +
+      PartitionedAgg pipeline (when a GROUP BY keys on the probe join
+      key); True forces the fused pipeline whenever it is legal and the
+      join may not gather; False disables it;
+    * ``agg_shuffle_budget`` — when set, a single-key aggregation over
+      more input rows must Repartition + PartitionedAgg instead of
+      PartialAgg (None keeps PartialAgg, the PR-4 behaviour).
+
+    ``model`` overrides the knob-derived CostModel wholesale (pure
+    estimates: ``CostModel(gather_budget=None)``).  ``canonical_chunks``
+    is the compile's accumulation grid, which prices the chunked
+    PartialAgg merge.  ``tables`` (the
+    compiler's padded base tables) enables the skew-adaptive concrete-key
+    bucket sizing of :func:`concrete_bucket_capacity`; goldens that pass
+    only ``caps`` keep the deterministic slack sizing.  Pure: no table
+    DATA is consumed beyond the optional key histograms.
     """
     from . import plans as L
+
+    m = model if model is not None else C.CostModel(
+        n_shards=n_shards, gather_budget=join_gather_budget,
+        copartition=copartition, agg_shuffle_budget=agg_shuffle_budget,
+        shuffle_slack=shuffle_slack)
+
+    def pick(cands):
+        """cands: [(penalty, cost, build_fn)] -> built cheapest node."""
+        best = min(cands, key=lambda c: c[0] + m.total(c[1]))
+        return best[2]()
+
+    def lineage_scan(node, key):
+        """The base Scan a subtree's rows (and the exchange key column)
+        descend from, or None when the key is computed/fetched en route."""
+        while True:
+            if isinstance(node, L.Select):
+                node = node.child
+            elif isinstance(node, L.Map):
+                if node.name == key:
+                    return None
+                node = node.child
+            elif isinstance(node, L.FKJoin):
+                if key in node.right_cols:
+                    return None
+                node = node.left
+            else:
+                break
+        return node if isinstance(node, L.Scan) else None
+
+    hist_cache: dict = {}
+
+    def exchange_bucket(logical, key, rows):
+        """Static bucket rows for hashing `logical`'s rows on `key`:
+        the concrete-key histogram when available (memoized per base
+        table and key — the fused enumeration prices the same exchange
+        for several candidates), slack sizing else."""
+        scan = lineage_scan(logical, key)
+        if scan is not None and tables is not None:
+            ck = (scan.name, key)
+            if ck not in hist_cache:
+                hist_cache[ck] = concrete_bucket_capacity(
+                    tables.get(scan.name), key, n_shards)
+            if hist_cache[ck] is not None:
+                return hist_cache[ck]
+        return bucket_capacity(-(-rows // n_shards), n_shards,
+                               m.shuffle_slack)
+
+    def join_budget(node):
+        return node.gather_budget if node.gather_budget is not None \
+            else m.gather_budget
+
+    def join_candidates(node, left, lrows, right, rrows):
+        """The unfused FKJoin candidates: GatherJoin always; ShuffleJoin
+        when both inputs are RowBlocked on a mesh.  Budget override: over
+        budget forbids gather, at/under forbids the exchange; with the
+        budget disabled (None) neither side is penalized and the pure
+        estimates decide."""
+        budget = join_budget(node)
+        over = budget is not None and rrows > budget
+        exch_pen = 0.0 if (budget is None or over) else C.INF
+        w = len(node.right_cols)
+        gcost = C.gather_join(m, rrows, w)
+        cands = [(C.INF if (sharded and over) else 0.0, gcost,
+                  lambda: GatherJoin(left, right, node.left_key,
+                                     node.right_key, tuple(node.right_cols),
+                                     rrows, left.part, gcost))]
+        if sharded and isinstance(left.part, RowBlocked) \
+                and isinstance(right.part, RowBlocked):
+            bb = exchange_bucket(node.right, node.right_key, rrows)
+            pb = exchange_bucket(node.left, node.left_key, lrows)
+            scost = C.shuffle_join(m, bb, pb, w)
+            cands.append(
+                (exch_pen, scost,
+                 lambda: ShuffleJoin(left, right, node.left_key,
+                                     node.right_key,
+                                     tuple(node.right_cols), rrows,
+                                     HashPartitioned(node.right_key),
+                                     bb, pb, left.part, scost)))
+        return cands
+
+    def lower_agg(child_logical, keys, specs, max_groups, kappa, num_freq,
+                  extra_cols=()):
+        """Enumerate + cost the aggregation pipelines over `child_logical`
+        and return the chosen PartialAgg / PartitionedAgg node.
+
+        ``extra_cols``: non-spec columns the pass reads (reweight
+        threshold / carry columns) — shipped by the fused exchanges."""
+        keys = tuple(keys)
+        needed = {v for _n, v, _a, _mth in specs if v}
+        needed |= set(extra_cols)
+        add_e, fold_e, rflops = C.agg_state_elems(specs, max_groups, kappa,
+                                                  num_freq)
+        chunks = canonical_chunks      # the compile's accumulation grid
+
+        cands = []
+        fusable = (sharded and isinstance(child_logical, L.FKJoin)
+                   and keys == (child_logical.left_key,))
+        if fusable:
+            j = child_logical
+            left, lrows = go(j.left)
+            right, rrows = go(j.right)
+            budget = join_budget(j)
+            over = budget is not None and rrows > budget
+            exchangeable = isinstance(left.part, RowBlocked) \
+                and isinstance(right.part, RowBlocked)
+            force = m.copartition is True and over and exchangeable
+            for pen, jcost, build in join_candidates(j, left, lrows,
+                                                     right, rrows):
+                pcost = C.partial_agg(m, -(-lrows // n_shards),
+                                      chunks, add_e, fold_e, rflops)
+                def mk(build=build, pcost=pcost):
+                    c = build()
+                    return PartialAgg(c, keys, specs, max_groups, kappa,
+                                      num_freq, c.part, pcost)
+                cands.append((C.INF if force else pen, jcost + pcost, mk))
+            if exchangeable and m.copartition is not False:
+                right_keep = tuple(c for c in j.right_cols if c in needed)
+                carry = tuple(sorted(needed - set(j.right_cols)
+                                     - {j.left_key}))
+                bb = exchange_bucket(j.right, j.right_key, rrows)
+                pb = exchange_bucket(j.left, j.left_key, lrows)
+                jcost = C.copartitioned_join(m, bb, pb, len(right_keep),
+                                             len(carry))
+                pcost = C.partitioned_agg(m, n_shards * pb, chunks,
+                                          add_e, fold_e, rflops)
+
+                def mk_fused(jcost=jcost, pcost=pcost, right_keep=right_keep,
+                             carry=carry, bb=bb, pb=pb):
+                    cj = CoPartitionedJoin(
+                        left, right, j.left_key, j.right_key, right_keep,
+                        carry, rrows, bb, pb,
+                        HashPartitioned(j.left_key), jcost)
+                    return PartitionedAgg(cj, keys, specs, max_groups,
+                                          kappa, num_freq, cj.part, pcost)
+                cands.append((0.0 if (budget is None or over) else C.INF,
+                              jcost + pcost, mk_fused))
+            return pick(cands)
+
+        child, rows = go(child_logical)
+        pcost = C.partial_agg(m, -(-rows // n_shards), chunks,
+                              add_e, fold_e, rflops)
+        repartable = (sharded and len(keys) == 1
+                      and isinstance(child.part, RowBlocked)
+                      and m.agg_shuffle_budget is not None)
+        repart = repartable and rows > m.agg_shuffle_budget
+        cands = [(C.INF if repart else 0.0, pcost,
+                  lambda: PartialAgg(child, keys, specs, max_groups, kappa,
+                                     num_freq, child.part, pcost))]
+        if repartable:
+            carry = tuple(sorted(needed - {keys[0]}))
+            pb = exchange_bucket(child_logical, keys[0], rows)
+            rcost = C.repartition(m, pb, len(carry))
+            acost = C.partitioned_agg(m, n_shards * pb, chunks,
+                                      add_e, fold_e, rflops)
+
+            def mk_repart(pb=pb, carry=carry, rcost=rcost, acost=acost):
+                rp = Repartition(child, keys[0], carry, pb,
+                                 HashPartitioned(keys[0]), rcost)
+                return PartitionedAgg(rp, keys, specs, max_groups, kappa,
+                                      num_freq, rp.part, acost)
+            cands.append((0.0 if repart else C.INF, rcost + acost,
+                          mk_repart))
+        return pick(cands)
 
     def go(node):
         """-> (phys_node, global output rows of the subtree)."""
@@ -222,30 +565,13 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
         if isinstance(node, L.FKJoin):
             left, lrows = go(node.left)
             right, rrows = go(node.right)
-            budget = node.gather_budget if node.gather_budget is not None \
-                else join_gather_budget
-            if sharded and rrows > budget \
-                    and isinstance(left.part, RowBlocked) \
-                    and isinstance(right.part, RowBlocked):
-                bb = bucket_capacity(-(-rrows // n_shards), n_shards,
-                                     shuffle_slack)
-                pb = bucket_capacity(-(-lrows // n_shards), n_shards,
-                                     shuffle_slack)
-                return ShuffleJoin(
-                    left, right, node.left_key, node.right_key,
-                    tuple(node.right_cols), rrows,
-                    HashPartitioned(node.right_key), bb, pb,
-                    left.part), lrows
-            return GatherJoin(left, right, node.left_key, node.right_key,
-                              tuple(node.right_cols), rrows, left.part), \
+            return pick(join_candidates(node, left, lrows, right, rrows)), \
                 lrows
         if isinstance(node, L.Project):
-            c, _ = go(node.child)
-            pa = PartialAgg(c, tuple(node.keys), (), node.max_groups,
-                            64, 0, c.part)
+            pa = lower_agg(node.child, node.keys, (), node.max_groups,
+                           64, 0)
             return MergeAgg(pa, "project"), node.max_groups
         if isinstance(node, L.GroupAgg):
-            c, _ = go(node.child)
             specs = ((L._out_key(node.agg, node.method), node.value,
                       node.agg, node.method),) + tuple(node.extra)
             names = [s[0] for s in specs]
@@ -254,17 +580,19 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
                 raise ValueError(
                     f"GroupAgg aggregate names must be unique and avoid "
                     f"{sorted(_RESERVED_OUT_KEYS)}; got {names}")
-            pa = PartialAgg(c, tuple(node.keys), specs, node.max_groups,
-                            node.kappa, node.num_freq, c.part)
+            pa = lower_agg(node.child, node.keys, specs, node.max_groups,
+                           node.kappa, node.num_freq)
             return MergeAgg(pa, "groupagg"), node.max_groups
         if isinstance(node, L.ReweightGreater):
             if not node.threshold_col and node.threshold is None:
                 raise ValueError("ReweightGreater needs threshold_col "
                                  "or a constant threshold")
-            c, _ = go(node.child)
-            pa = PartialAgg(c, tuple(node.keys),
-                            (("sum", node.value, "SUM", "normal"),),
-                            node.max_groups, 64, 0, c.part)
+            extra = tuple(node.carry_cols)
+            if node.threshold_col:
+                extra += (node.threshold_col,)
+            pa = lower_agg(node.child, node.keys,
+                           (("sum", node.value, "SUM", "normal"),),
+                           node.max_groups, 64, 0, extra_cols=extra)
             return MergeAgg(pa, "reweight", node.threshold_col,
                             node.threshold, tuple(node.carry_cols)), \
                 node.max_groups
@@ -274,13 +602,16 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
 
 
 def explain(node: PhysNode, indent: int = 0) -> str:
-    """Human/golden-test-readable rendering of a physical plan."""
+    """Human/golden-test-readable rendering of a physical plan; chosen
+    nodes print their modeled cost (bytes moved, peak rows/device)."""
     pad = "  " * indent
 
     def tag(n):
-        return type(n.part).__name__ if not isinstance(n.part,
-                                                       HashPartitioned) \
+        t = type(n.part).__name__ if not isinstance(n.part,
+                                                    HashPartitioned) \
             else f"HashPartitioned({n.part.key})"
+        c = getattr(n, "cost", None)
+        return t if c is None else f"{t} cost{{{c.fmt()}}}"
 
     if isinstance(node, ShardScan):
         return f"{pad}ShardScan({node.name}, rows={node.rows}) :: {tag(node)}"
@@ -303,8 +634,26 @@ def explain(node: PhysNode, indent: int = 0) -> str:
                 f"probe={node.probe_bucket})) :: {tag(node)}\n"
                 + explain(node.left, indent + 1) + "\n"
                 + explain(node.right, indent + 1))
+    if isinstance(node, CoPartitionedJoin):
+        return (f"{pad}CoPartitionedJoin({node.left_key}={node.right_key}, "
+                f"build={node.build_rows}, "
+                f"carry={list(node.carry_cols)}, "
+                f"buckets=(build={node.build_bucket}, "
+                f"probe={node.probe_bucket})) :: {tag(node)}\n"
+                + explain(node.left, indent + 1) + "\n"
+                + explain(node.right, indent + 1))
+    if isinstance(node, Repartition):
+        return (f"{pad}Repartition({node.key}, "
+                f"carry={list(node.carry_cols)}, "
+                f"bucket={node.bucket}) :: {tag(node)}\n"
+                + explain(node.child, indent + 1))
     if isinstance(node, PartialAgg):
         return (f"{pad}PartialAgg(keys={list(node.keys)}, "
+                f"specs={[s[0] for s in node.specs]}, "
+                f"G={node.max_groups}) :: {tag(node)}\n"
+                + explain(node.child, indent + 1))
+    if isinstance(node, PartitionedAgg):
+        return (f"{pad}PartitionedAgg(keys={list(node.keys)}, "
                 f"specs={[s[0] for s in node.specs]}, "
                 f"G={node.max_groups}) :: {tag(node)}\n"
                 + explain(node.child, indent + 1))

@@ -26,13 +26,29 @@ keeps a replicated copy of any base table:
                     (static buckets, overflow accounted), match
                     shard-locally, shuffle responses home — peak build
                     rows/device O(build/shards), no replicated fallback
+    CoPartitioned-  the fused shuffle -> aggregate pipeline: when the
+    Join /          downstream GROUP BY keys on the probe join key, probe
+    Repartition     rows ship (p, canonical chunk id, value columns) and
+                    matched rows STAY at their owner — no shuffle-home
+                    round-trip (``dist.copartitioned_fk_join``);
+                    ``dist.repartition_by_key`` is the no-join feed
     group ids       two-phase distributed unique (exact under overflow;
-                    `db.distributed.group_ids_sharded`)
+                    `db.distributed.group_ids_sharded`) — owner-local
+                    over HashPartitioned blocks, same merged code table
     PartialAgg /    per-shard, per-canonical-chunk UDA Accumulate, then
     MergeAgg        ONE collective per aggregation pass assembling every
                     chunk state (`db.distributed.allgather_merge`) and the
                     replicated Finalize; group-level outputs are
                     replicated Tables
+    PartitionedAgg  the HashPartitioned Accumulate: ONE compound
+                    (chunk, group) pass over the exchange buffer, the
+                    canonical chunk fold finished LOCALLY per owner, and
+                    one psum / gather-fold Merge
+                    (`db.distributed.partitioned_merge`)
+
+    Strategy choice is the enumerate -> cost -> pick pass of
+    ``physical.lower_plan`` over the explicit model in ``db/cost.py``;
+    the budget knobs survive as cost overrides.
 
 Determinism contract: every aggregation pass folds its tuples over a
 fixed grid of ``canonical_chunks`` contiguous chunks and merges the chunk
@@ -63,6 +79,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Sequence
 
+import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -226,7 +243,10 @@ def compile_plan(root: Node, mesh=None, *,
                  cf_budget_elems: int = 1 << 22,
                  canonical_chunks: int = 8,
                  join_gather_budget: int = 1 << 20,
-                 shuffle_slack: float = 4.0):
+                 shuffle_slack: float = 4.0,
+                 copartition: object = "auto",
+                 agg_shuffle_budget: int | None = None,
+                 cost_model=None):
     """Emit a function tables -> result (Table or dict of arrays).
 
     With ``mesh``, the logical plan lowers to a sharded physical plan
@@ -242,11 +262,30 @@ def compile_plan(root: Node, mesh=None, *,
     ``canonical_chunks`` (any positive count) is the fixed accumulation
     grid that makes results shard-count-invariant.  ``join_gather_budget``
     caps the rows of an FKJoin build side that may be all-gathered; larger
-    build sides lower to the shuffle-partitioned join, whose static bucket
-    capacities are ``shuffle_slack`` times the uniform share (overflow is
-    counted and poisons the join output with NaN — see
+    build sides lower to a hash-partitioned strategy, whose static bucket
+    capacities come from the concrete ``key % n_shards`` histogram when
+    the key column is concrete at compile time (eager compiles; overflow
+    impossible) and otherwise from ``shuffle_slack`` times the uniform
+    share (overflow is counted and poisons the join output with NaN — see
     ``dist.shuffle_fk_join``).  A per-node ``FKJoin.gather_budget``
     overrides the global for that join.
+
+    Which hash-partitioned strategy runs is a COST decision
+    (``db/cost.py`` via ``physical.lower_plan``): when the downstream
+    GROUP BY keys on the probe join key, the fused CoPartitionedJoin +
+    PartitionedAgg pipeline (matched rows stay at their owner, zero
+    shuffle-home round-trips, one psum merge) competes with ShuffleJoin +
+    PartialAgg.  ``copartition`` overrides it: "auto" (default) lets the
+    estimates decide, True forces the fused pipeline whenever legal and
+    the join may not gather, False disables it.  ``agg_shuffle_budget``
+    (default None = off) makes single-key aggregations over more input
+    rows hash-exchange their tuples to per-group owners
+    (``Repartition`` + PartitionedAgg) — the fused pipeline without a
+    join.  ``cost_model`` replaces the knob-derived
+    :class:`repro.db.cost.CostModel` wholesale.  Every strategy is
+    bit-identical to every other and to mesh=None (the canonical-chunk
+    fold contract extends to owner-local folds; see
+    ``dist.partitioned_merge``).
 
     ``cf_budget_elems`` bounds the total live exact-CF state elements of a
     `GroupAgg(method="exact")` node — counting both the log-abs and angle
@@ -280,9 +319,11 @@ def compile_plan(root: Node, mesh=None, *,
         (row capacity follows the probe/left lineage down to its scan)."""
         if isinstance(pnode, phys.ShardScan):
             return canon_caps[pnode.name]
-        if isinstance(pnode, (phys.PhysSelect, phys.PhysMap)):
+        if isinstance(pnode, (phys.PhysSelect, phys.PhysMap,
+                              phys.Repartition)):
             return _canonical_rows(pnode.child)
-        if isinstance(pnode, (phys.GatherJoin, phys.ShuffleJoin)):
+        if isinstance(pnode, (phys.GatherJoin, phys.ShuffleJoin,
+                              phys.CoPartitionedJoin)):
             return _canonical_rows(pnode.left)
         if isinstance(pnode, phys.MergeAgg):
             return pnode.child.max_groups
@@ -295,14 +336,34 @@ def compile_plan(root: Node, mesh=None, *,
         def sharded(t: Table) -> bool:
             return bool(axes) and isinstance(t.part, phys.RowBlocked)
 
+        def hash_partitioned(t: Table) -> bool:
+            return bool(axes) and isinstance(t.part, phys.HashPartitioned)
+
         def acc(udas_d, table: Table, values, ids, max_groups,
                 cf_operands=None):
             """ONE canonical chunked pass over the relation's tuples for
             every UDA of the pass.  The chunk grid is the same in every
-            compile: a sharded pass computes its local chunk slots' states
-            and allgather_merge assembles ALL chunk states so every shard
-            finishes the identical fold tree."""
+            compile: a RowBlocked pass computes its local chunk slots'
+            states and allgather_merge assembles ALL chunk states so every
+            shard finishes the identical fold tree; a HashPartitioned
+            pass (the fused pipeline) computes EVERY canonical chunk's
+            slice in one compound (chunk, group) accumulate over the
+            exchange buffer — received rows arrive in global row order,
+            so each (chunk, group) slot folds the same tuples in the same
+            order as the RowBlocked chunk pass — and partitioned_merge
+            finishes the identical fold owner-locally before one psum."""
             probs = table.masked_prob()
+            if hash_partitioned(table):
+                cid = jnp.clip(table[phys.CHUNK_COL].astype(jnp.int32),
+                               0, chunks - 1)
+                comp = cid * max_groups + ids
+                flat = uda.accumulate(udas_d, probs, values, comp,
+                                      max_groups=chunks * max_groups)
+                parts = [{name: jax.tree.map(
+                    lambda x, c=c: x[c * max_groups:(c + 1) * max_groups],
+                    st) for name, st in flat.items()}
+                    for c in range(chunks)]
+                return dist.partitioned_merge(udas_d, parts, axes)
             if sharded(table):
                 parts = uda.accumulate_chunk_states(
                     udas_d, probs, values, ids, max_groups=max_groups,
@@ -314,13 +375,13 @@ def compile_plan(root: Node, mesh=None, *,
                 num_chunks=chunks, cf_operands=cf_operands)
 
         def rel_group_ids(t: Table, keys, max_groups):
-            if sharded(t):
+            if sharded(t) or hash_partitioned(t):
                 return dist.group_ids_sharded(t, list(keys), max_groups,
                                               axes)
             return ops.group_ids(t, list(keys), max_groups)
 
         def rel_key_columns(t: Table, keys, ids, max_groups):
-            if sharded(t):
+            if sharded(t) or hash_partitioned(t):
                 return dist.group_key_columns_sharded(t, keys, ids,
                                                       max_groups, axes)
             return ops.group_key_columns(t, keys, ids, max_groups)
@@ -362,11 +423,12 @@ def compile_plan(root: Node, mesh=None, *,
                                  cf_budget_elems // (2 * len(exact_names)))
                      if exact_names else ((0, pa.num_freq),))
             cf_operands: dict = {}
-            if len(slabs) > 1:
+            if len(slabs) > 1 and not hash_partitioned(t):
                 # Hoist the grouped kernel's argsort(gids) + operand prep
                 # above the slab loop: prepared once per canonical chunk,
                 # reused by every slab pass (None when the kernel would
-                # not be dispatched — the scan/oracle paths sort nothing).
+                # not be dispatched — the scan/oracle paths sort nothing;
+                # the compound pass of the fused pipeline sorts per call).
                 probs_m = t.masked_prob()
                 nloc = local_chunks if sharded(t) else chunks
                 for name in exact_names:
@@ -463,6 +525,23 @@ def compile_plan(root: Node, mesh=None, *,
                     list(node.right_cols), axes, n_shards=shards,
                     build_bucket=node.build_bucket,
                     probe_bucket=node.probe_bucket)
+            if isinstance(node, phys.CoPartitionedJoin):
+                lt = run(node.left)
+                rt = run(node.right)
+                return dist.copartitioned_fk_join(
+                    lt, rt, node.left_key, node.right_key,
+                    list(node.right_cols), list(node.carry_cols), axes,
+                    n_shards=shards, build_bucket=node.build_bucket,
+                    probe_bucket=node.probe_bucket,
+                    chunk_size=_canonical_rows(node.left) // chunks,
+                    num_chunks=chunks)
+            if isinstance(node, phys.Repartition):
+                t = run(node.child)
+                return dist.repartition_by_key(
+                    t, node.key, list(node.carry_cols), axes,
+                    n_shards=shards, bucket=node.bucket,
+                    chunk_size=_canonical_rows(node.child) // chunks,
+                    num_chunks=chunks)
             if isinstance(node, phys.MergeAgg):
                 return run_agg(node)
             raise TypeError(node)
@@ -496,7 +575,11 @@ def compile_plan(root: Node, mesh=None, *,
         proot = phys.lower_plan(root, caps, n_shards=shards,
                                 sharded=mesh_mode and bool(axes),
                                 join_gather_budget=join_gather_budget,
-                                shuffle_slack=shuffle_slack)
+                                shuffle_slack=shuffle_slack,
+                                copartition=copartition,
+                                agg_shuffle_budget=agg_shuffle_budget,
+                                canonical_chunks=chunks,
+                                model=cost_model, tables=padded)
         if not mesh_mode:
             return run_plan(padded, proot)
         fn = shard_map(lambda sh: run_plan(sh, proot), mesh=mesh,

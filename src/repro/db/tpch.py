@@ -203,14 +203,26 @@ def q1(db: TPCH, mode: str = "aggregate", mesh=None, plan_opts=None):
 
 
 def q3(db: TPCH, mode: str = "aggregate", segment: int = 1,
-       max_groups: int = 512, mesh=None, plan_opts=None):
-    """Shipping priority: revenue per order for one market segment."""
+       max_groups: int = 512, mesh=None, plan_opts=None,
+       order_join_budget: int | None = None):
+    """Shipping priority: revenue per order for one market segment.
+
+    The GROUP BY keys on ``l_orderkey`` — the probe key of the
+    lineitem |x| orders join — so on a mesh the planner's cost model can
+    fuse that join with the aggregation (CoPartitionedJoin +
+    PartitionedAgg: matched rows stay at their ``l_orderkey % n_shards``
+    owner, zero shuffle-home round-trips).  ``order_join_budget`` is the
+    per-join gather budget of exactly that join: set it below the orders
+    capacity to exercise the fused pipeline while the small customer
+    dimension still gathers (``plan_opts=dict(join_gather_budget=...)``
+    would shuffle both).  Results are bit-identical either way."""
     cust = Select(Scan("customer"), lambda t: t["c_mktsegment"] == segment)
     orders = Select(Scan("orders"), lambda t: t["o_orderdate"] < DAY0_1995)
     o = FKJoin(orders, cust, "o_custkey", "c_custkey", ("c_mktsegment",))
     li = Select(Scan("lineitem"), lambda t: t["l_shipdate"] > DAY0_1995)
     j = FKJoin(li, o, "l_orderkey", "o_orderkey",
-               ("o_orderdate", "o_custkey"))
+               ("o_orderdate", "o_custkey"),
+               gather_budget=order_join_budget)
     if mode == "deterministic":
         jt = compile_plan(j)(db.tables())
         ids, _, gvalid = ops.group_ids(jt, ["l_orderkey"], max_groups)
@@ -281,7 +293,14 @@ def q18(db: TPCH, mode: str = "aggregate", qty_threshold: int = 150,
     distribution with the grouped exact-CF planner path — ``num_freq``
     must exceed the max per-order quantity sum (lines_per_order * 50 for
     the synthetic generator) — and derives P(SUM > threshold) from the
-    exact tail mass instead of the Normal approximation."""
+    exact tail mass instead of the Normal approximation.
+
+    The aggregations key on ``l_orderkey`` over a bare lineitem scan, so
+    ``plan_opts=dict(agg_shuffle_budget=N)`` (rows above N) runs them as
+    the co-partitioned pipeline on a mesh: tuples hash-exchange to their
+    order's owner shard (``Repartition``) and aggregate in place
+    (``PartitionedAgg``, one psum merge) — bit-identical to the default
+    RowBlocked PartialAgg lowering."""
     li = Scan("lineitem")
     if mode == "deterministic":
         t = db.lineitem

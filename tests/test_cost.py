@@ -1,0 +1,191 @@
+"""Unit tests for the planner's cost model (db/cost.py): the estimates
+the enumerate -> cost -> pick pass of physical.lower_plan compares, and
+the parity of the budget-knob overrides with the PR-4 golden strategies."""
+import pytest
+
+from repro.db import cost as C
+from repro.db import physical as phys
+from repro.db.plans import FKJoin, GroupAgg, Scan, Select
+
+
+def _model(n, **kw):
+    return C.CostModel(n_shards=n, **kw)
+
+
+def test_cost_addition_streams_bytes_and_peaks_residency():
+    a = C.Cost(bytes_moved=10, peak_rows=100, flops=1)
+    b = C.Cost(bytes_moved=5, peak_rows=40, flops=2)
+    c = a + b
+    assert c.bytes_moved == 15 and c.peak_rows == 100 and c.flops == 3
+
+
+def test_total_weighs_all_three_axes():
+    m = _model(4)
+    assert m.total(C.Cost(bytes_moved=1000)) == 1000
+    assert m.total(C.Cost(peak_rows=10)) == pytest.approx(
+        m.peak_weight * m.elem_bytes * 10)
+    assert m.total(C.Cost(flops=10)) == pytest.approx(m.flop_weight * 10)
+
+
+def test_gather_monotone_in_build_rows():
+    m = _model(4)
+    costs = [m.total(C.gather_join(m, rows, 2))
+             for rows in (64, 256, 1024, 4096)]
+    assert costs == sorted(costs) and costs[0] < costs[-1]
+
+
+def test_shuffle_cheaper_with_more_shards():
+    """Fixed relation sizes: the hash exchange's per-device traffic
+    shrinks as shards grow, once the shard count exceeds the bucket
+    slack (below it the slack pins buckets at the full local rows and
+    only the (n-1)/n transfer fraction moves)."""
+    rows_b, rows_p = 1 << 14, 1 << 16
+    totals = []
+    for n in (4, 8, 16, 32):            # n >= slack = 4.0
+        m = _model(n)
+        bb = phys.bucket_capacity(rows_b // n, n, m.shuffle_slack)
+        pb = phys.bucket_capacity(rows_p // n, n, m.shuffle_slack)
+        totals.append(m.total(C.shuffle_join(m, bb, pb, 2)))
+    assert totals == sorted(totals, reverse=True)
+
+
+def test_gather_vs_shuffle_crossover_in_build_size():
+    """Pure estimates (no budget override): tiny builds gather, huge
+    builds exchange — the cost model reproduces the rule the budget knob
+    used to hard-code, from physics instead of a constant."""
+    n, probe = 8, 1 << 15
+    m = _model(n)
+    pb = phys.bucket_capacity(probe // n, n, m.shuffle_slack)
+
+    def pick(build):
+        bb = phys.bucket_capacity(build // n, n, m.shuffle_slack)
+        g = m.total(C.gather_join(m, build, 2))
+        s = m.total(C.shuffle_join(m, bb, pb, 2))
+        return "gather" if g <= s else "shuffle"
+
+    assert pick(1 << 8) == "gather"
+    assert pick(1 << 22) == "shuffle"
+
+
+def test_copartitioned_beats_shuffle_home_on_q3_shape():
+    """Same buckets, GROUP BY on the probe key: skipping the response
+    round-trip (and shipping only the aggregation's columns) is strictly
+    cheaper than shuffle + gather-home, and the partitioned merge moves
+    less than the chunked all-gather — the decision behind the fused
+    pipeline."""
+    m = _model(4)
+    bb, pb = 256, 1024
+    sj = C.shuffle_join(m, bb, pb, n_right_cols=2)
+    cj = C.copartitioned_join(m, bb, pb, n_right_keep=0, n_carry=1)
+    assert cj.bytes_moved < sj.bytes_moved
+    add, fold, rf = C.agg_state_elems(
+        (("sum", "v", "SUM", "normal"),), 512, 64, 0)
+    pa = C.partial_agg(m, pb, 8, add, fold, rf)
+    pt = C.partitioned_agg(m, m.n_shards * pb, 8, add, fold, rf)
+    assert pt.bytes_moved < pa.bytes_moved
+    assert m.total(cj + pt) < m.total(sj + pa)
+
+
+def test_partitioned_merge_traffic_is_chunk_count_free():
+    m = _model(4)
+    add, fold, rf = C.agg_state_elems((("sum", "v", "SUM", "normal"),),
+                                      1024, 64, 0)
+    pa8 = C.partial_agg(m, 1000, 8, add, fold, rf)
+    pa32 = C.partial_agg(m, 1000, 32, add, fold, rf)
+    pt8 = C.partitioned_agg(m, 4000, 8, add, fold, rf)
+    pt32 = C.partitioned_agg(m, 4000, 32, add, fold, rf)
+    assert pa32.bytes_moved == 4 * pa8.bytes_moved
+    assert pt32.bytes_moved == pt8.bytes_moved      # one psum either way
+    assert pt8.bytes_moved == 2 * add * m.elem_bytes * m.xfer
+
+
+def test_agg_state_elems_by_method():
+    specs = (("sum", "v", "SUM", "normal"),
+             ("c", "v", "SUM", "cumulants"),
+             ("e", "v", "SUM", "exact"),
+             ("m", "v", "MIN", "normal"))
+    add, fold, flops = C.agg_state_elems(specs, 16, kappa=8, num_freq=32)
+    # confidence + normal(2) + cumulants(8) + exact(2 * 32)
+    assert add == 16 * (1 + 2 + C.CUMULANT_ORDERS + 64)
+    assert fold == 16 * (2 * 8 + 2)                 # MinMax buffers+tails
+    assert flops > 32                               # exact dominates
+
+
+def test_minmax_prefers_the_chunked_merge():
+    """MinMax states gather-fold across ALL owners in the partitioned
+    merge (n x the state), so a MIN/MAX-heavy pass can keep PartialAgg
+    even where a normal pass would fuse — the choice is per-pass."""
+    m = _model(16)
+    add, fold, rf = C.agg_state_elems((("minmax", "v", "MIN", "normal"),),
+                                      1024, 64, 0)
+    pa = C.partial_agg(m, 1000, 8, add, fold, rf)
+    pt = C.partitioned_agg(m, 16000, 8, add, fold, rf)
+    assert pt.bytes_moved > pa.bytes_moved
+
+
+# ---------------------------------------------- override parity with PR 4
+CAPS = {"lineitem": 4096, "orders": 1024, "customer": 256}
+
+
+def _plan(keys=("l_partkey",)):
+    li = Select(Scan("lineitem"), lambda t: t["x"] > 0)
+    o = FKJoin(Scan("orders"), Scan("customer"), "o_custkey", "c_custkey",
+               ("c_mktsegment",))
+    j = FKJoin(li, o, "l_orderkey", "o_orderkey", ("o_orderdate",))
+    return GroupAgg(j, keys, "l_quantity", "SUM", 512)
+
+
+@pytest.mark.parametrize("budget,outer,inner", [
+    (1 << 20, phys.GatherJoin, phys.GatherJoin),
+    (1024, phys.GatherJoin, phys.GatherJoin),
+    (1023, phys.ShuffleJoin, phys.GatherJoin),
+    (256, phys.ShuffleJoin, phys.GatherJoin),
+    (255, phys.ShuffleJoin, phys.ShuffleJoin),
+    (1, phys.ShuffleJoin, phys.ShuffleJoin),
+])
+def test_budget_override_matches_pr4_rule(budget, outer, inner):
+    """The PR-4 rule — shuffle iff build_rows > budget, per join — falls
+    out of the cost override at every flip point (non-fusable GROUP BY so
+    the strategies are exactly PR 4's)."""
+    p = phys.lower_plan(_plan(), CAPS, n_shards=4, sharded=True,
+                        join_gather_budget=budget)
+    j = p.child.child
+    assert isinstance(j, outer), phys.explain(p)
+    assert isinstance(j.right, inner), phys.explain(p)
+
+
+def test_chosen_nodes_carry_their_modeled_cost():
+    p = phys.lower_plan(_plan(("l_orderkey",)), CAPS, n_shards=4,
+                        sharded=True, join_gather_budget=1)
+    agg = p.child
+    assert isinstance(agg, phys.PartitionedAgg)
+    assert isinstance(agg.cost, C.Cost) and agg.cost.bytes_moved > 0
+    assert isinstance(agg.child.cost, C.Cost)
+    assert agg.child.cost.bytes_moved > 0
+
+
+def test_custom_cost_model_overrides_knobs():
+    """A caller-supplied CostModel replaces the knob-derived one: with
+    gather_budget=None the pure estimates run (and for this tiny build
+    they pick the gather the budget would have forbidden)."""
+    m = C.CostModel(n_shards=4, gather_budget=None)
+    p = phys.lower_plan(_plan(), CAPS, n_shards=4, sharded=True,
+                        join_gather_budget=1, model=m)
+    assert isinstance(p.child.child, phys.GatherJoin)
+
+
+def test_pure_estimates_pick_the_exchange_at_scale():
+    """With the budget override disabled, BOTH sides compete unpenalized:
+    a build side whose all-gather dwarfs the hash exchange lowers to the
+    exchange strategies with no knob set — the estimate-driven planner
+    the knobs are overrides OF."""
+    caps = {"lineitem": 1 << 20, "orders": 1 << 18, "customer": 256}
+    m = C.CostModel(n_shards=64, gather_budget=None)
+    p = phys.lower_plan(_plan(), caps, n_shards=64, sharded=True, model=m)
+    j = p.child.child
+    assert isinstance(j, phys.ShuffleJoin), phys.explain(p)
+    assert isinstance(j.right, phys.GatherJoin)     # customer stays tiny
+    fused = phys.lower_plan(_plan(("l_orderkey",)), caps, n_shards=64,
+                            sharded=True, model=m)
+    assert isinstance(fused.child, phys.PartitionedAgg), phys.explain(fused)
+    assert isinstance(fused.child.child, phys.CoPartitionedJoin)

@@ -1,23 +1,28 @@
 """Golden tests for the logical -> physical lowering pass: which strategy
-the planner picks at each budget, which partitioning property every node
-carries, and the static shuffle bucket sizing — all without executing a
-single table (physical.lower_plan is pure)."""
+the enumerate -> cost -> pick optimizer chooses at each budget override,
+which partitioning property every node carries, the static shuffle bucket
+sizing (slack and concrete-key adaptive), and the cost-annotated explain
+rendering — all without executing a single table (physical.lower_plan is
+pure up to the optional key histograms)."""
+import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.db import physical as phys
 from repro.db.plans import (FKJoin, GroupAgg, Map, Project, ReweightGreater,
                             Scan, Select)
+from repro.db.table import Table
 
 CAPS = {"lineitem": 4096, "orders": 1024, "customer": 256}
 
 
-def _q3ish(budget=None):
+def _q3ish(budget=None, keys=("l_orderkey",)):
     li = Select(Scan("lineitem"), lambda t: t["x"] > 0)
     o = FKJoin(Scan("orders"), Scan("customer"), "o_custkey", "c_custkey",
                ("c_mktsegment",))
     j = FKJoin(li, o, "l_orderkey", "o_orderkey", ("o_orderdate",),
                gather_budget=budget)
-    return GroupAgg(j, ("l_orderkey",), "l_quantity", "SUM", 512)
+    return GroupAgg(j, keys, "l_quantity", "SUM", 512)
 
 
 def test_single_device_lowers_fully_replicated():
@@ -32,30 +37,73 @@ def test_single_device_lowers_fully_replicated():
     assert isinstance(j.right, phys.GatherJoin)
 
 
-def test_strategy_flips_to_shuffle_at_the_budget():
-    """The build side (orders joined customer: 1024 rows) gathers at
-    budget >= 1024 and shuffles below it; the inner customer join (256)
-    flips independently."""
+def test_strategy_flips_at_the_pr4_budget_points():
+    """The gather/exchange flip points are unchanged from PR 4 (the budget
+    knob survives as a cost override): the build side (orders joined
+    customer: 1024 rows) gathers at budget >= 1024 and hash-exchanges
+    below it; the inner customer join (256) flips independently.  What
+    runs above the flip is now the cost model's pick — for a GROUP BY on
+    the probe join key that is the fused CoPartitionedJoin +
+    PartitionedAgg pipeline."""
     lowered = lambda b: phys.lower_plan(
         _q3ish(), CAPS, n_shards=4, sharded=True, join_gather_budget=b)
     big = lowered(1024).child.child
     assert isinstance(big, phys.GatherJoin)
     assert isinstance(big.right, phys.GatherJoin)
-    mid = lowered(1023).child.child
-    assert isinstance(mid, phys.ShuffleJoin)
-    assert mid.build_rows == 1024
-    assert mid.exchange == phys.HashPartitioned("o_orderkey")
-    assert isinstance(mid.part, phys.RowBlocked)    # responses come home
-    assert isinstance(mid.right, phys.GatherJoin)   # customer still small
+    mid = lowered(1023)
+    assert isinstance(mid.child, phys.PartitionedAgg)
+    cj = mid.child.child
+    assert isinstance(cj, phys.CoPartitionedJoin)
+    assert cj.build_rows == 1024
+    assert cj.part == phys.HashPartitioned("l_orderkey")
+    assert cj.carry_cols == ("l_quantity",)     # pruned to the agg's needs
+    assert cj.right_cols == ()                  # o_orderdate unused by it
+    assert isinstance(cj.right, phys.GatherJoin)   # customer still small
     small = lowered(255).child.child
-    assert isinstance(small, phys.ShuffleJoin)
+    assert isinstance(small, phys.CoPartitionedJoin)
     assert isinstance(small.right, phys.ShuffleJoin)
     assert small.right.exchange == phys.HashPartitioned("c_custkey")
 
 
+def test_non_matching_keys_keep_the_pr4_shuffle_strategies():
+    """A GROUP BY that does NOT key on the join key can't fuse: the PR-4
+    ShuffleJoin + PartialAgg lowering survives at the same flip points."""
+    lowered = lambda b: phys.lower_plan(
+        _q3ish(keys=("l_partkey",)), CAPS, n_shards=4, sharded=True,
+        join_gather_budget=b)
+    assert isinstance(lowered(1024).child.child, phys.GatherJoin)
+    mid = lowered(1023)
+    assert isinstance(mid.child, phys.PartialAgg)
+    assert isinstance(mid.child.child, phys.ShuffleJoin)
+    assert mid.child.child.exchange == phys.HashPartitioned("o_orderkey")
+    assert isinstance(mid.child.child.part, phys.RowBlocked)
+    small = lowered(255).child.child
+    assert isinstance(small, phys.ShuffleJoin)
+    assert isinstance(small.right, phys.ShuffleJoin)
+
+
+def test_copartition_override_forces_and_disables():
+    """The ``copartition`` knob is a cost override: False restores the
+    ShuffleJoin + PartialAgg pipeline, True forbids it whenever the fused
+    pipeline is legal and the join may not gather."""
+    off = phys.lower_plan(_q3ish(), CAPS, n_shards=4, sharded=True,
+                          join_gather_budget=1, copartition=False)
+    assert isinstance(off.child, phys.PartialAgg)
+    assert isinstance(off.child.child, phys.ShuffleJoin)
+    on = phys.lower_plan(_q3ish(), CAPS, n_shards=4, sharded=True,
+                         join_gather_budget=1, copartition=True)
+    assert isinstance(on.child, phys.PartitionedAgg)
+    assert isinstance(on.child.child, phys.CoPartitionedJoin)
+    # under budget the gather override still wins, even forced
+    under = phys.lower_plan(_q3ish(), CAPS, n_shards=4, sharded=True,
+                            join_gather_budget=1 << 20, copartition=True)
+    assert isinstance(under.child, phys.PartialAgg)
+    assert isinstance(under.child.child, phys.GatherJoin)
+
+
 def test_per_join_gather_budget_override_wins():
     """FKJoin.gather_budget overrides the global: mixed plans gather the
-    small dim while shuffling the big one (and vice versa)."""
+    small dim while hash-exchanging the big one (and vice versa)."""
     p = phys.lower_plan(_q3ish(budget=1 << 20), CAPS, n_shards=4,
                         sharded=True, join_gather_budget=1)
     outer = p.child.child
@@ -64,8 +112,44 @@ def test_per_join_gather_budget_override_wins():
     p2 = phys.lower_plan(_q3ish(budget=1), CAPS, n_shards=4, sharded=True,
                          join_gather_budget=1 << 20)
     outer2 = p2.child.child
-    assert isinstance(outer2, phys.ShuffleJoin)     # forced shuffle
+    assert isinstance(outer2, phys.CoPartitionedJoin)  # forced exchange
     assert isinstance(outer2.right, phys.GatherJoin)
+
+
+def test_repartitioned_agg_at_the_agg_shuffle_budget():
+    """``agg_shuffle_budget`` is the aggregation-side override: a
+    single-key GROUP BY over more input rows hash-exchanges its tuples to
+    per-group owners (Repartition + PartitionedAgg); at or under it (or
+    with the knob off) the RowBlocked PartialAgg survives."""
+    agg = GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity", "SUM",
+                   128)
+    low = lambda **kw: phys.lower_plan(agg, CAPS, n_shards=4, sharded=True,
+                                       **kw)
+    default = low()
+    assert isinstance(default.child, phys.PartialAgg)
+    on = low(agg_shuffle_budget=4)
+    assert isinstance(on.child, phys.PartitionedAgg)
+    rp = on.child.child
+    assert isinstance(rp, phys.Repartition)
+    assert rp.key == "l_orderkey"
+    assert rp.carry_cols == ("l_quantity",)
+    assert rp.part == phys.HashPartitioned("l_orderkey")
+    off = low(agg_shuffle_budget=CAPS["lineitem"])
+    assert isinstance(off.child, phys.PartialAgg)
+    # multi-key aggregations can't hash on one column
+    multi = GroupAgg(Scan("lineitem"), ("a", "b"), "l_quantity", "SUM", 128)
+    p = phys.lower_plan(multi, CAPS, n_shards=4, sharded=True,
+                        agg_shuffle_budget=4)
+    assert isinstance(p.child, phys.PartialAgg)
+
+
+def test_reweight_fused_ships_threshold_and_carry_columns():
+    rew = ReweightGreater(Scan("lineitem"), ("l_orderkey",), "l_quantity",
+                          "l_thresh", 128, carry_cols=("l_extra",))
+    p = phys.lower_plan(rew, CAPS, n_shards=4, sharded=True,
+                        agg_shuffle_budget=4)
+    assert isinstance(p.child, phys.PartitionedAgg)
+    assert p.child.child.carry_cols == ("l_extra", "l_quantity", "l_thresh")
 
 
 def test_replicated_build_or_probe_never_shuffles():
@@ -133,10 +217,89 @@ def test_bucket_capacity_bounds():
     assert sj.probe_bucket == phys.bucket_capacity(4096 // 8, 8, 2.0)
 
 
+# ------------------------------------------- concrete-key adaptive buckets
+def test_concrete_bucket_capacity_is_the_histogram_max():
+    """Skewed keys: capacity = the worst (sender, owner) demand of the
+    actual key % n_shards histogram, valid rows only."""
+    t = Table.from_columns({"k": jnp.asarray([0, 2, 4, 6, 1, 3, 5, 7])})
+    # shard 0 rows [0,2,4,6] all hit owner 0; shard 1 rows odd -> owner 1
+    assert phys.concrete_bucket_capacity(t, "k", 2) == 4
+    t2 = t.with_valid(jnp.asarray([True, False, False, False] + [True] * 4))
+    assert phys.concrete_bucket_capacity(t2, "k", 2) == 4
+    assert phys.concrete_bucket_capacity(t, "missing", 2) is None
+    assert phys.concrete_bucket_capacity(None, "k", 2) is None
+    # balanced keys: exactly the uniform share, no slack tax
+    t3 = Table.from_columns({"k": jnp.asarray(np.arange(16))})
+    assert phys.concrete_bucket_capacity(t3, "k", 4) == 1
+
+
+def test_lowering_sizes_buckets_from_concrete_keys():
+    """With the padded base tables in hand, ShuffleJoin buckets come from
+    the real histogram instead of slack x uniform share — skew gets the
+    capacity it needs, balanced keys shed the slack tax."""
+    n = CAPS["orders"]
+    tables = {
+        "lineitem": Table.from_columns(
+            {"a": jnp.asarray(np.arange(CAPS["lineitem"]) % 64)}),
+        # all build keys hash to owner 0
+        "orders": Table.from_columns({"b": jnp.asarray(np.zeros(n, int))}),
+    }
+    join = FKJoin(Scan("lineitem"), Scan("orders"), "a", "b", ())
+    sj = phys.lower_plan(join, CAPS, n_shards=8, sharded=True,
+                         join_gather_budget=1, shuffle_slack=2.0,
+                         tables=tables)
+    assert sj.build_bucket == n // 8        # full skewed demand, no drop
+    assert sj.probe_bucket == CAPS["lineitem"] // 8 // 8  # balanced share
+    # without tables: the PR-4 slack sizing (golden determinism)
+    sj2 = phys.lower_plan(join, CAPS, n_shards=8, sharded=True,
+                          join_gather_budget=1, shuffle_slack=2.0)
+    assert sj2.build_bucket == phys.bucket_capacity(n // 8, 8, 2.0)
+
+
+# --------------------------------------------------- explain snapshots
 def test_explain_renders_every_node():
     text = phys.explain(phys.lower_plan(
         _q3ish(), CAPS, n_shards=4, sharded=True, join_gather_budget=1))
-    for token in ("MergeAgg[groupagg]", "PartialAgg", "ShuffleJoin",
-                  "HashPartitioned(o_orderkey)", "ShardScan(lineitem",
-                  "RowBlocked", "Replicated"):
+    for token in ("MergeAgg[groupagg]", "PartitionedAgg",
+                  "CoPartitionedJoin", "ShuffleJoin",
+                  "HashPartitioned(l_orderkey)",
+                  "HashPartitioned(c_custkey)", "ShardScan(lineitem",
+                  "RowBlocked", "Replicated", "cost{bytes="):
         assert token in text, (token, text)
+    rp = phys.explain(phys.lower_plan(
+        GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity", "SUM",
+                 128), CAPS, n_shards=4, sharded=True,
+        agg_shuffle_budget=4))
+    assert "Repartition(l_orderkey" in rp
+
+
+def test_explain_snapshot_copartitioned_plan():
+    """Full-text snapshot: the fused pipeline with its modeled costs."""
+    text = phys.explain(phys.lower_plan(
+        _q3ish(), CAPS, n_shards=4, sharded=True, join_gather_budget=512))
+    assert text == """\
+MergeAgg[groupagg] :: Replicated
+  PartitionedAgg(keys=['l_orderkey'], specs=['sum'], G=512) :: HashPartitioned(l_orderkey) cost{bytes=18432, rows=16384, flops=12288}
+    CoPartitionedJoin(l_orderkey=o_orderkey, build=1024, carry=['l_quantity'], buckets=(build=256, probe=1024)) :: HashPartitioned(l_orderkey) cost{bytes=110592, rows=18432, flops=0}
+      Select :: RowBlocked
+        ShardScan(lineitem, rows=4096) :: RowBlocked
+      GatherJoin(o_custkey=c_custkey, build=256) :: RowBlocked cost{bytes=6144, rows=1024, flops=0}
+        ShardScan(orders, rows=1024) :: RowBlocked
+        ShardScan(customer, rows=256) :: RowBlocked"""
+
+
+def test_explain_snapshot_forced_shuffle_plan():
+    """Full-text snapshot: the unfused shuffle + gather-home pipeline (a
+    GROUP BY off the join key), with its modeled costs."""
+    text = phys.explain(phys.lower_plan(
+        _q3ish(keys=("l_partkey",)), CAPS, n_shards=4, sharded=True,
+        join_gather_budget=512))
+    assert text == """\
+MergeAgg[groupagg] :: Replicated
+  PartialAgg(keys=['l_partkey'], specs=['sum'], G=512) :: RowBlocked cost{bytes=73728, rows=12288, flops=3072}
+    ShuffleJoin(l_orderkey=o_orderkey, build=1024, exchange=HashPartitioned(o_orderkey), buckets=(build=256, probe=1024)) :: RowBlocked cost{bytes=116736, rows=19456, flops=0}
+      Select :: RowBlocked
+        ShardScan(lineitem, rows=4096) :: RowBlocked
+      GatherJoin(o_custkey=c_custkey, build=256) :: RowBlocked cost{bytes=6144, rows=1024, flops=0}
+        ShardScan(orders, rows=1024) :: RowBlocked
+        ShardScan(customer, rows=256) :: RowBlocked"""

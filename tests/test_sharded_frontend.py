@@ -439,6 +439,36 @@ def test_bucket_slots_overflow_accounting():
 
 
 @pytest.mark.parametrize("seed", range(6))
+def test_concrete_bucket_capacity_covers_every_demand(seed):
+    """Fuzz the skew-adaptive sizing: the histogram capacity equals the
+    worst (sender, owner) demand, so bucket_slots never overflows at that
+    capacity — for any key distribution."""
+    from repro.db import physical as phys
+
+    r = np.random.default_rng(seed)
+    shards = int(r.integers(2, 5))
+    local = int(r.integers(1, 9))
+    n = shards * local
+    skew = int(r.integers(1, 4 * shards))
+    keys = r.integers(0, skew, n)
+    valid = r.uniform(0, 1, n) > 0.25
+    t = Table.from_columns({"k": jnp.asarray(keys)},
+                           valid=jnp.asarray(valid))
+    cap = phys.concrete_bucket_capacity(t, "k", shards)
+    want = 1
+    for s in range(shards):
+        d = (keys[s * local:(s + 1) * local]
+             [valid[s * local:(s + 1) * local]]) % shards
+        if d.size:
+            want = max(want, int(np.bincount(d, minlength=shards).max()))
+        _, _, over = ops.bucket_slots(
+            jnp.asarray(keys[s * local:(s + 1) * local] % shards),
+            jnp.asarray(valid[s * local:(s + 1) * local]), shards, cap)
+        assert int(over) == 0
+    assert cap == want
+
+
+@pytest.mark.parametrize("seed", range(6))
 def test_bucket_slots_roundtrip_fuzz(seed):
     """scatter_to_buckets o take_from_buckets is the identity on sent rows
     (the response-routing invariant of the shuffle join)."""
@@ -458,11 +488,14 @@ def test_bucket_slots_roundtrip_fuzz(seed):
 
 
 @pytest.mark.multidevice
-def test_shuffle_join_3shard_mesh_and_overflow_poisoning():
-    """On a real 3-device mesh: the shuffle-lowered plan is bit-equal to
-    mesh=None, and shrinking the bucket slack until buckets overflow
-    poisons the join probabilities with NaN (accounted, never silently
-    wrong)."""
+def test_shuffle_join_3shard_mesh_skew_and_overflow_poisoning():
+    """On a real 3-device mesh with every key hashing to owner 0: the
+    shuffle-lowered plan is bit-equal to mesh=None.  Eager compiles see
+    the concrete keys and size buckets from the real histogram, so even
+    slack 1.0 cannot overflow (the skew-adaptive capacities); under jit
+    the keys are traced, the slack sizing comes back, and overflowing
+    buckets poison the join probabilities with NaN (accounted, never
+    silently wrong)."""
     from conftest import run_sub
     run_sub("""
 import jax, jax.numpy as jnp, numpy as np
@@ -487,9 +520,16 @@ ref = compile_plan(plan, None)(tables)
 ok = compile_plan(plan, mesh, join_gather_budget=1)(tables)
 for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(ok)):
     assert np.array_equal(np.asarray(a), np.asarray(b))
-# slack 1.0 -> bucket capacity ceil(local/3) < the skewed demand
-bad = compile_plan(plan, mesh, join_gather_budget=1,
-                   shuffle_slack=1.0)(tables)
+# eager + concrete keys: histogram-sized buckets absorb the skew even at
+# slack 1.0 (no overflow, bit-equal)
+adaptive = compile_plan(plan, mesh, join_gather_budget=1,
+                        shuffle_slack=1.0)(tables)
+for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(adaptive)):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+# jit: traced keys -> slack 1.0 buckets ceil(local/3) < the skewed
+# demand -> overflow NaN-poisons
+bad = jax.jit(compile_plan(plan, mesh, join_gather_budget=1,
+                           shuffle_slack=1.0))(tables)
 assert np.isnan(np.asarray(bad.prob)).all(), np.asarray(bad.prob)
 print("OK")
 """, devices=3)

@@ -111,11 +111,14 @@ def test_all_queries_mesh_bit_equal_any_shard_count(mesh_equiv, devices):
     """The determinism contract on 2-, 3- and 4-shard meshes for ALL five
     TPC-H queries (aggregate mode), both with the default gather-join
     lowering and with a tiny join_gather_budget that lowers every
-    over-budget FK join to the shuffle-partitioned strategy — one
+    over-budget FK join to a hash-exchange strategy — pinned to the
+    unfused ShuffleJoin + shuffle-home + PartialAgg path with
+    copartition=False (the cost model would otherwise fuse q3's GROUP
+    BY; the fused pipeline has its own dedicated parity test) — one
     subprocess per shard count."""
     mesh_equiv("""
 db = tpch.generate(n_orders=48, seed=3)
-shuffle = dict(join_gather_budget=4)
+shuffle = dict(join_gather_budget=4, copartition=False)
 pairs = []
 for qname, fn in sorted(tpch.QUERIES.items()):
     ref = fn(db, "aggregate")
@@ -123,6 +126,43 @@ for qname, fn in sorted(tpch.QUERIES.items()):
     pairs.append((qname + "/shuffle", ref,
                   fn(db, "aggregate", mesh=mesh, plan_opts=shuffle)))
 """, devices=devices)
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("devices", [2, 3, 4])
+def test_q3_q18_copartitioned_bit_equal_zero_roundtrips(devices):
+    """The fused shuffle -> aggregate pipeline on real queries: Q3 with a
+    per-join budget that hash-exchanges the orders join (the GROUP BY
+    keys on l_orderkey, so the cost model fuses it) and Q18 with
+    ``agg_shuffle_budget`` repartitioning the lineitem aggregation — both
+    BIT-IDENTICAL to the single-device compile on 2-, 3- and 4-shard
+    meshes, with ZERO shuffle_back round-trips (asserted via the
+    collective counter) and the one-psum partitioned merge."""
+    from conftest import run_sub
+    run_sub("""
+import jax, numpy as np
+from repro.compat import make_mesh
+from repro.core import enable_x64
+enable_x64()
+from repro.db import distributed as dist
+from repro.db import physical as phys, tpch
+mesh = make_mesh((__D__,), ("data",))
+db = tpch.generate(n_orders=48, seed=3)
+for qname, kwargs, opts in (("q3", dict(order_join_budget=4), {}),
+                            ("q18", {}, dict(agg_shuffle_budget=4))):
+    fn = tpch.QUERIES[qname]
+    for mode in ("group_confidence", "aggregate"):
+        ref = fn(db, mode, **kwargs)
+        dist.reset_collective_counts()
+        got = fn(db, mode, mesh=mesh, plan_opts=opts, **kwargs)
+        c = dict(dist.COLLECTIVE_COUNTS)
+        assert c.get("shuffle_back", 0) == 0, (qname, mode, c)
+        assert c.get("merge_psum", 0) >= 1, (qname, mode, c)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+                (qname, mode)
+print("FUSED OK")
+""".replace("__D__", str(devices)), devices=devices)
 
 
 def test_deterministic_db_gives_deterministic_answers():

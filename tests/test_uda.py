@@ -122,6 +122,48 @@ def test_minmax_parity(name, monoid, seed):
                         (name, seed, gi, outcome)
 
 
+def test_minmax_merge_run_fold_keeps_tail_tight():
+    """§V-B.2 under heavy duplication: the SAME kappa values in both
+    merge inputs used to occupy 2x the buffer slots (split slots competed
+    for capacity and inflated the truncation tail); the in-network run
+    fold collapses them, so the merged state keeps the full support and
+    the tail stays exactly the beyond-support mass."""
+    k = 4
+    u = uda.MinMax(kappa=k)
+    p = jnp.full((6,), 0.5, default_float())
+    v = jnp.asarray([0, 1, 2, 3, 4, 5], default_float())
+    a = uda.accumulate({"u": u}, p, v, None, max_groups=1)["u"]
+    b = uda.accumulate({"u": u}, p, v, None, max_groups=1)["u"]
+    st = u.merge(a, b)
+    vals = np.asarray(st.values[0])
+    fin = vals[np.isfinite(vals)]
+    assert fin.size == np.unique(fin).size == k     # runs folded, full k
+    np.testing.assert_allclose(np.asarray(st.log_none[0]),
+                               2 * np.asarray(a.log_none[0]), rtol=1e-12)
+    _, mass, p_tail = u.finalize(st)
+    # tail = P(min >= 4) over BOTH copies = (1-p)^(2 tuples per value * 4)
+    assert float(p_tail[0]) == pytest.approx(0.25 ** k, abs=1e-12)
+    assert float(mass.sum() + p_tail[0]) == pytest.approx(1.0, abs=1e-12)
+
+
+def test_minmax_merge_with_init_is_identity():
+    """merge(init, x) == x bitwise — the invariant the partitioned
+    (HashPartitioned) merge leans on: non-owner shards contribute exact
+    init states, so the cross-owner fold must preserve the owner's state
+    bit for bit (db.distributed.partitioned_merge)."""
+    import jax
+    r = np.random.default_rng(2)
+    u = uda.MinMax(kappa=8)
+    p = jnp.asarray(r.uniform(0.05, 0.95, 40), default_float())
+    v = jnp.asarray(r.integers(1, 12, 40), default_float())
+    g = jnp.asarray(r.integers(0, G, 40))
+    x = uda.accumulate({"u": u}, p, v, g, max_groups=G)["u"]
+    init = u.init(G, default_float())
+    for m in (u.merge(init, x), u.merge(x, init)):
+        for a, b in zip(jax.tree.leaves(x), jax.tree.leaves(m)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_minmax_truncation_tail():
     """kappa smaller than the support: dropped mass lands in the tail and
     the kept+tail masses stay a distribution (§V-B.2)."""
