@@ -70,11 +70,63 @@ def bench(n_orders: int = 4000, repeat: int = 3, mesh=None):
     return rows
 
 
+def bench_streamed(n_orders: int = 16000, budget: int = 2000,
+                   repeat: int = 3, mesh=None):
+    """Out-of-core rows: Q1/Q6 aggregate-mode with lineitem (``4 *
+    n_orders`` rows) HOST-side and streamed in budget-sized waves — the
+    regime past the device-residency wall, where the resident compile
+    would need the whole table on the device.  The compiled fn is built
+    ONCE per query and reused across repeats (the streamed path is an
+    eager host wave loop; its per-wave jit cache lives in the compile
+    closure), and the canonical chunk grid scales with the table
+    (~500-row chunks) so the wave size tracks the budget.  The plans are
+    the Q1/Q6 aggregate shapes built inline (the ``tpch.q1``/``q6``
+    helpers compile per call)."""
+    from repro.db.plans import GroupAgg, Map, Scan, Select, compile_plan
+    from repro.db.table import HostTable
+
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    n_li = db.lineitem.capacity
+    tables = dict(db.tables())
+    tables["lineitem"] = HostTable.from_table(db.lineitem)
+    opts = dict(device_row_budget=budget,
+                canonical_chunks=max(8, n_li // 500))
+    q1_sel = Select(Scan("lineitem"),
+                    lambda t: t["l_shipdate"] <= tpch.DAY0_1995 + 500)
+    q6_val = Map(Select(
+        Scan("lineitem"),
+        lambda t: (t["l_shipdate"] >= tpch.DAY0_1995 - 400)
+        & (t["l_shipdate"] < tpch.DAY0_1995)
+        & (t["l_discount"] >= 5) & (t["l_discount"] <= 7)
+        & (t["l_quantity"] < 24)), "q6_value",
+        lambda t: t["l_quantity"] * t["l_discount"])
+    plans = {
+        "q1": GroupAgg(q1_sel, ("l_returnflag", "l_linestatus"),
+                       "l_quantity", "SUM", 8, "normal",
+                       extra=(("price", "l_extendedprice", "SUM", "normal"),
+                              ("count", "", "COUNT", "normal"))),
+        "q6": GroupAgg(q6_val, (), "q6_value", "SUM", 1, "normal",
+                       extra=(("cumulants", "q6_value", "SUM",
+                               "cumulants"),)),
+    }
+    tag = "/mesh" if mesh is not None else ""
+    rows = []
+    for qname, plan in plans.items():
+        fn = compile_plan(plan, mesh, **opts)
+        t0 = _time(fn, tables, repeat)
+        rows.append((f"fig7/{qname}/aggregate_streamed{tag}", t0 * 1e6,
+                     f"n_li={n_li},budget={budget}"))
+    return rows
+
+
 if __name__ == "__main__":
     import sys
     mesh = None
     if "--mesh" in sys.argv:   # sharded frontend over the host devices
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh()
-    for name, v, extra in bench(mesh=mesh):
+    rows = bench(mesh=mesh)
+    if "--streamed" in sys.argv:   # out-of-core host->device wave rows
+        rows += bench_streamed(mesh=mesh)
+    for name, v, extra in rows:
         print(f"{name},{v:.1f},{extra}")

@@ -16,7 +16,11 @@ workload (with the shuffle_back round-trips saved, gated structurally).
 The baseline JSON additionally records the static replicated-vs-sharded
 peak rows/device accounting of the frontend AND the gather-vs-shuffle
 build-side rows/device of a join whose build side exceeds the gather
-budget (the ShuffleJoin memory contract).
+budget (the ShuffleJoin memory contract).  The out-of-core streamed path
+is gated twice: the double-buffered vs synchronous wave-transfer wall
+times (the overlap win, floored on multi-core hosts) and the static
+streamed-vs-resident peak rows/device at 1x and 8x data — the streamed
+peak must stay FLAT as the table grows 8x past the device row budget.
 
     PYTHONPATH=src python benchmarks/smoke.py [--mesh] [--check] [--update]
 
@@ -52,7 +56,25 @@ from repro.db.plans import (GroupAgg, ReweightGreater, Scan, Select,
 BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "BENCH_smoke_baseline.json")
 TOLERANCE = 1.3             # per-method regression gate (cur <= tol * base)
+STREAM_TOLERANCE = 2.0      # streamed host-loop rows: the eager wave loop
+                            # (host slicing + per-wave dispatch) has far
+                            # higher run-to-run variance than the pure
+                            # device rows, especially on 1-core hosts
 MIN_EXACT_SPEEDUP = 5.0     # grouped exact vs per-group scalar loop floor
+MIN_STREAM_OVERLAP = 1.2    # sync / double-buffered streamed-pass floor
+
+
+def _stream_overlap_floor() -> float:
+    """The overlap gate needs a second core: host slab assembly and the
+    XLA compute pool can only run concurrently on multi-core hosts.  On a
+    single core the double-buffered pipeline cannot beat the serialised
+    loop — and its wall time swings with allocator state — so the gate
+    degrades to a catastrophe check (>= 0.3x, 'double buffering is not
+    pathologically broken') while the overlap_win row is still recorded
+    for machines where the win is physical.  The double_buffer timing row
+    is gated ONLY through this ratio (relative to the same-run sync row),
+    never against the baseline."""
+    return MIN_STREAM_OVERLAP if (os.cpu_count() or 1) > 1 else 0.3
 
 
 def _plans(max_groups: int = 256):
@@ -262,6 +284,73 @@ def bench_copartitioned_agg(n_orders: int = 1000, repeat: int = 5):
     return rows
 
 
+def bench_streamed(n_orders: int = 8000, repeat: int = 5):
+    """Out-of-core streamed aggregation: the Q1-shaped pass over a host
+    lineitem 16x the per-device row budget, double-buffered vs synchronous
+    transfer.  ``compile_plan`` is called ONCE per variant and the
+    compiled fn reused (the streamed path is an eager host wave loop
+    whose per-wave jit cache lives in the compile closure), and the
+    canonical chunk grid is scaled with the table (csz ~= 500 rows) so the
+    wave size tracks the budget, not the table.  Alongside the wall
+    times, reports the sync/double-buffer ratio — the overlap win the
+    transfer pipeline exists for — which ``--check`` gates against
+    ``MIN_STREAM_OVERLAP``."""
+    from repro.db.table import HostTable
+
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    n_li = db.lineitem.capacity                       # n_orders * 4 rows
+    chunks = max(8, n_li // 500)
+    budget = 2000                                     # waves of 2k rows
+    li = Select(Scan("lineitem"), lambda t: t["l_shipdate"] > tpch.DAY0_1995)
+    plan = GroupAgg(li, ("l_returnflag", "l_linestatus"), "l_quantity",
+                    "SUM", 8, "normal")
+    tables = dict(db.tables())
+    tables["lineitem"] = HostTable.from_table(db.lineitem)
+    rows, times = [], {}
+    for tag, db_buf in (("double_buffer", True), ("sync", False)):
+        fn = compile_plan(plan, None, device_row_budget=budget,
+                          canonical_chunks=chunks, stream_double_buffer=db_buf)
+        times[tag] = _time(fn, (tables,), repeat)
+        rows.append((f"smoke/streamed/{tag}/1dev", times[tag] * 1e6,
+                     f"n_li={n_li},budget={budget}"))
+    rows.append(("smoke/streamed/overlap_win",
+                 times["sync"] / max(times["double_buffer"], 1e-12),
+                 f"sync={times['sync'] * 1e6:.1f}us,"
+                 f"db={times['double_buffer'] * 1e6:.1f}us"))
+    return rows
+
+
+def streamed_layout(n_orders: int = 1000, budget: int = 2000,
+                    csz: int = 500) -> dict:
+    """Static peak rows/device of the streamed scan at 1x and 8x data:
+    the resident compile keeps the whole padded table on the device; the
+    streamed compile keeps two double-buffered wave slabs sized by the
+    budget.  The canonical chunk grid scales with the table (fixed
+    ~``csz``-row chunks) so the wave slab — and the streamed peak — is
+    FLAT under 8x table growth, while the resident footprint grows 8x.
+    Computed from the lowered physical plan's modeled cost and gated
+    structurally and against the baseline by ``--check``."""
+    from repro.db import physical as phys
+
+    peaks = {}
+    for scale in (1, 8):
+        n_li = n_orders * 4 * scale
+        chunks = max(8, n_li // csz)
+        cap = shard_capacity(n_li, chunks, 1)
+        plan = GroupAgg(Select(Scan("lineitem"),
+                               lambda t: t["l_shipdate"] > tpch.DAY0_1995),
+                        ("l_returnflag", "l_linestatus"), "l_quantity",
+                        "SUM", 8, "normal")
+        lowered = phys.lower_plan(plan, {"lineitem": cap}, n_shards=1,
+                                  sharded=False, canonical_chunks=chunks,
+                                  device_row_budget=budget)
+        sc = lowered.child.child.child
+        assert isinstance(sc, phys.StreamedScan), phys.explain(lowered)
+        peaks[scale] = {"resident_rows": cap,
+                        "streamed_peak_rows": int(sc.cost.peak_rows)}
+    return {"x1": peaks[1], "x8": peaks[8], "budget": budget}
+
+
 def _check(rows) -> int:
     if not os.path.exists(BASELINE_PATH):
         print(f"FAIL: no baseline at {BASELINE_PATH}; run --update first")
@@ -291,9 +380,17 @@ def _check(rows) -> int:
                   f"{TOLERANCE} x shuffle_home {home:.1f}us (the fused "
                   "pipeline stopped beating shuffle + gather-home)")
             failures += 1
+    overlap = values.get("smoke/streamed/overlap_win")
+    if overlap is not None and overlap < _stream_overlap_floor():
+        print(f"FAIL streamed: overlap win {overlap:.2f}x < "
+              f"{_stream_overlap_floor()}x floor (double-buffered transfer "
+              "stopped hiding the host->device copy)")
+        failures += 1
     for name, value, _ in rows:
-        if name == "smoke/copartitioned_agg/roundtrips_saved":
-            continue                     # structural row, gated above
+        if name in ("smoke/copartitioned_agg/roundtrips_saved",
+                    "smoke/streamed/overlap_win",
+                    "smoke/streamed/double_buffer/1dev"):
+            continue                     # ratio/structural rows, gated above
         if name.startswith("smoke/exact_speedup"):
             if value < MIN_EXACT_SPEEDUP:
                 print(f"FAIL {name}: speedup {value:.2f}x < "
@@ -303,8 +400,10 @@ def _check(rows) -> int:
         if name not in base:
             print(f"WARN {name}: not in baseline (run --update to record)")
             continue
-        if value > TOLERANCE * base[name]:
-            print(f"FAIL {name}: {value:.1f}us > {TOLERANCE} x "
+        tol = STREAM_TOLERANCE if name.startswith("smoke/streamed/") \
+            else TOLERANCE
+        if value > tol * base[name]:
+            print(f"FAIL {name}: {value:.1f}us > {tol} x "
                   f"{base[name]:.1f}us baseline")
             failures += 1
     base_layout = base_all.get("peak_rows_per_device")
@@ -334,13 +433,34 @@ def _check(rows) -> int:
               f"{base_shuffle} (the ShuffleJoin's O(build/shards) "
               "accounting changed)")
         failures += 1
+    base_stream = base_all.get("streamed_rows_per_device")
+    stream = streamed_layout()
+    if stream["x8"]["streamed_peak_rows"] != stream["x1"]["streamed_peak_rows"]:
+        print(f"FAIL streamed layout: {stream} — streamed peak rows are "
+              "not flat under 8x table growth (the wave slab is tracking "
+              "the table, not the budget)")
+        failures += 1
+    if stream["x8"]["streamed_peak_rows"] >= stream["x8"]["resident_rows"]:
+        print(f"FAIL streamed layout: {stream} — streaming no longer "
+              "beats keeping the table resident")
+        failures += 1
+    if base_stream is None:
+        print("WARN streamed layout: no streamed_rows_per_device in "
+              "baseline (run --update to record)")
+    elif (stream["x8"]["streamed_peak_rows"]
+          > base_stream["x8"]["streamed_peak_rows"]):
+        print(f"FAIL streamed layout: {stream} regressed vs baseline "
+              f"{base_stream} (the double-buffered O(wave) residency "
+              "accounting changed)")
+        failures += 1
     print("CHECK " + ("FAILED" if failures else "PASSED")
           + f" ({len(rows)} rows, tol {TOLERANCE}x)")
     return 1 if failures else 0
 
 
 def _update(rows):
-    skip = ("smoke/exact_speedup", "smoke/copartitioned_agg/roundtrips")
+    skip = ("smoke/exact_speedup", "smoke/copartitioned_agg/roundtrips",
+            "smoke/streamed/overlap_win", "smoke/streamed/double_buffer")
     recorded = {name: us for name, us, _ in rows
                 if not name.startswith(skip)}
     saved = {name: v for name, v, _ in rows
@@ -349,6 +469,7 @@ def _update(rows):
         json.dump({"tolerance": TOLERANCE, "repeat": "best-of",
                    "peak_rows_per_device": frontend_layout(),
                    "shuffle_join_rows_per_device": shuffle_layout(),
+                   "streamed_rows_per_device": streamed_layout(),
                    "copartitioned_roundtrips_saved":
                        int(min(saved.values())) if saved else 1,
                    "rows": recorded}, f, indent=2, sort_keys=True)
@@ -361,6 +482,7 @@ def main() -> int:
     rows += bench_sharded_frontend()
     rows += bench_shuffle_join()
     rows += bench_copartitioned_agg()
+    rows += bench_streamed()
     rows += bench_exact_speedup()
     if "--mesh" in sys.argv and len(jax.devices()) > 1:
         from repro.launch.mesh import make_host_mesh

@@ -812,6 +812,47 @@ def accumulate_chunk_states(udas, probs, values=None, gids=None, *,
     return parts
 
 
+class ChunkStateAccumulator:
+    """Cross-wave chunk-state collection: the out-of-core entry point of
+    the canonical chunk contract.
+
+    The streamed executor (``db/plans.py``) computes per-canonical-chunk
+    partial states one WAVE at a time — each wave covers a set of chunk
+    slots and yields their state dicts via :func:`accumulate_chunk_states`
+    + a cross-shard gather.  This accumulator files each wave's states
+    under their global canonical chunk ids, drops padding slots (ids at or
+    past ``num_chunks`` — the shard-alignment and wave-alignment chunks,
+    whose states are pure identities), and :meth:`fold` finishes the ONE
+    fixed :func:`tree_fold` over exactly the ``num_chunks`` canonical
+    leaves.  Because each chunk's state is computed from that chunk's rows
+    alone and the fold tree depends only on the leaf count, the result is
+    bit-identical to :func:`accumulate_chunked` on the resident table —
+    for ANY wave schedule.
+    """
+
+    def __init__(self, udas: dict, num_chunks: int):
+        self.udas = udas
+        self.num_chunks = num_chunks
+        self._chunks: list = [None] * num_chunks
+
+    def add_wave(self, chunk_ids, parts: list) -> None:
+        """File one wave's per-chunk state dicts under their global
+        canonical chunk ids (parallel lists; waves partition the slots, so
+        each canonical chunk arrives exactly once)."""
+        for g, st in zip(chunk_ids, parts):
+            if g < self.num_chunks:
+                assert self._chunks[g] is None, f"chunk {g} seen twice"
+                self._chunks[g] = st
+
+    def fold(self) -> dict:
+        """The canonical fold over all collected chunks — call after the
+        last wave."""
+        missing = [g for g, st in enumerate(self._chunks) if st is None]
+        assert not missing, f"canonical chunks never streamed: {missing}"
+        return {name: tree_fold(u, [c[name] for c in self._chunks])
+                for name, u in self.udas.items()}
+
+
 def accumulate_chunked(udas, probs, values=None, gids=None, *,
                        max_groups: int = 1, num_chunks: int = 8,
                        block: int = 8192, kernel: str = "auto",

@@ -78,6 +78,10 @@ class CostModel:
     copartition: object = "auto"  # True force / False never / "auto" cost
     agg_shuffle_budget: int | None = None
     shuffle_slack: float = 4.0
+    #: out-of-core override: max resident rows per device for one scan.
+    #: A Scan whose per-shard rows exceed it lowers to StreamedScan and
+    #: its table stays host-side (None = everything device-resident).
+    device_row_budget: int | None = None
 
     def total(self, c: Cost) -> float:
         """Collapse a Cost to one comparable number (bytes-equivalent)."""
@@ -189,6 +193,74 @@ def partitioned_agg(m: CostModel, buffer_rows: int, chunks: int,
     return Cost(bytes_moved=bytes_moved,
                 peak_rows=chunks * (add_elems + fold_elems) + buffer_rows,
                 flops=buffer_rows * row_flops)
+
+
+# ----------------------------------------------------- out-of-core scans
+@dataclasses.dataclass(frozen=True)
+class WaveSchedule:
+    """Static wave plan of one :class:`~repro.db.physical.StreamedScan`.
+
+    The streamed executor ships the host table to the mesh as ``n_waves``
+    uniform slabs of ``chunks_per_wave`` canonical-chunk slots
+    (``wave_rows`` rows globally, ``wave_rows / n_shards`` per device);
+    the host table is padded to ``padded_capacity`` rows so EVERY wave —
+    ragged tail included — has the same shape, which keeps one compiled
+    wave function and makes per-chunk UDA states independent of the wave
+    size (the bit-identical-streaming contract).  Frozen + hashable so it
+    rides on the physical node and keys the executor's jit cache.
+    """
+    chunk_rows: int          # csz: rows per canonical chunk slot
+    local_chunks_per_wave: int
+    n_waves: int
+    n_shards: int
+
+    @property
+    def chunks_per_wave(self) -> int:
+        return self.local_chunks_per_wave * self.n_shards
+
+    @property
+    def wave_rows(self) -> int:
+        return self.chunks_per_wave * self.chunk_rows
+
+    @property
+    def padded_capacity(self) -> int:
+        return self.n_waves * self.wave_rows
+
+
+def wave_schedule(chunk_rows: int, chunks: int, shards: int,
+                  budget: int | None,
+                  override_chunks: int | None = None) -> WaveSchedule:
+    """Pick the wave size for a streamed scan whose canonical chunk grid
+    is ``chunks`` slots of ``chunk_rows`` rows.
+
+    Double buffering holds 2 slabs per device, so the largest wave that
+    fits the per-device row ``budget`` has ``budget // (2 * chunk_rows)``
+    local chunk slots; clamped to [1, local_slots].  ``override_chunks``
+    (global chunk slots per wave, rounded up to the shard count) bypasses
+    the budget — the test hook for pinning {1 chunk, ragged tail,
+    whole-table} schedules."""
+    csz = chunk_rows
+    local_slots = -(-chunks // shards)            # chunk slots per shard
+    if override_chunks is not None:
+        local_cpw = max(1, -(-override_chunks // shards))
+    else:
+        local_cpw = max(1, (budget or 0) // (2 * csz))
+    local_cpw = min(local_cpw, local_slots)
+    n_waves = -(-local_slots // local_cpw)
+    return WaveSchedule(chunk_rows=csz, local_chunks_per_wave=local_cpw,
+                        n_waves=n_waves, n_shards=shards)
+
+
+def streamed_scan(m: CostModel, rows: int, wave_rows: int,
+                  n_cols: int) -> Cost:
+    """Out-of-core scan: every row crosses host→device once per streamed
+    pass (column + p + valid payload, no (n-1)/n discount — it is a
+    transfer, not a collective; the executor's group-discovery pass
+    re-streams, the model charges the accumulate pass), and residency is
+    two double-buffered slabs per device instead of the table."""
+    w = n_cols + 2
+    return Cost(bytes_moved=rows * w * m.elem_bytes,
+                peak_rows=2 * (wave_rows // max(1, m.n_shards)) * w)
 
 
 def repartition(m: CostModel, bucket: int, n_carry: int) -> Cost:

@@ -520,7 +520,55 @@ def allgather_merge(udas: dict, parts: list, axis_names,
     return out
 
 
-def partitioned_merge(udas: dict, parts: list, axis_names) -> dict:
+def gather_chunk_states(udas: dict, parts: list, axis_names) -> list:
+    """All-gather per-chunk partial states WITHOUT folding them: the
+    per-wave collective of the streamed executor.
+
+    ``parts`` is this shard's list of per-chunk state dicts for ONE wave;
+    the return value is the global list (shard-major = the wave's chunk
+    slot order) of per-chunk state dicts, replicated on every shard.  The
+    caller (plans.run's streamed wave loop) maps each entry to its
+    canonical chunk slot and folds ONCE after the last wave, so the fold
+    consumes exactly the leaves — in exactly the tree — of the resident
+    ``allgather_merge`` / ``accumulate_chunked`` path."""
+    axis_names = tuple(axis_names)
+    _count("gather_chunks")
+    states: list | None = None
+    for name, u in udas.items():
+        mine = [p[name] for p in parts]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *mine)
+        g = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axis_names, axis=0, tiled=True),
+            stacked)
+        total = jax.tree.leaves(g)[0].shape[0]
+        if states is None:
+            states = [dict() for _ in range(total)]
+        for c in range(total):
+            states[c][name] = jax.tree.map(lambda x, c=c: x[c], g)
+    return states or []
+
+
+def _scatter_sum_gather(state, axis_names, n_shards: int):
+    """psum via reduce-scatter + all-gather: each leaf is split along its
+    leading (group) axis, every shard sums ONLY its 1/n_shards stripe, and
+    the gather reassembles the full state — (2/n_shards) x the psum's
+    per-device payload.  Bit-identical to the psum here because every
+    element is exact init-zero on all shards but its group's owner, so
+    whatever the summation order, it adds x + 0 + ... + 0 = x."""
+    def leaf(x):
+        g = x.shape[0]
+        pad = (-g) % n_shards
+        if pad:
+            x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+        y = jax.lax.psum_scatter(x, axis_names, scatter_dimension=0,
+                                 tiled=True)
+        y = jax.lax.all_gather(y, axis_names, axis=0, tiled=True)
+        return y[:g] if pad else y
+    return jax.tree.map(leaf, state)
+
+
+def partitioned_merge(udas: dict, parts: list, axis_names,
+                      n_shards: int | None = None) -> dict:
     """The HashPartitioned Merge (PartitionedAgg): combine per-owner
     canonical-chunk states into the replicated final state.
 
@@ -534,10 +582,13 @@ def partitioned_merge(udas: dict, parts: list, axis_names) -> dict:
     canonical fold for the owned groups, and every other shard holds
     exact init-zeros there.  The cross-shard merge is then
 
-    * additive states: ONE psum of the folded state — x + 0 + ... + 0 is
-      bitwise x, so the result is BIT-IDENTICAL to the RowBlocked
-      ``allgather_merge`` fold (and to mesh=None), while moving
-      O(state) bytes instead of O(num_chunks * state);
+    * additive states: ONE reduce-scatter onto the group owners + one
+      all-gather of the owner stripes (``n_shards`` given; a plain psum
+      else) — x + 0 + ... + 0 is bitwise x whichever shard sums it, so
+      the result is BIT-IDENTICAL to the RowBlocked ``allgather_merge``
+      fold (and to mesh=None), while moving O(state / n_shards) bytes
+      per leg instead of the psum's O(state) — each owner only ever sums
+      the stripe it is about to broadcast;
     * non-additive states (MinMax): one all-gather + the owner-order
       merge fold — ``MinMax.merge(init, x) == x`` bitwise (the run-fold
       merge preserves singleton runs exactly), so the same argument
@@ -552,11 +603,13 @@ def partitioned_merge(udas: dict, parts: list, axis_names) -> dict:
     out = {}
     for name, u in udas.items():
         folded = uda.tree_fold(u, [p[name] for p in parts])
-        # reduce_data IS the right cross-shard combine for both shapes:
-        # the additive default psums, MinMax overrides it with the
-        # all-gather + owner-order merge fold.
         _count("merge_psum" if u.additive else "merge_gather")
-        out[name] = u.reduce_data(folded, axis_names)
+        if u.additive and n_shards is not None and n_shards > 1:
+            out[name] = _scatter_sum_gather(folded, axis_names, n_shards)
+        else:
+            # reduce_data for both shapes: the additive default psums,
+            # MinMax overrides it with the all-gather + merge fold.
+            out[name] = u.reduce_data(folded, axis_names)
     return out
 
 

@@ -58,10 +58,56 @@ Exchange operators move between the points:
                                                       — ONLY ShuffleJoin
                                                       pays this leg)
 
+Residency and the wave-schedule lattice
+---------------------------------------
+Partitioning says WHERE on the mesh a row lives; residency says WHEN it
+is on the mesh at all.  Orthogonal to the placement lattice, every base
+scan sits at one of three points of a residency lattice, ordered by
+per-device footprint:
+
+    Resident       the whole (padded) table is on the mesh for the whole
+                   query — ShardScan; footprint rows/shards.  Top of the
+                   lattice: every strategy below it is legal.
+    Streamed       the table lives HOST-side and visits the mesh as
+                   ``n_waves`` uniform slabs of ``chunks_per_wave``
+                   canonical-chunk slots — StreamedScan; footprint
+                   2 slabs/device (double buffer) + the aggregation
+                   state, INDEPENDENT of the table size.
+    (Absent)       bottom: a table no operator reads — never planned.
+
+``cost.wave_schedule`` picks the point and the wave size from the
+``device_row_budget`` override: a scan whose per-shard rows exceed the
+budget streams, with the largest wave whose TWO slabs fit the budget
+(``local_chunks_per_wave = budget // (2 * chunk_rows)``, clamped to
+[1, chunk slots per shard]).  Waves are aligned to the canonical chunk
+grid, so each wave's slab is a run of whole chunk slots and the host
+table is padded until every wave has the same shape — one compiled wave
+function, and per-chunk UDA states whose values cannot depend on the
+wave size.  That is the streaming exactness argument in one line: the
+canonical-chunk contract already computes each chunk's state from that
+chunk's rows alone and merges chunk states in ONE fixed tree
+(``uda.tree_fold``), so slicing the chunk sequence into waves changes
+*when* a chunk state is produced, never *what* is folded — results are
+bit-identical to resident execution for ANY wave size.
+
+Streaming restricts the strategy menu to the candidates whose per-wave
+semantics are the resident ones verbatim: joins below a streamed scan
+lower to GatherJoin (the resident build side is replicated once; every
+wave probes it locally) and aggregations to PartialAgg (per-wave,
+per-chunk Accumulate; the executor gathers each wave's chunk states and
+folds ONCE after the last wave).  A build side over the budget raises —
+only the probe side may stream.
+
 Node zoo (the executor in plans.py interprets these inside shard_map):
 
     ShardScan(name)                  base table; RowBlocked on a mesh,
                                      Replicated single-device
+    StreamedScan(name, schedule)     out-of-core base table: host-side
+                                     rows, shipped as schedule.n_waves
+                                     chunk-aligned slabs, double-buffered
+                                     (device_put of wave k+1 overlaps the
+                                     accumulate of wave k); each slab is
+                                     RowBlocked on the mesh
     PhysSelect / PhysMap             elementwise on the local block;
                                      preserve the child's partitioning
     GatherJoin(l, r, ...)            broadcast FK join: build side
@@ -131,6 +177,32 @@ Worked example — TPC-H Q3 (revenue per order, GROUP BY l_orderkey) on a
     :func:`repro.db.cost.copartitioned_join` +
     :func:`repro.db.cost.partitioned_agg` price strictly fewer bytes.
 
+Worked example — streamed TPC-H Q1 (SUM(l_quantity) GROUP BY returnflag,
+linestatus) on a 2-shard mesh, lineitem at 64k rows against
+``device_row_budget=8192``::
+
+    MergeAgg[groupagg] :: Replicated
+      PartialAgg(keys=[l_returnflag, l_linestatus], ...) :: RowBlocked
+        Select :: RowBlocked              (shipdate filter, per wave)
+          StreamedScan(lineitem, rows=65536, waves=4x2chunks@8192rows)
+              :: RowBlocked cost{bytes=1572864, rows=49152, flops=0}
+
+    65536 rows / 8 canonical chunks = 8192-row chunk slots; the budget
+    holds 2 slabs of 8192 rows per device, so each wave carries ONE
+    chunk slot per shard (2 globally) and the schedule needs 4 waves.
+    The executor runs two passes over the host table: wave pass A
+    discovers the global group-code table (per-wave ``unique`` codes,
+    merged incrementally — exact under hierarchical merging), then wave
+    pass B re-streams the slabs, accumulates per-chunk UDA states with
+    the final group ids, all-gathers each wave's chunk states, and after
+    wave 4 folds all 8 canonical chunk states in the same
+    ``uda.tree_fold`` tree the resident compile uses — bit-identical
+    output, with peak device residency 2 slabs + the (G, 2) sum state
+    instead of the 64k-row table.  While wave k's accumulate runs on
+    device, wave k+1's slab is already crossing host→device (async
+    dispatch double-buffering); ``explain`` prints the modeled one-way
+    transfer bytes and the 2-slab peak rows/device on the StreamedScan.
+
 Bit-reproducibility of the fused pipeline: each probe row ships its
 canonical-chunk id; the owner accumulates one compound (chunk, group)
 scatter pass whose received rows arrive in (sender, rank) = global row
@@ -195,6 +267,21 @@ class ShardScan(PhysNode):
     name: str
     part: object
     rows: int              # global (padded) capacity of the base table
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamedScan(PhysNode):
+    """Out-of-core base table: rows live HOST-side and reach the mesh as
+    ``schedule.n_waves`` canonical-chunk-aligned slabs (see the wave
+    lattice in the module docstring).  ``part`` is the placement of each
+    wave's slab (RowBlocked on a mesh); ``rows`` is the global chunk-grid
+    capacity of the host table; ``cost`` prices the one-way host→device
+    bytes and the 2-slab double-buffered residency."""
+    name: str
+    part: object
+    rows: int
+    schedule: C.WaveSchedule
+    cost: object = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -348,6 +435,15 @@ def concrete_bucket_capacity(table, key: str, n_shards: int) -> int | None:
     return max(1, peak)
 
 
+def _contains_streamed(node) -> bool:
+    """Does any base scan of this physical subtree stream from host?"""
+    if isinstance(node, StreamedScan):
+        return True
+    return any(_contains_streamed(c) for c in
+               (getattr(node, "child", None), getattr(node, "left", None),
+                getattr(node, "right", None)) if c is not None)
+
+
 def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
                join_gather_budget: int = 1 << 20,
                shuffle_slack: float = 4.0,
@@ -355,7 +451,9 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
                agg_shuffle_budget: int | None = None,
                canonical_chunks: int = 8,
                model: C.CostModel | None = None,
-               tables: dict | None = None) -> PhysNode:
+               tables: dict | None = None,
+               device_row_budget: int | None = None,
+               stream_wave_chunks: int | None = None) -> PhysNode:
     """Lower a logical plan to the physical IR: enumerate physical
     candidates per node, cost them with :mod:`repro.db.cost`, pick the
     cheapest.
@@ -374,7 +472,17 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
       join may not gather; False disables it;
     * ``agg_shuffle_budget`` — when set, a single-key aggregation over
       more input rows must Repartition + PartitionedAgg instead of
-      PartialAgg (None keeps PartialAgg, the PR-4 behaviour).
+      PartialAgg (None keeps PartialAgg, the PR-4 behaviour);
+    * ``device_row_budget`` — out-of-core: a Scan whose per-shard rows
+      exceed it lowers to :class:`StreamedScan` with a
+      :class:`repro.db.cost.wave_schedule`-chosen wave size; subtrees
+      containing a streamed scan restrict joins to GatherJoin (the
+      resident build side is gathered once, each wave probes it) and
+      aggregations to PartialAgg — the strategies whose per-wave
+      semantics are the resident ones verbatim.  A BUILD side over the
+      budget raises (only the probe side may stream);
+      ``stream_wave_chunks`` pins the wave size (global chunk slots per
+      wave) for tests.
 
     ``model`` overrides the knob-derived CostModel wholesale (pure
     estimates: ``CostModel(gather_budget=None)``).  ``canonical_chunks``
@@ -390,7 +498,7 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
     m = model if model is not None else C.CostModel(
         n_shards=n_shards, gather_budget=join_gather_budget,
         copartition=copartition, agg_shuffle_budget=agg_shuffle_budget,
-        shuffle_slack=shuffle_slack)
+        shuffle_slack=shuffle_slack, device_row_budget=device_row_budget)
 
     def pick(cands):
         """cands: [(penalty, cost, build_fn)] -> built cheapest node."""
@@ -443,16 +551,26 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
         budget forbids gather, at/under forbids the exchange; with the
         budget disabled (None) neither side is penalized and the pure
         estimates decide."""
+        if _contains_streamed(right):
+            raise NotImplementedError(
+                "FK-join build side exceeds device_row_budget: only the "
+                "probe side of a join may stream (raise the budget or "
+                "keep the build table resident)")
+        streamed = _contains_streamed(left)
         budget = join_budget(node)
         over = budget is not None and rrows > budget
         exch_pen = 0.0 if (budget is None or over) else C.INF
         w = len(node.right_cols)
         gcost = C.gather_join(m, rrows, w)
-        cands = [(C.INF if (sharded and over) else 0.0, gcost,
+        # A streamed probe must gather: each wave re-probes the resident
+        # replicated build, which is the resident semantics verbatim.
+        gather_pen = 0.0 if streamed \
+            else (C.INF if (sharded and over) else 0.0)
+        cands = [(gather_pen, gcost,
                   lambda: GatherJoin(left, right, node.left_key,
                                      node.right_key, tuple(node.right_cols),
                                      rrows, left.part, gcost))]
-        if sharded and isinstance(left.part, RowBlocked) \
+        if sharded and not streamed and isinstance(left.part, RowBlocked) \
                 and isinstance(right.part, RowBlocked):
             bb = exchange_bucket(node.right, node.right_key, rrows)
             pb = exchange_bucket(node.left, node.left_key, lrows)
@@ -490,7 +608,9 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
             budget = join_budget(j)
             over = budget is not None and rrows > budget
             exchangeable = isinstance(left.part, RowBlocked) \
-                and isinstance(right.part, RowBlocked)
+                and isinstance(right.part, RowBlocked) \
+                and not (_contains_streamed(left)
+                         or _contains_streamed(right))
             force = m.copartition is True and over and exchangeable
             for pen, jcost, build in join_candidates(j, left, lrows,
                                                      right, rrows):
@@ -529,7 +649,8 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
                               add_e, fold_e, rflops)
         repartable = (sharded and len(keys) == 1
                       and isinstance(child.part, RowBlocked)
-                      and m.agg_shuffle_budget is not None)
+                      and m.agg_shuffle_budget is not None
+                      and not _contains_streamed(child))
         repart = repartable and rows > m.agg_shuffle_budget
         cands = [(C.INF if repart else 0.0, pcost,
                   lambda: PartialAgg(child, keys, specs, max_groups, kappa,
@@ -554,8 +675,23 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
         """-> (phys_node, global output rows of the subtree)."""
         if isinstance(node, L.Scan):
             part = RowBlocked() if sharded else Replicated()
-            return ShardScan(node.name, part, caps[node.name]), \
-                caps[node.name]
+            rows = caps[node.name]
+            budget = m.device_row_budget
+            if budget is not None and -(-rows // n_shards) > budget:
+                # chunk rows of the canonical grid: caps are shard-padded
+                # (slots * csz) when they come from the compiler; golden
+                # caps fall back to the chunk-grid division.
+                slots = n_shards * (-(-canonical_chunks // n_shards))
+                csz = rows // slots if rows % slots == 0 \
+                    else -(-rows // canonical_chunks)
+                sched = C.wave_schedule(csz, canonical_chunks, n_shards,
+                                        budget, stream_wave_chunks)
+                t = None if tables is None else tables.get(node.name)
+                ncols = len(t.columns) if t is not None else 1
+                scost = C.streamed_scan(m, rows, sched.wave_rows, ncols)
+                return StreamedScan(node.name, part, rows, sched, scost), \
+                    rows
+            return ShardScan(node.name, part, rows), rows
         if isinstance(node, L.Select):
             c, rows = go(node.child)
             return PhysSelect(c, node.pred, c.part), rows
@@ -615,6 +751,11 @@ def explain(node: PhysNode, indent: int = 0) -> str:
 
     if isinstance(node, ShardScan):
         return f"{pad}ShardScan({node.name}, rows={node.rows}) :: {tag(node)}"
+    if isinstance(node, StreamedScan):
+        s = node.schedule
+        return (f"{pad}StreamedScan({node.name}, rows={node.rows}, "
+                f"waves={s.n_waves}x{s.chunks_per_wave}chunks"
+                f"@{s.chunk_rows}rows) :: {tag(node)}")
     if isinstance(node, PhysSelect):
         return (f"{pad}Select :: {tag(node)}\n"
                 + explain(node.child, indent + 1))

@@ -77,17 +77,18 @@ Node zoo (Table I rows in brackets):
 from __future__ import annotations
 
 import dataclasses
+from types import SimpleNamespace
 from typing import Callable, Dict, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from ..core import uda
 from . import operators as ops
 from . import physical as phys
-from .table import Table
+from .table import HostTable, Table
 
 
 class Node:
@@ -224,6 +225,147 @@ def _freq_slabs(num_freq: int, max_groups: int, budget: int) -> tuple:
                  for lo in range(0, num_freq, f_slab))
 
 
+# ---------------------------------------------------------------------------
+# Aggregation-pass plumbing shared by the resident executor (run_agg) and
+# the streamed wave loop: spec/value collection, the frequency-slab
+# schedule, per-slab UDA construction, slab-state concatenation and the
+# kind epilogue.  One copy => the two paths cannot drift apart.
+def _pass_values(specs, t: Table) -> dict:
+    """Fetch each spec's value column exactly once (uda.accumulate dedups
+    shared columns by identity; the raw dtype is kept so integer sources
+    stay kernel-eligible)."""
+    values: dict = {}
+    cols: dict = {}
+    for name, value, agg, _method in specs:
+        if agg == "COUNT" or not value:
+            values[name] = None
+        else:
+            if value not in cols:
+                cols[value] = t[value]
+            values[name] = cols[value]
+    return values
+
+
+def _pass_slabs(pa, cf_budget_elems: int) -> tuple:
+    """(exact aggregate names, frequency-slab schedule) of one pass."""
+    exact_names = [s[0] for s in pa.specs if s[3] == "exact"]
+    slabs = (_freq_slabs(pa.num_freq, pa.max_groups,
+                         cf_budget_elems // (2 * len(exact_names)))
+             if exact_names else ((0, pa.num_freq),))
+    return exact_names, slabs
+
+
+def _slab_udas(pa, si: int, lo: int, cnt: int, values: dict) -> tuple:
+    """UDA dict + value dict of frequency-slab pass ``si``: pass 0 carries
+    confidence and every non-exact aggregate; every pass carries the
+    exact aggregates' (lo, cnt) frequency window."""
+    udas_i: dict = {}
+    vals_i: dict = {}
+    if si == 0:
+        udas_i["confidence"] = uda.AtLeastOne()
+        vals_i["confidence"] = None
+        for name, _value, agg, method in pa.specs:
+            if method != "exact":
+                udas_i[name] = _agg_uda(agg, method, pa.kappa)
+                vals_i[name] = values[name]
+    for name, _value, agg, method in pa.specs:
+        if method == "exact":
+            udas_i[name] = _agg_uda(agg, method, pa.kappa, pa.num_freq,
+                                    lo, cnt)
+            vals_i[name] = values[name]
+    return udas_i, vals_i
+
+
+def _append_slab(states: dict, udas: dict, udas_i: dict, sts: dict) -> None:
+    """Fold one slab pass's merged states in: first slab registers the
+    state (and its Finalize UDA), later slabs append their frequency
+    window at the FOLDED level."""
+    for name, st in sts.items():
+        if name in states:              # append the frequency slab
+            prev = states[name]
+            states[name] = uda.CFState(
+                jnp.concatenate([prev.log_abs, st.log_abs], -1),
+                jnp.concatenate([prev.angle, st.angle], -1))
+        else:
+            states[name] = st
+            udas[name] = udas_i[name]
+
+
+def _finalize_pass(node, pa, udas: dict, states: dict, gvalid,
+                   key_columns):
+    """The replicated epilogue of one aggregation pass, selected by
+    ``node.kind``; ``key_columns(cols)`` returns the per-group
+    representatives of the named columns."""
+    conf = udas["confidence"].finalize(states["confidence"])
+    if node.kind == "project":
+        gcols = key_columns(list(pa.keys))
+        return Table(gcols, conf, gvalid, node.part)
+    if node.kind == "reweight":
+        mu, var = udas["sum"].finalize(states["sum"])
+        carry = list(pa.keys) + list(node.carry_cols)
+        if node.threshold_col:
+            gcols = key_columns(carry + [node.threshold_col])
+            thr = gcols[node.threshold_col].astype(mu.dtype)
+        else:
+            gcols = key_columns(carry)
+            thr = jnp.asarray(node.threshold, mu.dtype)
+        p_gt = ops.normal_greater(mu, var, thr)
+        return Table({k: gcols[k] for k in carry}, conf * p_gt,
+                     gvalid, node.part)
+    out = dict(valid=gvalid, keys=key_columns(list(pa.keys)),
+               confidence=conf)
+    for name, _value, agg, _method in pa.specs:
+        u, st = udas[name], states[name]
+        if agg in ("MIN", "MAX"):
+            out[name] = ops.minmax_runs(u, st)
+        else:
+            out[name] = u.finalize(st)
+    return out
+
+
+# ------------------------------------------------- streamed-plan surgery
+def _iter_phys(node):
+    yield node
+    for f in ("child", "left", "right"):
+        c = getattr(node, f, None)
+        if isinstance(c, phys.PhysNode):
+            yield from _iter_phys(c)
+
+
+def _lowest_streamed_agg(node):
+    """The LOWEST MergeAgg whose subtree contains a StreamedScan — the
+    pass the wave loop executes; everything above it sees only the pass's
+    replicated group-level output and runs resident."""
+    if not phys._contains_streamed(node):
+        return None
+    for f in ("child", "left", "right"):
+        c = getattr(node, f, None)
+        if isinstance(c, phys.PhysNode):
+            found = _lowest_streamed_agg(c)
+            if found is not None:
+                return found
+    return node if isinstance(node, phys.MergeAgg) else None
+
+
+def _swap_node(node, target, repl):
+    """Rebuild the (frozen-dataclass) physical plan with ``target``
+    replaced by ``repl``."""
+    if node is target:
+        return repl
+    for f in ("child", "left", "right"):
+        c = getattr(node, f, None)
+        if isinstance(c, phys.PhysNode):
+            new = _swap_node(c, target, repl)
+            if new is not c:
+                return dataclasses.replace(node, **{f: new})
+    return node
+
+
+#: reserved base-table name the streamed pass's replicated result is
+#: re-injected under when the plan continues above it.
+_STREAMED_RESULT = "\x00streamed"
+
+
 def shard_capacity(capacity: int, canonical_chunks: int, shards: int) -> int:
     """The padded capacity ``compile_plan`` gives a base table: first the
     canonical chunk grid (chunk size csz = ceil(n / chunks)), then enough
@@ -246,7 +388,11 @@ def compile_plan(root: Node, mesh=None, *,
                  shuffle_slack: float = 4.0,
                  copartition: object = "auto",
                  agg_shuffle_budget: int | None = None,
-                 cost_model=None):
+                 cost_model=None,
+                 device_row_budget: int | None = None,
+                 stream_wave_chunks: int | None = None,
+                 stream_double_buffer: bool = True,
+                 stats_tables: Dict[str, Table] | None = None):
     """Emit a function tables -> result (Table or dict of arrays).
 
     With ``mesh``, the logical plan lowers to a sharded physical plan
@@ -296,6 +442,34 @@ def compile_plan(root: Node, mesh=None, *,
     the one batched-FFT Finalize; the grouped kernel's argsort/operand
     prep is hoisted above the slab loop (:func:`repro.core.uda.
     cf_chunk_operands`).
+
+    Out-of-core execution: ``device_row_budget`` caps the resident rows
+    per device of any one base table.  A Scan over the budget lowers to
+    :class:`repro.db.physical.StreamedScan` and its table stays
+    HOST-side (pass a :class:`repro.db.table.HostTable`, or a device
+    Table — it is pulled to host): the compiled function then runs the
+    aggregation pass above that scan as a sequence of WAVES, each
+    shipping one chunk-aligned slab to the mesh and folding its
+    per-canonical-chunk UDA states into a cross-wave accumulator
+    (:class:`repro.core.uda.ChunkStateAccumulator`); the canonical fold
+    runs once after the last wave, so results are BIT-IDENTICAL to the
+    fully-resident compile for any wave size.  Transfers are
+    double-buffered — wave k+1's ``jax.device_put`` overlaps wave k's
+    accumulate, so the device holds 2 slabs + the group-level state,
+    never the table (``stream_double_buffer=False`` serialises
+    ship/compute — the control benchmarks compare against).
+    ``stream_wave_chunks`` pins the wave size (in global chunk slots)
+    for tests.  HostTables without a budget are simply materialised.
+    The streamed path executes eagerly (host wave loop): don't wrap the
+    compiled function in an outer jit when streaming.
+
+    ``stats_tables`` (name -> representative Table) feeds the
+    skew-adaptive concrete-key bucket sizing when the RUNTIME tables are
+    traced (the compiled function called under jit): the stats tables
+    are padded exactly like the runtime ones and their concrete key
+    histograms size the exchange buckets, replacing the flat
+    ``shuffle_slack`` capacity (the overflow-NaN guard stays as the
+    backstop for stale stats).
     """
     from . import distributed as dist
 
@@ -309,6 +483,20 @@ def compile_plan(root: Node, mesh=None, *,
         raise ValueError(f"canonical_chunks must be positive, got {chunks}")
     local_chunks = -(-chunks // shards)
 
+    # Compile-time stand-ins for the concrete-key bucket sizing, padded
+    # HERE — eagerly, host-side — not inside `compiled`: under jax.jit
+    # omnistaging would turn a jnp pad of even a concrete table into
+    # tracers, and the histogram sizing would silently fall back to
+    # slack.  HostTable keeps the padding in numpy so the key columns
+    # stay concrete no matter what trace `compiled` runs under.
+    if stats_tables:
+        stats_tables = {
+            k: (st if isinstance(st, HostTable)
+                else HostTable.from_table(st))
+            .pad_to_multiple(chunks)
+            .pad_to(shard_capacity(st.capacity, chunks, shards))
+            for k, st in stats_tables.items()}
+
     # Canonical (chunk-grid-only) capacities of the base tables, set by
     # `compiled` before tracing: the shape a relational result has in the
     # mesh=None compile, before any shard-alignment padding chunks.
@@ -317,7 +505,7 @@ def compile_plan(root: Node, mesh=None, *,
     def _canonical_rows(pnode: phys.PhysNode) -> int:
         """Root output rows of a relational subtree under mesh=None padding
         (row capacity follows the probe/left lineage down to its scan)."""
-        if isinstance(pnode, phys.ShardScan):
+        if isinstance(pnode, (phys.ShardScan, phys.StreamedScan)):
             return canon_caps[pnode.name]
         if isinstance(pnode, (phys.PhysSelect, phys.PhysMap,
                               phys.Repartition)):
@@ -329,9 +517,12 @@ def compile_plan(root: Node, mesh=None, *,
             return pnode.child.max_groups
         raise TypeError(pnode)
 
-    def run_plan(sh_tables: Dict[str, Table], proot: phys.PhysNode):
-        """Interpret the physical plan; in mesh mode this body runs inside
-        shard_map (sh_tables are shard-local row blocks)."""
+    def make_runner(sh_tables: Dict[str, Table]) -> SimpleNamespace:
+        """Bind the physical-plan interpreter to one dict of (shard-local)
+        tables; in mesh mode the closures run inside shard_map.  The
+        streamed executor binds the SAME interpreter to every wave's slab
+        (the StreamedScan resolves to the slab), so resident and streamed
+        execution share one code path for everything below the merge."""
 
         def sharded(t: Table) -> bool:
             return bool(axes) and isinstance(t.part, phys.RowBlocked)
@@ -363,7 +554,8 @@ def compile_plan(root: Node, mesh=None, *,
                     lambda x, c=c: x[c * max_groups:(c + 1) * max_groups],
                     st) for name, st in flat.items()}
                     for c in range(chunks)]
-                return dist.partitioned_merge(udas_d, parts, axes)
+                return dist.partitioned_merge(udas_d, parts, axes,
+                                              n_shards=shards)
             if sharded(table):
                 parts = uda.accumulate_chunk_states(
                     udas_d, probs, values, ids, max_groups=max_groups,
@@ -390,38 +582,15 @@ def compile_plan(root: Node, mesh=None, *,
             """The PartialAgg/MergeAgg pair executes as one unit: group
             ids, then per frequency slab one Accumulate (per-chunk
             partials) + ONE collective Merge, then the replicated Finalize
-            selected by ``kind``."""
+            selected by ``kind`` — the module-level ``_pass_*`` /
+            ``_finalize_pass`` helpers, which the streamed wave loop runs
+            piecewise across waves."""
             pa = node.child
             t = run(pa.child)
             mg = pa.max_groups
             ids, _, gvalid = rel_group_ids(t, pa.keys, mg)
-
-            specs = list(pa.specs)
-            values: dict = {}
-            cols: dict = {}    # fetch each source column exactly once
-            for name, value, agg, method in specs:
-                if agg == "COUNT" or not value:
-                    values[name] = None
-                else:
-                    # Keep the raw column (uda.accumulate casts to the
-                    # prob dtype itself): an integer source dtype is
-                    # what makes an exact-CF aggregate eligible for the
-                    # Pallas kernel.
-                    if value not in cols:
-                        cols[value] = t[value]
-                    values[name] = cols[value]
-
-            # Exact-CF states are (G, F) — chunk F against the memory
-            # budget.  Pass 0 carries every aggregate (the riders share
-            # ONE accumulation); later passes re-stream the tuples for
-            # the remaining frequency slabs of the exact aggregates.
-            exact_names = [s[0] for s in specs if s[3] == "exact"]
-            # The budget bounds TOTAL live exact-state elements: each
-            # exact aggregate carries two (G, slab) arrays (log-abs +
-            # angle) and every exact aggregate rides the same slab pass.
-            slabs = (_freq_slabs(pa.num_freq, mg,
-                                 cf_budget_elems // (2 * len(exact_names)))
-                     if exact_names else ((0, pa.num_freq),))
+            values = _pass_values(pa.specs, t)
+            exact_names, slabs = _pass_slabs(pa, cf_budget_elems)
             cf_operands: dict = {}
             if len(slabs) > 1 and not hash_partitioned(t):
                 # Hoist the grouped kernel's argsort(gids) + operand prep
@@ -440,64 +609,21 @@ def compile_plan(root: Node, mesh=None, *,
             udas: dict = {}
             states: dict = {}
             for si, (lo, cnt) in enumerate(slabs):
-                udas_i: dict = {}
-                vals_i: dict = {}
-                if si == 0:
-                    udas_i["confidence"] = uda.AtLeastOne()
-                    vals_i["confidence"] = None
-                    for name, value, agg, method in specs:
-                        if method != "exact":
-                            udas_i[name] = _agg_uda(agg, method, pa.kappa)
-                            vals_i[name] = values[name]
-                for name, value, agg, method in specs:
-                    if method == "exact":
-                        udas_i[name] = _agg_uda(agg, method, pa.kappa,
-                                                pa.num_freq, lo, cnt)
-                        vals_i[name] = values[name]
+                udas_i, vals_i = _slab_udas(pa, si, lo, cnt, values)
                 sts = acc(udas_i, t, vals_i, ids, mg,
                           cf_operands=cf_operands or None)
-                for name, st in sts.items():
-                    if name in states:          # append the frequency slab
-                        prev = states[name]
-                        states[name] = uda.CFState(
-                            jnp.concatenate([prev.log_abs, st.log_abs], -1),
-                            jnp.concatenate([prev.angle, st.angle], -1))
-                    else:
-                        states[name] = st
-                        udas[name] = udas_i[name]
+                _append_slab(states, udas, udas_i, sts)
             for name in exact_names:            # full-range Finalize UDA
                 udas[name] = _agg_uda("SUM", "exact", pa.kappa, pa.num_freq)
-
-            conf = udas["confidence"].finalize(states["confidence"])
-            if node.kind == "project":
-                gcols = rel_key_columns(t, list(pa.keys), ids, mg)
-                return Table(gcols, conf, gvalid, node.part)
-            if node.kind == "reweight":
-                mu, var = udas["sum"].finalize(states["sum"])
-                carry = list(pa.keys) + list(node.carry_cols)
-                if node.threshold_col:
-                    gcols = rel_key_columns(t, carry + [node.threshold_col],
-                                            ids, mg)
-                    thr = gcols[node.threshold_col].astype(mu.dtype)
-                else:
-                    gcols = rel_key_columns(t, carry, ids, mg)
-                    thr = jnp.asarray(node.threshold, mu.dtype)
-                p_gt = ops.normal_greater(mu, var, thr)
-                return Table({k: gcols[k] for k in carry}, conf * p_gt,
-                             gvalid, node.part)
-            out = dict(valid=gvalid,
-                       keys=rel_key_columns(t, list(pa.keys), ids, mg),
-                       confidence=conf)
-            for name, value, agg, method in specs:
-                u, st = udas[name], states[name]
-                if agg in ("MIN", "MAX"):
-                    out[name] = ops.minmax_runs(u, st)
-                else:
-                    out[name] = u.finalize(st)
-            return out
+            return _finalize_pass(
+                node, pa, udas, states, gvalid,
+                lambda cols: rel_key_columns(t, cols, ids, mg))
 
         def run(node: phys.PhysNode):
-            if isinstance(node, phys.ShardScan):
+            if isinstance(node, (phys.ShardScan, phys.StreamedScan)):
+                # A StreamedScan resolves here only under the streamed
+                # executor, which binds the scan's name to the current
+                # wave's slab.
                 return sh_tables[node.name].with_part(node.part)
             if isinstance(node, phys.PhysSelect):
                 return ops.select(run(node.child), node.pred)
@@ -546,9 +672,17 @@ def compile_plan(root: Node, mesh=None, *,
                 return run_agg(node)
             raise TypeError(node)
 
-        out = run(proot)
+        return SimpleNamespace(run=run, run_agg=run_agg, acc=acc,
+                               rel_group_ids=rel_group_ids,
+                               rel_key_columns=rel_key_columns,
+                               sharded=sharded)
+
+    def run_plan(sh_tables: Dict[str, Table], proot: phys.PhysNode):
+        """Interpret the physical plan end-to-end (the resident path)."""
+        r = make_runner(sh_tables)
+        out = r.run(proot)
         if isinstance(out, Table):
-            if sharded(out):
+            if r.sharded(out):
                 out = dist.gather_table(out, axes)
                 # Drop the whole-padding chunks appended for shard counts
                 # that don't divide the grid: the caller-visible capacity
@@ -561,6 +695,212 @@ def compile_plan(root: Node, mesh=None, *,
             return out.with_part(phys.Replicated())
         return out
 
+    # ------------------------------------------------- streamed execution
+    #: jit cache of the per-wave functions, keyed by the physical plan
+    #: (frozen dataclasses compare structurally, callables by identity),
+    #: so repeated ``compiled()`` calls reuse the traced waves.
+    _wave_cache: dict = {}
+
+    def _build_wave_fns(proot, agg, sc):
+        """The two per-wave device functions of the streamed executor —
+        phase A (group-code discovery) and phase B (chunk-state
+        accumulation) — each re-running the plan spine below ``agg`` on
+        one slab, shard_mapped over the mesh and jitted."""
+        key = (proot,)
+        if key in _wave_cache:
+            return _wave_cache[key]
+        pa = agg.child
+        spine = pa.child
+        mg = pa.max_groups
+        keys = list(pa.keys)
+        kcols = list(pa.keys)
+        if agg.kind == "reweight":
+            kcols += [c for c in agg.carry_cols if c not in kcols]
+            if agg.threshold_col and agg.threshold_col not in kcols:
+                kcols.append(agg.threshold_col)
+        exact_names, slabs = _pass_slabs(pa, cf_budget_elems)
+
+        def wave_a(slab, res):
+            t = make_runner({**res, sc.name: slab}).run(spine)
+            code_live, _ = ops.live_key_codes(t, keys)
+            local = ops.merge_group_codes(code_live, mg)
+            if axes:
+                gathered = jax.lax.all_gather(local, axes, axis=0,
+                                              tiled=True)
+                local = ops.merge_group_codes(gathered, mg)
+            return local
+
+        def wave_b(slab, res, merged):
+            t = make_runner({**res, sc.name: slab}).run(spine)
+            code_live, _ = ops.live_key_codes(t, keys)
+            ids = ops.codes_to_ids(code_live, merged)
+            values = _pass_values(pa.specs, t)
+            out_states = []
+            for si, (lo, cnt) in enumerate(slabs):
+                udas_i, vals_i = _slab_udas(pa, si, lo, cnt, values)
+                parts = uda.accumulate_chunk_states(
+                    udas_i, t.masked_prob(), vals_i, ids, max_groups=mg,
+                    num_chunks=sc.schedule.local_chunks_per_wave)
+                out_states.append(
+                    dist.gather_chunk_states(udas_i, parts, axes)
+                    if axes else parts)
+            gcols = ops.group_key_columns(t, kcols, ids, mg)
+            if axes:
+                gcols = {k: jax.lax.pmax(v, axes) for k, v in gcols.items()}
+            return out_states, gcols
+
+        if axes:
+            wave_a = shard_map(wave_a, mesh=mesh,
+                               in_specs=(P(axes), P(axes)), out_specs=P(),
+                               check_vma=False)
+            wave_b = shard_map(wave_b, mesh=mesh,
+                               in_specs=(P(axes), P(axes), P()),
+                               out_specs=P(), check_vma=False)
+        # Donating the slab lets XLA reuse wave k's buffers for wave k+2
+        # (the CPU backend does not support donation — avoid the warning).
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        fns = (jax.jit(wave_a, donate_argnums=donate),
+               jax.jit(wave_b, donate_argnums=donate))
+        _wave_cache[key] = fns
+        return fns
+
+    def _stream(ht: HostTable, sched, wave_call, collect):
+        """The double-buffered wave loop: slab w+1 is sliced and
+        ``device_put`` WHILE the device works on slab w (JAX async
+        dispatch — the host never blocks on the wave computation), so
+        transfer and compute overlap and device residency is two slabs.
+        With ``stream_double_buffer=False`` the loop blocks around every
+        wave — the serialised control the streaming benchmarks compare
+        against."""
+        csz = sched.chunk_rows
+        lrows = sched.local_chunks_per_wave * csz
+        lslots = sched.n_waves * sched.local_chunks_per_wave
+
+        def ship(w):
+            # Wave w takes the next `lrows` rows of EVERY shard's slot
+            # range — strided slices host-side, split back per device by
+            # the sharded transfer.
+            starts = tuple(s * lslots * csz + w * lrows
+                           for s in range(shards))
+            slab = ht.wave_slab(starts, lrows)
+            if mesh_mode:
+                return jax.device_put(slab, NamedSharding(mesh, P(axes)))
+            return jax.device_put(slab)
+
+        nxt = ship(0)
+        prev = None
+        for w in range(sched.n_waves):
+            cur, nxt = nxt, None
+            if not stream_double_buffer:
+                jax.block_until_ready(cur)
+            out = wave_call(w, cur)
+            if not stream_double_buffer:
+                out = jax.block_until_ready(out)
+            elif prev is not None:
+                # True double buffering: wave w-1 must have retired
+                # before slab w+1 ships, bounding in-flight slabs to two
+                # (unbounded run-ahead trades the overlap win away to
+                # allocator pressure).
+                jax.block_until_ready(prev)
+            if w + 1 < sched.n_waves:
+                nxt = ship(w + 1)
+            collect(w, out)
+            prev = out
+
+    def _streamed_exec(proot, padded):
+        """Run a physical plan containing a StreamedScan: the lowest
+        aggregation pass above the scan executes as waves (see
+        ``compile_plan``'s docstring); any plan suffix above that pass
+        runs resident on the pass's replicated group-level output."""
+        scans = [n for n in _iter_phys(proot)
+                 if isinstance(n, phys.StreamedScan)]
+        if len(scans) > 1:
+            raise NotImplementedError(
+                "one StreamedScan per plan: raise device_row_budget so at "
+                f"most one table streams (got {[s.name for s in scans]})")
+        sc = scans[0]
+        agg = _lowest_streamed_agg(proot)
+        if agg is None:
+            raise NotImplementedError(
+                "a StreamedScan must feed a grouped aggregation (Project /"
+                " GroupAgg / ReweightGreater): the wave loop folds "
+                "per-chunk UDA states, not raw relational output")
+        pa = agg.child
+        sched = sc.schedule
+        ht = padded[sc.name]
+        ht = (ht if isinstance(ht, HostTable)
+              else HostTable.from_table(ht)).pad_to(sched.padded_capacity)
+        resident = {k: (t.to_table() if isinstance(t, HostTable) else t)
+                    for k, t in padded.items() if k != sc.name}
+        wave_a, wave_b = _build_wave_fns(proot, agg, sc)
+
+        # Phase A: stream once for the global group-code table — exact
+        # under hierarchical merging (ops.merge_group_codes), so merging
+        # the per-wave tables reproduces the resident table bit for bit.
+        code_tabs = [None] * sched.n_waves
+        _stream(ht, sched, lambda w, slab: wave_a(slab, resident),
+                lambda w, out: code_tabs.__setitem__(w, out))
+        mg = pa.max_groups
+        merged = ops.merge_group_codes(jnp.concatenate(code_tabs), mg)
+        gvalid = merged != jnp.iinfo(merged.dtype).max
+
+        # Phase B: stream again, filing every wave's per-chunk states
+        # under their global canonical chunk ids; the canonical fold runs
+        # ONCE after the last wave (the bit-identical-streaming contract).
+        exact_names, slabs = _pass_slabs(pa, cf_budget_elems)
+        dummy_vals = {s[0]: None for s in pa.specs}
+        slab_udas, accs = [], []
+        for si, (lo, cnt) in enumerate(slabs):
+            udas_i, _ = _slab_udas(pa, si, lo, cnt, dummy_vals)
+            slab_udas.append(udas_i)
+            accs.append(uda.ChunkStateAccumulator(udas_i, chunks))
+        lcpw = sched.local_chunks_per_wave
+        lslots = sched.n_waves * lcpw
+        gcols_run: dict = {}
+
+        def collect_b(w, out):
+            out_states, gcols = out
+            slot_ids = [s * lslots + w * lcpw + j
+                        for s in range(shards) for j in range(lcpw)]
+            for si, parts in enumerate(out_states):
+                accs[si].add_wave(slot_ids, parts)
+            for k, v in gcols.items():
+                # Per-group key representatives: segment_max identities
+                # fill absent groups, so a max across waves is exact.
+                gcols_run[k] = (v if k not in gcols_run
+                                else jnp.maximum(gcols_run[k], v))
+
+        _stream(ht, sched,
+                lambda w, slab: wave_b(slab, resident, merged), collect_b)
+
+        udas: dict = {}
+        states: dict = {}
+        for si in range(len(slabs)):
+            _append_slab(states, udas, slab_udas[si], accs[si].fold())
+        for name in exact_names:                # full-range Finalize UDA
+            udas[name] = _agg_uda("SUM", "exact", pa.kappa, pa.num_freq)
+        result = _finalize_pass(
+            agg, pa, udas, states, gvalid,
+            lambda cols: {k: gcols_run[k] for k in cols})
+        if agg is proot:
+            return (result.with_part(phys.Replicated())
+                    if isinstance(result, Table) else result)
+        # Plan suffix above the streamed pass: re-inject the replicated
+        # group-level Table as a scan and run the rest resident.
+        assert isinstance(result, Table), \
+            "a non-root streamed aggregation must produce a Table"
+        outer = _swap_node(proot, agg,
+                           phys.ShardScan(_STREAMED_RESULT,
+                                          phys.Replicated(),
+                                          result.capacity))
+        canon_caps[_STREAMED_RESULT] = result.capacity
+        if not mesh_mode:
+            return run_plan({**resident, _STREAMED_RESULT: result}, outer)
+        fn = shard_map(lambda sh, ex: run_plan({**sh, **ex}, outer),
+                       mesh=mesh, in_specs=(P(axes), P()), out_specs=P(),
+                       check_vma=False)
+        return fn(resident, {_STREAMED_RESULT: result})
+
     def compiled(tables: Dict[str, Table]):
         # Every compile pads every base table to the canonical chunk grid
         # (the chunk boundaries define the deterministic fold tree) plus
@@ -572,6 +912,14 @@ def compile_plan(root: Node, mesh=None, *,
         canon_caps.clear()
         canon_caps.update({k: -(-t.capacity // chunks) * chunks
                            for k, t in tables.items()})
+        plan_tables = dict(padded)
+        if stats_tables:
+            # Substitute the pre-padded host-side stand-ins so the key %
+            # n_shards histograms see a concrete row population even
+            # when the runtime tables are tracers.
+            for k, st in stats_tables.items():
+                if k in padded:
+                    plan_tables[k] = st
         proot = phys.lower_plan(root, caps, n_shards=shards,
                                 sharded=mesh_mode and bool(axes),
                                 join_gather_budget=join_gather_budget,
@@ -579,12 +927,18 @@ def compile_plan(root: Node, mesh=None, *,
                                 copartition=copartition,
                                 agg_shuffle_budget=agg_shuffle_budget,
                                 canonical_chunks=chunks,
-                                model=cost_model, tables=padded)
+                                model=cost_model, tables=plan_tables,
+                                device_row_budget=device_row_budget,
+                                stream_wave_chunks=stream_wave_chunks)
+        if any(isinstance(n, phys.StreamedScan) for n in _iter_phys(proot)):
+            return _streamed_exec(proot, padded)
+        resident = {k: (t.to_table() if isinstance(t, HostTable) else t)
+                    for k, t in padded.items()}
         if not mesh_mode:
-            return run_plan(padded, proot)
+            return run_plan(resident, proot)
         fn = shard_map(lambda sh: run_plan(sh, proot), mesh=mesh,
                        in_specs=(P(axes),), out_specs=P(),
                        check_vma=False)
-        return fn(padded)
+        return fn(resident)
 
     return compiled

@@ -125,16 +125,138 @@ class Table:
     def pad_to(self, capacity: int) -> "Table":
         n = self.capacity
         assert capacity >= n
+        if capacity == n:               # already there: no copy, no new pytree
+            return self
         pad = capacity - n
         cols = {k: jnp.pad(v, (0, pad)) for k, v in self.columns.items()}
         return Table(cols, jnp.pad(self.prob, (0, pad)),
                      jnp.pad(self.valid, (0, pad)), self.part)
 
+    #: chunk-grid cache: the last `multiple` this table was padded to (a
+    #: plain instance attribute, NOT pytree data — it is a memo, lost on
+    #: functional updates, which only costs a re-check).
+    _chunk_multiple: int = dataclasses.field(default=0, compare=False,
+                                             repr=False)
+
     def pad_to_multiple(self, multiple: int) -> "Table":
         """Pad with invalid p = 0 rows so `multiple` divides the capacity —
         the entry point of the plan compiler's canonical chunk grid (and
-        of even row-sharding: the grid is a multiple of the shard count)."""
-        return self.pad_to(-(-self.capacity // multiple) * multiple)
+        of even row-sharding: the grid is a multiple of the shard count).
+        A table already on the grid is returned as-is (the canonical chunk
+        count is cached on the instance, so repeated ``compile_plan``
+        calls — and every per-wave slab of the streamed executor — skip
+        the re-pad entirely)."""
+        if self._chunk_multiple == multiple:
+            return self
+        out = self.pad_to(-(-self.capacity // multiple) * multiple)
+        out._chunk_multiple = multiple
+        return out
+
+
+class HostTable:
+    """Host-resident probabilistic table: the out-of-core twin of
+    :class:`Table`.
+
+    Columns, prob and valid are kept as host ``numpy`` arrays and are
+    NEVER shipped to the device whole — the streamed executor of
+    ``db/plans.py`` ships one canonical-chunk-aligned *slab* of rows per
+    wave (:meth:`slab`) and folds the per-chunk UDA states across waves,
+    so device residency is two slabs (double-buffered) plus the
+    group-level accumulator, independent of the table size.
+
+    Deliberately NOT a pytree: a HostTable must never cross a jit
+    boundary.  It mirrors the small read-only surface the planner needs
+    (``columns`` / ``prob`` / ``valid`` / ``capacity``), so the concrete
+    key histograms of ``physical.concrete_bucket_capacity`` work on it
+    unchanged.
+    """
+
+    def __init__(self, columns, prob=None, valid=None, part=None):
+        self.columns = {k: np.asarray(v) for k, v in columns.items()}
+        n = next(iter(self.columns.values())).shape[0]
+        for k, v in self.columns.items():
+            assert v.shape[0] == n, f"column {k} length mismatch"
+        self.prob = (np.ones((n,), np.float32) if prob is None
+                     else np.asarray(prob))
+        self.valid = (np.ones((n,), bool) if valid is None
+                      else np.asarray(valid))
+        self.part = part
+        self._chunk_multiple = 0
+
+    @classmethod
+    def from_table(cls, t: Table) -> "HostTable":
+        """Pull a (device) Table to host memory."""
+        return cls({k: np.asarray(v) for k, v in t.columns.items()},
+                   np.asarray(t.prob), np.asarray(t.valid), t.part)
+
+    @property
+    def capacity(self) -> int:
+        return self.prob.shape[0]
+
+    def __getitem__(self, name: str):
+        return self.columns[name]
+
+    def pad_to(self, capacity: int) -> "HostTable":
+        n = self.capacity
+        assert capacity >= n
+        if capacity == n:
+            return self
+        pad = capacity - n
+        cols = {k: np.pad(v, (0, pad)) for k, v in self.columns.items()}
+        return HostTable(cols, np.pad(self.prob, (0, pad)),
+                         np.pad(self.valid, (0, pad)), self.part)
+
+    def pad_to_multiple(self, multiple: int) -> "HostTable":
+        """Host-side chunk-grid padding (same cache as Table's)."""
+        if self._chunk_multiple == multiple:
+            return self
+        out = self.pad_to(-(-self.capacity // multiple) * multiple)
+        out._chunk_multiple = multiple
+        return out
+
+    def slab(self, start: int, rows: int) -> Table:
+        """One wave's slab: rows [start, start + rows), zero-padded with
+        invalid p = 0 rows past the capacity, as a device-ready
+        :class:`Table` of host numpy arrays (the executor ``device_put``s
+        it with the mesh sharding; the copy into fresh contiguous buffers
+        is the host half of the double-buffered transfer)."""
+        stop = min(start + rows, self.capacity)
+        pad = rows - (stop - start)
+
+        def cut(a):
+            s = a[start:stop]
+            return np.pad(s, ((0, pad),) + ((0, 0),) * (s.ndim - 1)) \
+                if pad else np.ascontiguousarray(s)
+        return Table({k: cut(v) for k, v in self.columns.items()},
+                     cut(self.prob), cut(self.valid), self.part)
+
+    def wave_slab(self, starts, rows: int) -> Table:
+        """One MESH wave's slab: the concatenation of the per-shard runs
+        ``[start, start + rows)`` for each start in ``starts`` (shard
+        order).  On a mesh the rows of one wave are NOT contiguous — each
+        shard contributes the next ``rows`` of ITS slot range — so the
+        host gathers the strided runs into one contiguous buffer that
+        ``device_put`` with the mesh sharding then splits back per
+        device.  The table must already be padded to the wave schedule's
+        ``padded_capacity`` (no tail handling here)."""
+        def cut(a):
+            if len(starts) == 1:
+                return np.ascontiguousarray(a[starts[0]:starts[0] + rows])
+            return np.concatenate([a[s:s + rows] for s in starts])
+        return Table({k: cut(v) for k, v in self.columns.items()},
+                     cut(self.prob), cut(self.valid), self.part)
+
+    def slabs(self, rows: int):
+        """Iterate the whole table as ``ceil(capacity / rows)`` fixed-size
+        slabs (the last one zero-padded) — the wave schedule's host side."""
+        for start in range(0, self.capacity, rows):
+            yield start, self.slab(start, rows)
+
+    def to_table(self) -> Table:
+        """Full device materialisation (resident fallback / tests)."""
+        return Table({k: jnp.asarray(v) for k, v in self.columns.items()},
+                     jnp.asarray(self.prob), jnp.asarray(self.valid),
+                     self.part)
 
 
 def concat(a: Table, b: Table) -> Table:

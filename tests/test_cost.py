@@ -189,3 +189,59 @@ def test_pure_estimates_pick_the_exchange_at_scale():
                             sharded=True, model=m)
     assert isinstance(fused.child, phys.PartitionedAgg), phys.explain(fused)
     assert isinstance(fused.child.child, phys.CoPartitionedJoin)
+
+
+# ----------------------------------------------------- out-of-core scans
+def test_wave_schedule_sizes_from_double_buffered_budget():
+    """The largest wave whose TWO in-flight slabs fit the per-device
+    budget: budget // (2 * chunk_rows) local chunk slots."""
+    s = C.wave_schedule(chunk_rows=512, chunks=8, shards=1, budget=2048)
+    assert (s.local_chunks_per_wave, s.n_waves) == (2, 4)
+    assert s.wave_rows == 1024 and s.padded_capacity == 4096
+    # tighter budget -> more, smaller waves; never below one chunk slot
+    t = C.wave_schedule(chunk_rows=512, chunks=8, shards=1, budget=100)
+    assert (t.local_chunks_per_wave, t.n_waves) == (1, 8)
+
+
+def test_wave_schedule_clamps_to_the_chunk_grid():
+    """A budget larger than the table collapses to one wave holding every
+    chunk slot (the streamed path degenerates to resident-in-one-wave)."""
+    s = C.wave_schedule(chunk_rows=512, chunks=8, shards=1, budget=1 << 30)
+    assert (s.local_chunks_per_wave, s.n_waves) == (8, 1)
+    assert s.padded_capacity == 4096
+
+
+def test_wave_schedule_ragged_tail_pads_a_final_wave():
+    """3 of 8 chunk slots per wave: 3 waves cover 9 slots, so the host
+    table pads one extra slot and the last wave is partly padding —
+    uniform wave shapes keep one compiled wave function."""
+    s = C.wave_schedule(chunk_rows=512, chunks=8, shards=1, budget=None,
+                        override_chunks=3)
+    assert (s.local_chunks_per_wave, s.n_waves) == (3, 3)
+    assert s.padded_capacity == 9 * 512 > 8 * 512
+
+
+def test_wave_schedule_splits_chunk_slots_across_shards():
+    """8 chunk slots on 3 shards: ceil(8/3) = 3 local slots per shard;
+    a 1-chunk-per-wave schedule then runs 3 waves of 3 global chunks."""
+    s = C.wave_schedule(chunk_rows=512, chunks=8, shards=3, budget=1024)
+    assert (s.local_chunks_per_wave, s.n_shards) == (1, 3)
+    assert s.chunks_per_wave == 3 and s.n_waves == 3
+    assert s.padded_capacity == 9 * 512
+
+
+def test_streamed_scan_cost_charges_transfer_not_collective():
+    """Every row crosses host->device once (no (n-1)/n discount) and
+    residency is two double-buffered per-device slabs, independent of the
+    table size — the flat-memory contract the smoke gate checks."""
+    m = _model(1)
+    c = C.streamed_scan(m, rows=4096, wave_rows=1024, n_cols=1)
+    assert c.bytes_moved == 4096 * 3 * m.elem_bytes
+    assert c.peak_rows == 2 * 1024 * 3
+    big = C.streamed_scan(m, rows=8 * 4096, wave_rows=1024, n_cols=1)
+    assert big.peak_rows == c.peak_rows          # flat under 8x growth
+    assert big.bytes_moved == 8 * c.bytes_moved  # transfer scales linearly
+    m4 = _model(4)
+    c4 = C.streamed_scan(m4, rows=4096, wave_rows=1024, n_cols=1)
+    assert c4.bytes_moved == c.bytes_moved       # transfer, not collective
+    assert c4.peak_rows == c.peak_rows // 4      # slabs split over shards

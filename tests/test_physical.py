@@ -256,6 +256,88 @@ def test_lowering_sizes_buckets_from_concrete_keys():
     assert sj2.build_bucket == phys.bucket_capacity(n // 8, 8, 2.0)
 
 
+# ------------------------------------------------- out-of-core lowering
+def test_device_row_budget_lowers_scan_to_streamed():
+    """A Scan whose per-shard rows exceed the budget becomes a
+    StreamedScan with a double-buffer-sized wave schedule; scans under
+    the budget stay resident ShardScans."""
+    agg = GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity", "SUM",
+                   128)
+    p = phys.lower_plan(agg, CAPS, n_shards=1, sharded=False,
+                        device_row_budget=1024)
+    sc = p.child.child
+    assert isinstance(sc, phys.StreamedScan)
+    s = sc.schedule
+    # csz = 4096 / 8 chunks = 512; budget 1024 holds 2 slabs of 1 chunk
+    assert (s.chunk_rows, s.local_chunks_per_wave, s.n_waves,
+            s.n_shards) == (512, 1, 8, 1)
+    assert s.padded_capacity == 4096
+    # 2 double-buffered slabs x (1 col + p + valid) resident, whole table
+    # crossing the transfer once per pass
+    assert sc.cost.peak_rows == 2 * 512 * 3
+    assert sc.cost.bytes_moved == 4096 * 3 * 8
+    over = phys.lower_plan(agg, CAPS, n_shards=1, sharded=False,
+                           device_row_budget=4096)
+    assert isinstance(over.child.child, phys.ShardScan)
+    # on a mesh the budget is per SHARD: 4 shards x 1024 rows fit
+    mesh4 = phys.lower_plan(agg, CAPS, n_shards=4, sharded=True,
+                            device_row_budget=1024)
+    assert isinstance(mesh4.child.child, phys.ShardScan)
+    mesh2 = phys.lower_plan(agg, CAPS, n_shards=2, sharded=True,
+                            device_row_budget=1024)
+    sc2 = mesh2.child.child
+    assert isinstance(sc2, phys.StreamedScan)
+    assert sc2.schedule.n_shards == 2
+    assert sc2.schedule.chunks_per_wave == 2      # 1 local slot per shard
+
+
+def test_stream_wave_chunks_pins_the_schedule():
+    agg = GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity", "SUM",
+                   128)
+    p = phys.lower_plan(agg, CAPS, n_shards=1, sharded=False,
+                        device_row_budget=1024, stream_wave_chunks=3)
+    s = p.child.child.schedule
+    assert (s.local_chunks_per_wave, s.n_waves) == (3, 3)
+    assert s.padded_capacity == 9 * 512           # one ragged padding wave
+
+
+def test_streamed_build_side_raises_in_lowering():
+    join = FKJoin(Scan("lineitem"), Scan("orders"), "l_orderkey",
+                  "o_orderkey", ())
+    with pytest.raises(NotImplementedError, match="build side"):
+        phys.lower_plan(GroupAgg(join, ("l_orderkey",), "l_quantity",
+                                 "SUM", 128), CAPS, n_shards=1,
+                        sharded=False, device_row_budget=512)
+
+
+def test_streamed_probe_forces_gather_join():
+    """A streamed probe side cannot hash-exchange (host rows only ever
+    move one wave at a time): the join gathers its build side regardless
+    of the gather budget, and the aggregation stays a PartialAgg even
+    when the fused pipeline would otherwise win."""
+    p = phys.lower_plan(_q3ish(), CAPS, n_shards=4, sharded=True,
+                        join_gather_budget=1, device_row_budget=256)
+    assert isinstance(p.child, phys.PartialAgg)
+    j = p.child.child
+    assert isinstance(j, phys.GatherJoin)
+    assert phys._contains_streamed(j.left)
+    assert isinstance(j.right, phys.ShuffleJoin)  # resident side still free
+
+
+def test_explain_snapshot_streamed_plan():
+    """Full-text snapshot: the streamed scan with its wave schedule and
+    modeled transfer/residency costs."""
+    agg = GroupAgg(Select(Scan("lineitem"), lambda t: t["x"] > 0),
+                   ("l_orderkey",), "l_quantity", "SUM", 512)
+    text = phys.explain(phys.lower_plan(
+        agg, CAPS, n_shards=1, sharded=False, device_row_budget=1024))
+    assert text == """\
+MergeAgg[groupagg] :: Replicated
+  PartialAgg(keys=['l_orderkey'], specs=['sum'], G=512) :: Replicated cost{bytes=0, rows=12288, flops=12288}
+    Select :: Replicated
+      StreamedScan(lineitem, rows=4096, waves=8x1chunks@512rows) :: Replicated cost{bytes=98304, rows=3072, flops=0}"""
+
+
 # --------------------------------------------------- explain snapshots
 def test_explain_renders_every_node():
     text = phys.explain(phys.lower_plan(

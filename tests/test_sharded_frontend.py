@@ -533,3 +533,53 @@ bad = jax.jit(compile_plan(plan, mesh, join_gather_budget=1,
 assert np.isnan(np.asarray(bad.prob)).all(), np.asarray(bad.prob)
 print("OK")
 """, devices=3)
+
+
+@pytest.mark.multidevice
+def test_stats_tables_make_jit_buckets_skew_adaptive():
+    """The carried traced-key item: ``compile_plan(stats_tables=...)``
+    hands the lowering concrete stand-in tables, so the key % n_shards
+    histograms size the jit path's buckets OUTSIDE the trace.  The same
+    skewed join that NaN-poisons under jit with flat slack 1.0 buckets
+    (previous test) is bit-equal to mesh=None when the stats tables
+    carry the real key population — and a WRONG histogram still has the
+    NaN overflow guard as the backstop."""
+    from conftest import run_sub
+    run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
+from repro.core import enable_x64
+enable_x64()
+from repro.db.plans import FKJoin, Scan, compile_plan
+from repro.db.table import Table
+mesh = make_mesh((3,), ("data",))
+rng = np.random.default_rng(5)
+left = Table.from_columns(
+    {"k": jnp.asarray([0, 3, 6, 9, 0, 3, 6, 9, 0, 3, 6, 9])},
+    prob=jnp.asarray(rng.uniform(0.1, 0.9, 12)))
+right = Table.from_columns(
+    {"k": jnp.asarray([0, 3, 6, 9, 12, 15]),
+     "pay": jnp.asarray([10, 11, 12, 13, 14, 15])},
+    prob=jnp.asarray(rng.uniform(0.1, 0.9, 6)))
+tables = {"L": left, "R": right}
+plan = FKJoin(Scan("L"), Scan("R"), "k", "k", ("pay",))
+ref = compile_plan(plan, None)(tables)
+# jit + stats tables: the traced compile sizes buckets from the concrete
+# stand-ins' histograms -> the skew fits even at slack 1.0, bit-equal
+good = jax.jit(compile_plan(plan, mesh, join_gather_budget=1,
+                            shuffle_slack=1.0,
+                            stats_tables=tables))(tables)
+for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(good)):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+# unrepresentative stats (uniform keys) undersize owner 0's bucket: the
+# overflow guard still NaN-poisons instead of dropping rows silently
+fake = {"L": Table.from_columns(
+            {"k": jnp.asarray([0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11])},
+            prob=left.prob),
+        "R": right}
+bad = jax.jit(compile_plan(plan, mesh, join_gather_budget=1,
+                           shuffle_slack=1.0,
+                           stats_tables=fake))(tables)
+assert np.isnan(np.asarray(bad.prob)).any(), np.asarray(bad.prob)
+print("STATS OK")
+""", devices=3)
