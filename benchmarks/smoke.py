@@ -21,6 +21,10 @@ is gated twice: the double-buffered vs synchronous wave-transfer wall
 times (the overlap win, floored on multi-core hosts) and the static
 streamed-vs-resident peak rows/device at 1x and 8x data — the streamed
 peak must stay FLAT as the table grows 8x past the device row budget.
+The self-healing happy path is gated too: the with-ExecutionReport run
+of the Q1-shaped plan must stay within ``TOLERANCE`` of the plain run
+and ``run_plan`` must resolve it in one attempt (diagnostics are free
+when nothing is wrong).
 
     PYTHONPATH=src python benchmarks/smoke.py [--mesh] [--check] [--update]
 
@@ -320,6 +324,31 @@ def bench_streamed(n_orders: int = 8000, repeat: int = 5):
     return rows
 
 
+def bench_retry_overhead(n_orders: int = 1000, repeat: int = 5):
+    """The happy path of the self-healing controller must be (nearly)
+    free: the Q1-shaped resident plan jitted once plain and once with
+    ``with_report=True`` (the ExecutionReport threaded through the run),
+    reported as the with-report / plain wall-time ratio.  ``--check``
+    gates the ratio at ``TOLERANCE`` — diagnostics may not tax clean
+    runs — and the bench asserts ``run_plan`` resolves the clean plan in
+    ONE attempt (zero retries burned when nothing is wrong)."""
+    from repro.db.plans import RetryPolicy, run_plan
+
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    tables = db.tables()
+    li = Select(Scan("lineitem"), lambda t: t["l_shipdate"] > tpch.DAY0_1995)
+    plan = GroupAgg(li, ("l_returnflag", "l_linestatus"), "l_quantity",
+                    "SUM", 8, "normal")
+    t_base = _time(jax.jit(compile_plan(plan)), (tables,), repeat)
+    t_rep = _time(jax.jit(compile_plan(plan, with_report=True)),
+                  (tables,), repeat)
+    _, rep = run_plan(plan, tables, policy=RetryPolicy(max_attempts=2))
+    assert rep.waves["attempts"] == 1, rep.describe()
+    assert rep.issues() == {}, rep.describe()
+    return [("smoke/retry_overhead", t_rep / max(t_base, 1e-12),
+             f"base={t_base * 1e6:.1f}us,report={t_rep * 1e6:.1f}us")]
+
+
 def streamed_layout(n_orders: int = 1000, budget: int = 2000,
                     csz: int = 500) -> dict:
     """Static peak rows/device of the streamed scan at 1x and 8x data:
@@ -380,6 +409,11 @@ def _check(rows) -> int:
                   f"{TOLERANCE} x shuffle_home {home:.1f}us (the fused "
                   "pipeline stopped beating shuffle + gather-home)")
             failures += 1
+    retry = values.get("smoke/retry_overhead")
+    if retry is not None and retry > TOLERANCE:
+        print(f"FAIL retry_overhead: with-report run {retry:.2f}x plain "
+              f"> {TOLERANCE}x (diagnostics are taxing the happy path)")
+        failures += 1
     overlap = values.get("smoke/streamed/overlap_win")
     if overlap is not None and overlap < _stream_overlap_floor():
         print(f"FAIL streamed: overlap win {overlap:.2f}x < "
@@ -389,7 +423,8 @@ def _check(rows) -> int:
     for name, value, _ in rows:
         if name in ("smoke/copartitioned_agg/roundtrips_saved",
                     "smoke/streamed/overlap_win",
-                    "smoke/streamed/double_buffer/1dev"):
+                    "smoke/streamed/double_buffer/1dev",
+                    "smoke/retry_overhead"):
             continue                     # ratio/structural rows, gated above
         if name.startswith("smoke/exact_speedup"):
             if value < MIN_EXACT_SPEEDUP:
@@ -460,7 +495,8 @@ def _check(rows) -> int:
 
 def _update(rows):
     skip = ("smoke/exact_speedup", "smoke/copartitioned_agg/roundtrips",
-            "smoke/streamed/overlap_win", "smoke/streamed/double_buffer")
+            "smoke/streamed/overlap_win", "smoke/streamed/double_buffer",
+            "smoke/retry_overhead")
     recorded = {name: us for name, us, _ in rows
                 if not name.startswith(skip)}
     saved = {name: v for name, v, _ in rows
@@ -483,6 +519,7 @@ def main() -> int:
     rows += bench_shuffle_join()
     rows += bench_copartitioned_agg()
     rows += bench_streamed()
+    rows += bench_retry_overhead()
     rows += bench_exact_speedup()
     if "--mesh" in sys.argv and len(jax.devices()) > 1:
         from repro.launch.mesh import make_host_mesh

@@ -505,6 +505,24 @@ class MinMax(UDA):
         """Exact P(aggregate undefined) = prod over all tuples of (1-p)."""
         return jnp.exp(state.total_log_none)
 
+    def tail_mass(self, state: MinMaxState):
+        """Per-group §V-B.2 truncation mass: the probability the exact
+        aggregate lies STRICTLY beyond the kept kappa-support (evicted
+        values present while every kept value is absent) — i.e. the
+        ``p_tail`` of :meth:`finalize` minus its empty-world component.
+        ``tail_log_none`` accumulates log(1-p) over exactly the evicted
+        tuples, so the mass is
+
+            prod_kept Q_j * (1 - prod_evicted (1-p))
+
+        and is exactly 0 when kappa covered every distinct value (nothing
+        evicted => tail_log_none = 0).  This is the quantity a caller (or
+        the retry controller) compares against a tolerance to decide
+        whether kappa must escalate."""
+        finite = jnp.isfinite(state.values)
+        lq = jnp.where(finite, state.log_none, 0.0)
+        return jnp.exp(jnp.sum(lq, axis=1)) * -jnp.expm1(state.tail_log_none)
+
 
 # ======================================================================
 # registry
@@ -834,6 +852,12 @@ class ChunkStateAccumulator:
         self.udas = udas
         self.num_chunks = num_chunks
         self._chunks: list = [None] * num_chunks
+
+    @property
+    def filed(self) -> int:
+        """Canonical chunks collected so far — the wave-resume checkpoint
+        marker: a retried wave must only bring chunks not yet filed."""
+        return sum(st is not None for st in self._chunks)
 
     def add_wave(self, chunk_ids, parts: list) -> None:
         """File one wave's per-chunk state dicts under their global

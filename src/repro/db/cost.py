@@ -251,6 +251,24 @@ def wave_schedule(chunk_rows: int, chunks: int, shards: int,
                         n_waves=n_waves, n_shards=shards)
 
 
+# ----------------------------------------------------- retry escalation
+def escalated_slack(slack: float, n_shards: int) -> float:
+    """The next ``shuffle_slack`` after an overflow: doubled, capped at
+    ``n_shards`` — where :func:`repro.db.physical.bucket_capacity` pins
+    every bucket at the sender's full local rows and overflow becomes
+    impossible, so the ladder terminates in O(log n_shards) doublings
+    even without a demand observation."""
+    return min(float(n_shards), max(2.0 * slack, 1.0))
+
+
+def halved_wave_chunks(sched: WaveSchedule) -> int:
+    """The next ``stream_wave_chunks`` (global chunk slots per wave)
+    after a persistent transfer fault: half the wave, floored at one
+    chunk slot per shard — the smallest slab the streamed executor can
+    ship, so the ladder terminates."""
+    return max(1, sched.local_chunks_per_wave // 2) * sched.n_shards
+
+
 def streamed_scan(m: CostModel, rows: int, wave_rows: int,
                   n_cols: int) -> Cost:
     """Out-of-core scan: every row crosses host→device once per streamed

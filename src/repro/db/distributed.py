@@ -76,6 +76,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from ..core import uda
+from ..testing import faults
 from . import operators as ops
 from . import physical as phys
 from .table import Table
@@ -213,6 +214,7 @@ def shuffle_by_key(keys, cols: dict, axis_names, *, n_shards: int,
     """
     axis_names = tuple(axis_names)
     _count("shuffle")
+    faults.on_exchange()
     ok = jnp.ones(keys.shape, bool) if valid is None else valid
     dest = jnp.mod(keys.astype(jnp.int32), n_shards)
     slot, sent, overflow = ops.bucket_slots(dest, ok, n_shards, capacity)
@@ -257,6 +259,31 @@ def _check_exchange_cols(what: str, cols) -> None:
                          f"for exchange fields): {bad}")
 
 
+def _send_demand(keys, valid, n_shards: int):
+    """Peak per-owner send demand of one shard: the largest number of
+    valid rows this shard wants to route to any single owner.  pmax'd
+    across shards this is exactly the bucket capacity that makes the
+    exchange overflow-free — the concrete escalation target the retry
+    controller reads from ``ExecutionReport.exchange_demand``."""
+    dest = jnp.mod(keys.astype(jnp.int32), n_shards)
+    cnt = jnp.zeros((n_shards,), jnp.int32).at[dest].add(
+        valid.astype(jnp.int32))
+    return jnp.max(cnt)
+
+
+def _record_leg(report, label: str, leg: str, axis_names, overflow,
+                keys, valid, n_shards: int, capacity: int) -> None:
+    """File one exchange leg into the ReportBuilder (costs two extra
+    collectives per leg, so the joins only call this when a report was
+    requested)."""
+    if report is None:
+        return
+    report.exchange_leg(
+        label, leg, jax.lax.psum(overflow, axis_names),
+        jax.lax.pmax(_send_demand(keys, valid, n_shards), axis_names),
+        capacity)
+
+
 def _exchange_build(right: Table, right_key: str, right_cols, axis_names,
                     n_shards: int, build_bucket: int):
     """Shuffle the build side's valid rows to their ``right_key %
@@ -286,7 +313,8 @@ def _chunk_ids(capacity: int, axis_names, chunk_size: int,
 def shuffle_fk_join(left: Table, right: Table, left_key: str,
                     right_key: str, right_cols: Sequence[str], axis_names,
                     *, n_shards: int, build_bucket: int,
-                    probe_bucket: int) -> Table:
+                    probe_bucket: int, report=None,
+                    label: str = "") -> Table:
     """Hash-partitioned FK join (call inside shard_map): the ShuffleJoin
     strategy of :mod:`repro.db.physical`.
 
@@ -346,6 +374,10 @@ def shuffle_fk_join(left: Table, right: Table, left_key: str,
     back = shuffle_back(resp, axis_names, n_shards, probe_bucket)
     got = ops.take_from_buckets(back, slot, sent)
 
+    _record_leg(report, label, "build", axis_names, b_over,
+                right[right_key], right.valid, n_shards, build_bucket)
+    _record_leg(report, label, "probe", axis_names, p_over,
+                lkey, left.valid, n_shards, probe_bucket)
     over = jax.lax.psum(b_over + p_over, axis_names)
     prob = left.prob * got[PROB]
     prob = jnp.where(over > 0, jnp.asarray(jnp.nan, prob.dtype), prob)
@@ -360,7 +392,8 @@ def copartitioned_fk_join(left: Table, right: Table, left_key: str,
                           carry_cols: Sequence[str], axis_names, *,
                           n_shards: int, build_bucket: int,
                           probe_bucket: int, chunk_size: int,
-                          num_chunks: int) -> Table:
+                          num_chunks: int, report=None,
+                          label: str = "") -> Table:
     """Hash-partitioned FK join WITHOUT the response round-trip (the
     CoPartitionedJoin strategy of :mod:`repro.db.physical`): matched rows
     STAY at their ``left_key % n_shards`` owner so a downstream GROUP BY
@@ -411,6 +444,10 @@ def copartitioned_fk_join(left: Table, right: Table, left_key: str,
                    **{c: precv[c] for c in carry_cols}},
                   precv[_PROB], pmask, phys.HashPartitioned(left_key))
     out = ops.fk_join(probe, build, left_key, right_key, right_cols)
+    _record_leg(report, label, "build", axis_names, b_over,
+                right[right_key], right.valid, n_shards, build_bucket)
+    _record_leg(report, label, "probe", axis_names, p_over,
+                lkey, left.valid, n_shards, probe_bucket)
     over = jax.lax.psum(b_over + p_over, axis_names)
     return out.with_prob(jnp.where(
         over > 0, jnp.asarray(jnp.nan, out.prob.dtype), out.prob))
@@ -418,7 +455,8 @@ def copartitioned_fk_join(left: Table, right: Table, left_key: str,
 
 def repartition_by_key(t: Table, key: str, carry_cols: Sequence[str],
                        axis_names, *, n_shards: int, bucket: int,
-                       chunk_size: int, num_chunks: int) -> Table:
+                       chunk_size: int, num_chunks: int, report=None,
+                       label: str = "") -> Table:
     """Hash-exchange a RowBlocked relation to its ``key % n_shards``
     owners (the Repartition strategy): the no-join feed of a
     PartitionedAgg.  Rows ship (key, p, canonical-chunk id, carry_cols);
@@ -436,6 +474,8 @@ def repartition_by_key(t: Table, key: str, carry_cols: Sequence[str],
     recv, mask, _, _, over = shuffle_by_key(
         kcol, cols, axis_names, n_shards=n_shards, capacity=bucket,
         valid=t.valid)
+    _record_leg(report, label, "repart", axis_names, over,
+                kcol, t.valid, n_shards, bucket)
     over = jax.lax.psum(over, axis_names)
     prob = jnp.where(over > 0, jnp.asarray(jnp.nan, recv[_PROB].dtype),
                      recv[_PROB])

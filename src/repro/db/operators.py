@@ -399,7 +399,8 @@ def minmax_runs(u: uda.MinMax, state: uda.MinMaxState) -> dict:
                 run_value=values.reshape(-1),
                 run_mass=jnp.where(finite, mass, 0.0).reshape(-1),
                 run_valid=finite.reshape(-1),
-                p_empty=u.p_empty(state), p_tail=p_tail)
+                p_empty=u.p_empty(state), p_tail=p_tail,
+                tail_mass=u.tail_mass(state))
 
 
 def group_minmax(table: Table, values, ids, max_groups: int, sign: float = 1.0,

@@ -453,7 +453,8 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
                model: C.CostModel | None = None,
                tables: dict | None = None,
                device_row_budget: int | None = None,
-               stream_wave_chunks: int | None = None) -> PhysNode:
+               stream_wave_chunks: int | None = None,
+               bucket_floor: int | None = None) -> PhysNode:
     """Lower a logical plan to the physical IR: enumerate physical
     candidates per node, cost them with :mod:`repro.db.cost`, pick the
     cheapest.
@@ -492,6 +493,13 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
     bucket sizing of :func:`concrete_bucket_capacity`; goldens that pass
     only ``caps`` keep the deterministic slack sizing.  Pure: no table
     DATA is consumed beyond the optional key histograms.
+
+    ``bucket_floor`` raises every slack-sized exchange bucket to at least
+    this many rows (still capped at the sender's local rows, where
+    overflow is impossible) — the retry controller's concrete-capacity
+    escalation: re-lowering with the observed peak demand from
+    ``ExecutionReport.exchange_demand`` as the floor makes the retried
+    run overflow-free in one step.
     """
     from . import plans as L
 
@@ -538,8 +546,11 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
                     tables.get(scan.name), key, n_shards)
             if hist_cache[ck] is not None:
                 return hist_cache[ck]
-        return bucket_capacity(-(-rows // n_shards), n_shards,
-                               m.shuffle_slack)
+        local_rows = -(-rows // n_shards)
+        cap = bucket_capacity(local_rows, n_shards, m.shuffle_slack)
+        if bucket_floor is not None:
+            cap = max(cap, min(bucket_floor, local_rows))
+        return cap
 
     def join_budget(node):
         return node.gather_budget if node.gather_budget is not None \

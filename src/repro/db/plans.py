@@ -86,8 +86,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from ..core import uda
+from ..testing import faults
+from . import cost as C
 from . import operators as ops
 from . import physical as phys
+from .report import ExecutionReport, ReportBuilder, nan_count
 from .table import HostTable, Table
 
 
@@ -291,11 +294,30 @@ def _append_slab(states: dict, udas: dict, udas_i: dict, sts: dict) -> None:
             udas[name] = udas_i[name]
 
 
+def _lost_group_count(code_live, big, merged, ids):
+    """Live rows whose group code was dropped past ``max_groups``: a
+    dropped code can never equal ``merged[ids]`` (the table holds only
+    the kept distinct codes), while every kept live code does — so the
+    mismatch count is exactly the rows the group-code table lost."""
+    return jnp.sum((code_live != big)
+                   & (merged[ids] != code_live)).astype(jnp.int32)
+
+
 def _finalize_pass(node, pa, udas: dict, states: dict, gvalid,
-                   key_columns):
+                   key_columns, rb=None, label: str = ""):
     """The replicated epilogue of one aggregation pass, selected by
     ``node.kind``; ``key_columns(cols)`` returns the per-group
-    representatives of the named columns."""
+    representatives of the named columns.  With a :class:`ReportBuilder`
+    the pass also files its diagnostics: NaN counts of every folded UDA
+    state and the per-group §V-B.2 truncation mass of each MIN/MAX
+    aggregate."""
+    if rb is not None:
+        for name, st in states.items():
+            rb.state_nan(f"{label}.{name}", nan_count(st))
+        for name, _value, agg, _method in pa.specs:
+            if agg in ("MIN", "MAX"):
+                rb.tail(f"{label}.{name}",
+                        udas[name].tail_mass(states[name]))
     conf = udas["confidence"].finalize(states["confidence"])
     if node.kind == "project":
         gcols = key_columns(list(pa.keys))
@@ -392,7 +414,10 @@ def compile_plan(root: Node, mesh=None, *,
                  device_row_budget: int | None = None,
                  stream_wave_chunks: int | None = None,
                  stream_double_buffer: bool = True,
-                 stats_tables: Dict[str, Table] | None = None):
+                 stats_tables: Dict[str, Table] | None = None,
+                 with_report: bool = False,
+                 shuffle_bucket_floor: int | None = None,
+                 stream_wave_retries: int = 2):
     """Emit a function tables -> result (Table or dict of arrays).
 
     With ``mesh``, the logical plan lowers to a sharded physical plan
@@ -470,6 +495,19 @@ def compile_plan(root: Node, mesh=None, *,
     histograms size the exchange buckets, replacing the flat
     ``shuffle_slack`` capacity (the overflow-NaN guard stays as the
     backstop for stale stats).
+
+    Self-healing hooks (see :mod:`repro.db.report` and :func:`run_plan`):
+    ``with_report=True`` makes the compiled function return
+    ``(result, ExecutionReport)`` — per-exchange overflow / demand /
+    capacity, group-code-table overflow, per-MIN/MAX §V-B.2 truncation
+    mass, NaN counts of the folded UDA states, and (streamed) wave
+    progress.  ``shuffle_bucket_floor`` raises every slack-sized exchange
+    bucket to at least that many rows (the retry controller re-lowers
+    with the observed peak demand).  ``stream_wave_retries`` bounds the
+    IN-PLACE re-ship attempts of a faulted wave transfer before the
+    fault propagates (annotated with the halved wave size for the
+    controller); the wave loop always resumes from the last retired
+    wave — completed waves are never re-streamed.
     """
     from . import distributed as dist
 
@@ -517,12 +555,15 @@ def compile_plan(root: Node, mesh=None, *,
             return pnode.child.max_groups
         raise TypeError(pnode)
 
-    def make_runner(sh_tables: Dict[str, Table]) -> SimpleNamespace:
+    def make_runner(sh_tables: Dict[str, Table],
+                    rb: ReportBuilder | None = None) -> SimpleNamespace:
         """Bind the physical-plan interpreter to one dict of (shard-local)
         tables; in mesh mode the closures run inside shard_map.  The
         streamed executor binds the SAME interpreter to every wave's slab
         (the StreamedScan resolves to the slab), so resident and streamed
-        execution share one code path for everything below the merge."""
+        execution share one code path for everything below the merge.
+        ``rb`` (a :class:`ReportBuilder`) collects the run's diagnostics
+        while the plan traces."""
 
         def sharded(t: Table) -> bool:
             return bool(axes) and isinstance(t.part, phys.RowBlocked)
@@ -588,7 +629,17 @@ def compile_plan(root: Node, mesh=None, *,
             pa = node.child
             t = run(pa.child)
             mg = pa.max_groups
-            ids, _, gvalid = rel_group_ids(t, pa.keys, mg)
+            ids, merged, gvalid = rel_group_ids(t, pa.keys, mg)
+            label = rb.begin_agg(node.kind) if rb is not None else ""
+            if rb is not None:
+                code_live, big = ops.live_key_codes(t, list(pa.keys))
+                lost = _lost_group_count(code_live, big, merged, ids)
+                if sharded(t) or hash_partitioned(t):
+                    # Row-partitioned input: each shard counted its own
+                    # rows.  Replicated inputs count every row on every
+                    # shard — summing would multiply by the shard count.
+                    lost = jax.lax.psum(lost, axes)
+                rb.group_overflow(label, lost)
             values = _pass_values(pa.specs, t)
             exact_names, slabs = _pass_slabs(pa, cf_budget_elems)
             cf_operands: dict = {}
@@ -617,7 +668,8 @@ def compile_plan(root: Node, mesh=None, *,
                 udas[name] = _agg_uda("SUM", "exact", pa.kappa, pa.num_freq)
             return _finalize_pass(
                 node, pa, udas, states, gvalid,
-                lambda cols: rel_key_columns(t, cols, ids, mg))
+                lambda cols: rel_key_columns(t, cols, ids, mg),
+                rb=rb, label=label)
 
         def run(node: phys.PhysNode):
             if isinstance(node, (phys.ShardScan, phys.StreamedScan)):
@@ -646,28 +698,35 @@ def compile_plan(root: Node, mesh=None, *,
             if isinstance(node, phys.ShuffleJoin):
                 lt = run(node.left)
                 rt = run(node.right)
+                lbl = rb.begin_exchange("shuffle_join") \
+                    if rb is not None else ""
                 return dist.shuffle_fk_join(
                     lt, rt, node.left_key, node.right_key,
                     list(node.right_cols), axes, n_shards=shards,
                     build_bucket=node.build_bucket,
-                    probe_bucket=node.probe_bucket)
+                    probe_bucket=node.probe_bucket,
+                    report=rb, label=lbl)
             if isinstance(node, phys.CoPartitionedJoin):
                 lt = run(node.left)
                 rt = run(node.right)
+                lbl = rb.begin_exchange("copart_join") \
+                    if rb is not None else ""
                 return dist.copartitioned_fk_join(
                     lt, rt, node.left_key, node.right_key,
                     list(node.right_cols), list(node.carry_cols), axes,
                     n_shards=shards, build_bucket=node.build_bucket,
                     probe_bucket=node.probe_bucket,
                     chunk_size=_canonical_rows(node.left) // chunks,
-                    num_chunks=chunks)
+                    num_chunks=chunks, report=rb, label=lbl)
             if isinstance(node, phys.Repartition):
                 t = run(node.child)
+                lbl = rb.begin_exchange("repartition") \
+                    if rb is not None else ""
                 return dist.repartition_by_key(
                     t, node.key, list(node.carry_cols), axes,
                     n_shards=shards, bucket=node.bucket,
                     chunk_size=_canonical_rows(node.child) // chunks,
-                    num_chunks=chunks)
+                    num_chunks=chunks, report=rb, label=lbl)
             if isinstance(node, phys.MergeAgg):
                 return run_agg(node)
             raise TypeError(node)
@@ -677,9 +736,10 @@ def compile_plan(root: Node, mesh=None, *,
                                rel_key_columns=rel_key_columns,
                                sharded=sharded)
 
-    def run_plan(sh_tables: Dict[str, Table], proot: phys.PhysNode):
+    def interpret(sh_tables: Dict[str, Table], proot: phys.PhysNode,
+                  rb: ReportBuilder | None = None):
         """Interpret the physical plan end-to-end (the resident path)."""
-        r = make_runner(sh_tables)
+        r = make_runner(sh_tables, rb)
         out = r.run(proot)
         if isinstance(out, Table):
             if r.sharded(out):
@@ -732,8 +792,14 @@ def compile_plan(root: Node, mesh=None, *,
 
         def wave_b(slab, res, merged):
             t = make_runner({**res, sc.name: slab}).run(spine)
-            code_live, _ = ops.live_key_codes(t, keys)
+            code_live, big = ops.live_key_codes(t, keys)
             ids = ops.codes_to_ids(code_live, merged)
+            # The wave's group-overflow contribution is always computed
+            # (one compare + sum — keeping the jit cache's trace
+            # signature independent of report collection).
+            lost = _lost_group_count(code_live, big, merged, ids)
+            if axes:
+                lost = jax.lax.psum(lost, axes)
             values = _pass_values(pa.specs, t)
             out_states = []
             for si, (lo, cnt) in enumerate(slabs):
@@ -747,7 +813,7 @@ def compile_plan(root: Node, mesh=None, *,
             gcols = ops.group_key_columns(t, kcols, ids, mg)
             if axes:
                 gcols = {k: jax.lax.pmax(v, axes) for k, v in gcols.items()}
-            return out_states, gcols
+            return out_states, gcols, lost
 
         if axes:
             wave_a = shard_map(wave_a, mesh=mesh,
@@ -764,22 +830,35 @@ def compile_plan(root: Node, mesh=None, *,
         _wave_cache[key] = fns
         return fns
 
-    def _stream(ht: HostTable, sched, wave_call, collect):
+    def _stream(ht: HostTable, sched, wave_call, collect) -> int:
         """The double-buffered wave loop: slab w+1 is sliced and
         ``device_put`` WHILE the device works on slab w (JAX async
         dispatch — the host never blocks on the wave computation), so
         transfer and compute overlap and device residency is two slabs.
         With ``stream_double_buffer=False`` the loop blocks around every
         wave — the serialised control the streaming benchmarks compare
-        against."""
+        against.
+
+        Fault tolerance: each host→device transfer passes through
+        ``testing.faults.on_transfer``; a :class:`~repro.testing.faults.
+        TransferFault` re-ships the SAME wave up to ``stream_wave_retries``
+        times.  Wave w is retired (``collect``-ed) BEFORE slab w+1 is
+        prefetched, so the loop's position IS the checkpoint: a fault only
+        ever re-ships waves whose states are not yet filed, and completed
+        waves are never re-streamed.  A fault that survives the in-place
+        retries propagates annotated with the halved wave size
+        (``wave_chunks``) so :func:`run_plan` can re-lower a smaller
+        schedule.  Returns the number of re-ship retries."""
         csz = sched.chunk_rows
         lrows = sched.local_chunks_per_wave * csz
         lslots = sched.n_waves * sched.local_chunks_per_wave
+        n_retries = 0
 
         def ship(w):
             # Wave w takes the next `lrows` rows of EVERY shard's slot
             # range — strided slices host-side, split back per device by
             # the sharded transfer.
+            faults.on_transfer(w, lrows * shards)
             starts = tuple(s * lslots * csz + w * lrows
                            for s in range(shards))
             slab = ht.wave_slab(starts, lrows)
@@ -787,7 +866,19 @@ def compile_plan(root: Node, mesh=None, *,
                 return jax.device_put(slab, NamedSharding(mesh, P(axes)))
             return jax.device_put(slab)
 
-        nxt = ship(0)
+        def try_ship(w):
+            nonlocal n_retries
+            for attempt in range(stream_wave_retries + 1):
+                try:
+                    return ship(w)
+                except faults.TransferFault as e:
+                    if attempt == stream_wave_retries:
+                        e.wave_chunks = C.halved_wave_chunks(sched)
+                        e.at_minimum = sched.local_chunks_per_wave == 1
+                        raise
+                    n_retries += 1
+
+        nxt = try_ship(0)
         prev = None
         for w in range(sched.n_waves):
             cur, nxt = nxt, None
@@ -802,12 +893,16 @@ def compile_plan(root: Node, mesh=None, *,
                 # (unbounded run-ahead trades the overlap win away to
                 # allocator pressure).
                 jax.block_until_ready(prev)
-            if w + 1 < sched.n_waves:
-                nxt = ship(w + 1)
+            # Retire wave w before prefetching w+1 (collect is host
+            # bookkeeping on async values — it doesn't block the
+            # overlap): the fault-resume contract above.
             collect(w, out)
+            if w + 1 < sched.n_waves:
+                nxt = try_ship(w + 1)
             prev = out
+        return n_retries
 
-    def _streamed_exec(proot, padded):
+    def _streamed_exec(proot, padded, rb: ReportBuilder | None = None):
         """Run a physical plan containing a StreamedScan: the lowest
         aggregation pass above the scan executes as waves (see
         ``compile_plan``'s docstring); any plan suffix above that pass
@@ -838,8 +933,8 @@ def compile_plan(root: Node, mesh=None, *,
         # under hierarchical merging (ops.merge_group_codes), so merging
         # the per-wave tables reproduces the resident table bit for bit.
         code_tabs = [None] * sched.n_waves
-        _stream(ht, sched, lambda w, slab: wave_a(slab, resident),
-                lambda w, out: code_tabs.__setitem__(w, out))
+        retries = _stream(ht, sched, lambda w, slab: wave_a(slab, resident),
+                          lambda w, out: code_tabs.__setitem__(w, out))
         mg = pa.max_groups
         merged = ops.merge_group_codes(jnp.concatenate(code_tabs), mg)
         gvalid = merged != jnp.iinfo(merged.dtype).max
@@ -857,22 +952,30 @@ def compile_plan(root: Node, mesh=None, *,
         lcpw = sched.local_chunks_per_wave
         lslots = sched.n_waves * lcpw
         gcols_run: dict = {}
+        lost_waves: list = []
 
         def collect_b(w, out):
-            out_states, gcols = out
+            out_states, gcols, lost = out
             slot_ids = [s * lslots + w * lcpw + j
                         for s in range(shards) for j in range(lcpw)]
             for si, parts in enumerate(out_states):
                 accs[si].add_wave(slot_ids, parts)
+            lost_waves.append(lost)     # async values; summed after loop
             for k, v in gcols.items():
                 # Per-group key representatives: segment_max identities
                 # fill absent groups, so a max across waves is exact.
                 gcols_run[k] = (v if k not in gcols_run
                                 else jnp.maximum(gcols_run[k], v))
 
-        _stream(ht, sched,
-                lambda w, slab: wave_b(slab, resident, merged), collect_b)
+        retries += _stream(
+            ht, sched, lambda w, slab: wave_b(slab, resident, merged),
+            collect_b)
 
+        label = rb.begin_agg(agg.kind) if rb is not None else ""
+        if rb is not None:
+            rb.group_overflow(label, sum(lost_waves))
+            rb.set_waves(completed=2 * sched.n_waves,
+                         total=2 * sched.n_waves, retries=retries)
         udas: dict = {}
         states: dict = {}
         for si in range(len(slabs)):
@@ -881,7 +984,8 @@ def compile_plan(root: Node, mesh=None, *,
             udas[name] = _agg_uda("SUM", "exact", pa.kappa, pa.num_freq)
         result = _finalize_pass(
             agg, pa, udas, states, gvalid,
-            lambda cols: {k: gcols_run[k] for k in cols})
+            lambda cols: {k: gcols_run[k] for k in cols},
+            rb=rb, label=label)
         if agg is proot:
             return (result.with_part(phys.Replicated())
                     if isinstance(result, Table) else result)
@@ -895,11 +999,27 @@ def compile_plan(root: Node, mesh=None, *,
                                           result.capacity))
         canon_caps[_STREAMED_RESULT] = result.capacity
         if not mesh_mode:
-            return run_plan({**resident, _STREAMED_RESULT: result}, outer)
-        fn = shard_map(lambda sh, ex: run_plan({**sh, **ex}, outer),
-                       mesh=mesh, in_specs=(P(axes), P()), out_specs=P(),
-                       check_vma=False)
-        return fn(resident, {_STREAMED_RESULT: result})
+            return interpret({**resident, _STREAMED_RESULT: result},
+                             outer, rb)
+        if rb is None:
+            fn = shard_map(lambda sh, ex: interpret({**sh, **ex}, outer),
+                           mesh=mesh, in_specs=(P(axes), P()),
+                           out_specs=P(), check_vma=False)
+            return fn(resident, {_STREAMED_RESULT: result})
+        # The suffix traces under shard_map, so its diagnostics must ride
+        # the traced outputs: a forked builder (label counters continue
+        # from the streamed pass) collects inside, its built report is
+        # returned as replicated leaves, and the concrete copy is
+        # absorbed back host-side.
+        sub = rb.fork()
+        fn = shard_map(
+            lambda sh, ex: (interpret({**sh, **ex}, outer, sub),
+                            sub.build()),
+            mesh=mesh, in_specs=(P(axes), P()), out_specs=P(),
+            check_vma=False)
+        out, rep = fn(resident, {_STREAMED_RESULT: result})
+        rb.absorb(rep)
+        return out
 
     def compiled(tables: Dict[str, Table]):
         # Every compile pads every base table to the canonical chunk grid
@@ -929,16 +1049,169 @@ def compile_plan(root: Node, mesh=None, *,
                                 canonical_chunks=chunks,
                                 model=cost_model, tables=plan_tables,
                                 device_row_budget=device_row_budget,
-                                stream_wave_chunks=stream_wave_chunks)
+                                stream_wave_chunks=stream_wave_chunks,
+                                bucket_floor=shuffle_bucket_floor)
+        rb = ReportBuilder() if with_report else None
         if any(isinstance(n, phys.StreamedScan) for n in _iter_phys(proot)):
-            return _streamed_exec(proot, padded)
+            out = _streamed_exec(proot, padded, rb)
+            return (out, rb.build()) if with_report else out
         resident = {k: (t.to_table() if isinstance(t, HostTable) else t)
                     for k, t in padded.items()}
         if not mesh_mode:
-            return run_plan(resident, proot)
-        fn = shard_map(lambda sh: run_plan(sh, proot), mesh=mesh,
-                       in_specs=(P(axes),), out_specs=P(),
+            out = interpret(resident, proot, rb)
+            return (out, rb.build()) if with_report else out
+        if not with_report:
+            fn = shard_map(lambda sh: interpret(sh, proot), mesh=mesh,
+                           in_specs=(P(axes),), out_specs=P(),
+                           check_vma=False)
+            return fn(resident)
+        # The report's leaves are traced inside shard_map; returning the
+        # built pytree alongside the result is what carries them out
+        # (every recorded value is psum/pmax-replicated, honouring the
+        # P() out_spec).
+        fn = shard_map(lambda sh: (interpret(sh, proot, rb), rb.build()),
+                       mesh=mesh, in_specs=(P(axes),), out_specs=P(),
                        check_vma=False)
         return fn(resident)
 
     return compiled
+
+
+# ======================================================================
+# the escalating retry controller
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How :func:`run_plan` escalates when a run's
+    :class:`~repro.db.report.ExecutionReport` shows a problem.
+
+    max_attempts   total compile+run attempts (first run included)
+    tail_tol       largest acceptable per-group MIN/MAX §V-B.2
+                   truncation mass; above it kappa doubles
+    wave_retries   in-place re-ship attempts per faulted wave transfer
+                   before the streamed executor gives the fault back to
+                   the controller (which then halves the wave size)
+    """
+    max_attempts: int = 3
+    tail_tol: float = 0.0
+    wave_retries: int = 2
+
+
+class RetryExhausted(RuntimeError):
+    """The retry ladder ran out of attempts with issues outstanding; the
+    last run's report is attached for diagnosis."""
+
+    def __init__(self, msg: str, report=None):
+        super().__init__(msg)
+        self.report = report
+
+
+def _scale_plan(node: Node, kappa_scale: int, groups_scale: int) -> Node:
+    """Rebuild the logical DAG with every GroupAgg kappa (and, on group
+    overflow, every grouped node's max_groups) scaled — the logical-level
+    escalations; a scale of 1 returns the node unchanged (same object, so
+    an unescalated retry reuses compile caches)."""
+    reb: dict = {}
+    for f in ("child", "left", "right"):
+        c = getattr(node, f, None)
+        if isinstance(c, Node):
+            nc = _scale_plan(c, kappa_scale, groups_scale)
+            if nc is not c:
+                reb[f] = nc
+    if isinstance(node, GroupAgg) and kappa_scale != 1:
+        reb["kappa"] = node.kappa * kappa_scale
+    if groups_scale != 1 and isinstance(node, (GroupAgg, Project,
+                                               ReweightGreater)):
+        reb["max_groups"] = node.max_groups * groups_scale
+    return dataclasses.replace(node, **reb) if reb else node
+
+
+def run_plan(root: Node, tables: Dict[str, Table], mesh=None, *,
+             policy: RetryPolicy | None = None, jit: bool = False,
+             **opts):
+    """Run a logical plan under the self-healing retry loop: compile
+    (``compile_plan(..., with_report=True)``), run, DIAGNOSE the
+    :class:`~repro.db.report.ExecutionReport`, and re-lower with
+    escalated parameters until the run is clean (or ``policy.
+    max_attempts`` is spent — :class:`RetryExhausted`).  Escalations:
+
+    * exchange overflow  -> ``shuffle_bucket_floor`` = the observed peak
+      per-(sender, owner) send demand (exact, so ONE retry suffices) and
+      ``shuffle_slack`` doubled (capped at n_shards, where overflow is
+      impossible) as the belt-and-braces ladder;
+    * truncation tail mass above ``policy.tail_tol`` -> kappa doubled;
+    * group-code-table overflow -> max_groups doubled;
+    * a transfer fault surviving the in-loop wave retries -> wave size
+      halved (``stream_wave_chunks``).
+
+    NaN counts WITHOUT an exchange overflow mean the NaN came in with
+    the data — nothing to escalate, so the result returns as-is with the
+    report flagging it.
+
+    Returns ``(result, report)``; ``report.final_params`` records the
+    final attempt's overrides and ``report.waves["attempts"]`` the
+    attempt count.  Because every attempt is a fresh compile at its own
+    parameters, the converged result is bit-identical to a first run
+    launched with ``final_params`` — the determinism contract extended
+    to the retry loop.
+
+    ``jit=True`` wraps the compiled function in ``jax.jit`` (required to
+    exercise the traced-key slack sizing: eager runs size buckets from
+    concrete key histograms and cannot overflow).  Not available for
+    streamed plans (the wave loop is a host loop).
+    """
+    policy = policy or RetryPolicy()
+    opts = dict(opts)
+    slack = float(opts.pop("shuffle_slack", 4.0))
+    floor = opts.pop("shuffle_bucket_floor", None)
+    wave_chunks = opts.pop("stream_wave_chunks", None)
+    kappa_scale = 1
+    groups_scale = 1
+    n_shards = 1
+    if mesh is not None:
+        from . import distributed as dist
+        for a in dist._tuple_axes(mesh, opts.get("data_axes", ("data",))):
+            n_shards *= mesh.shape[a]
+
+    out = report = None
+    attempt = 0
+    for attempt in range(1, policy.max_attempts + 1):
+        fn = compile_plan(_scale_plan(root, kappa_scale, groups_scale),
+                          mesh, with_report=True, shuffle_slack=slack,
+                          shuffle_bucket_floor=floor,
+                          stream_wave_chunks=wave_chunks,
+                          stream_wave_retries=policy.wave_retries,
+                          **opts)
+        if jit:
+            fn = jax.jit(fn)
+        try:
+            out, report = fn(tables)
+        except faults.TransferFault as e:
+            if (e.wave_chunks is None or e.at_minimum
+                    or attempt == policy.max_attempts):
+                raise
+            wave_chunks = e.wave_chunks
+            continue
+        issues = report.issues(policy.tail_tol)
+        if not any(k != "nan" for k in issues):
+            break
+        if attempt == policy.max_attempts:
+            raise RetryExhausted(
+                f"unresolved after {attempt} attempts: "
+                f"{report.describe(policy.tail_tol)}", report)
+        if "overflow" in issues:
+            floor = max(floor or 0,
+                        max(int(jnp.max(report.exchange_demand[k]))
+                            for k in issues["overflow"]))
+            slack = C.escalated_slack(slack, n_shards)
+        if "tail" in issues:
+            kappa_scale *= 2
+        if "group_overflow" in issues:
+            groups_scale *= 2
+
+    report.final_params.update(
+        shuffle_slack=slack, shuffle_bucket_floor=floor,
+        stream_wave_chunks=wave_chunks, kappa_scale=kappa_scale,
+        groups_scale=groups_scale)
+    report.waves["attempts"] = attempt
+    return out, report

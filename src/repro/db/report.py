@@ -1,0 +1,226 @@
+"""Structured run diagnostics: the ExecutionReport pytree threaded out of
+every ``compile_plan(..., with_report=True)`` run.
+
+The engine's failure modes used to be detect-or-die: shuffle bucket
+overflow NaN-poisons the answer (and can slip past boolean/integer
+output columns silently — see ``dist.shuffle_fk_join``), MIN/MAX
+truncation mass (``tail_log_none``, the paper's §V-B.2 approximation
+error) was computed but never surfaced, and nothing distinguished "the
+answer is NaN because an exchange dropped rows" from "the input data was
+NaN".  An :class:`ExecutionReport` carries every detection signal out of
+the compiled run as a pytree of (mostly scalar) arrays, so callers — and
+the escalating retry controller :func:`repro.db.plans.run_plan` — can
+DIAGNOSE a run instead of squinting at NaNs:
+
+    exchange_overflow   per exchange leg: rows dropped for static bucket
+                        capacity (psum'd — every shard agrees); > 0 means
+                        the NaN poison fired (or would have — boolean
+                        consumers included)
+    exchange_demand     per exchange leg: the observed peak
+                        per-(sender, owner) send demand (pmax'd) — the
+                        concrete capacity a retry needs to make overflow
+                        impossible
+    exchange_capacity   per exchange leg: the static bucket capacity the
+                        run used (demand > capacity <=> overflow)
+    group_overflow      per aggregation pass: live rows whose group code
+                        was dropped past ``max_groups`` (the group-id
+                        protocol stays exact for KEPT groups; this counts
+                        the lost ones)
+    tail_mass           per MIN/MAX aggregate: the per-group §V-B.2
+                        truncation mass (see :meth:`repro.core.uda.
+                        MinMax.tail_mass`) — exactly 0 when ``kappa``
+                        covers every distinct value
+    state_nan           per aggregate state: NaN count in the FOLDED UDA
+                        state (NaN poison propagates through the p
+                        column into every additive state; legitimate
+                        non-finite values — MinMax +inf padding,
+                        log1p(-1) = -inf of deterministic tuples — are
+                        NOT counted)
+    waves               streamed runs: retired wave count, total waves,
+                        and transfer-fault retries (host-side ints); the
+                        retry controller adds ``attempts`` and
+                        ``final_params``
+
+NaN poisoning stays as the in-band backstop — the report is the
+out-of-band signal that survives boolean/integer consumers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+#: report fields, in flatten order (all dicts: label -> scalar/array).
+_FIELDS = ("exchange_overflow", "exchange_demand", "exchange_capacity",
+           "group_overflow", "tail_mass", "state_nan", "waves")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ExecutionReport:
+    """Diagnostics pytree of one compiled run (see module docstring).
+
+    A registered pytree (dict keys are static structure, values are
+    leaves), so it crosses jit / shard_map boundaries; all values are
+    replicated scalars or per-group arrays.  The ``issues`` /
+    ``ok`` helpers read concrete values and must run OUTSIDE jit —
+    i.e. on the report an executed run returned.
+    """
+    exchange_overflow: dict = dataclasses.field(default_factory=dict)
+    exchange_demand: dict = dataclasses.field(default_factory=dict)
+    exchange_capacity: dict = dataclasses.field(default_factory=dict)
+    group_overflow: dict = dataclasses.field(default_factory=dict)
+    tail_mass: dict = dataclasses.field(default_factory=dict)
+    state_nan: dict = dataclasses.field(default_factory=dict)
+    waves: dict = dataclasses.field(default_factory=dict)
+    #: set by the retry controller on the returned report (host-side,
+    #: not part of the pytree): the compile overrides of the final
+    #: attempt — {"shuffle_slack", "shuffle_bucket_floor",
+    #: "stream_wave_chunks", "kappa_scale", "groups_scale"}.
+    final_params: dict = dataclasses.field(default_factory=dict)
+
+    def tree_flatten(self):
+        keys = tuple(tuple(sorted(getattr(self, f))) for f in _FIELDS)
+        children = tuple(getattr(self, f)[k]
+                         for f, ks in zip(_FIELDS, keys) for k in ks)
+        return children, keys
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        it = iter(children)
+        return cls(*({k: next(it) for k in ks} for ks in aux))
+
+    # ------------------------------------------------ host-side diagnosis
+    def issues(self, tail_tol: float = 0.0) -> dict:
+        """Concrete problem summary (call OUTSIDE jit, on an executed
+        run's report): {} when the run is trustworthy.  Keys:
+
+        * ``"overflow"``: {exchange leg: rows dropped} (> 0 only)
+        * ``"group_overflow"``: {pass: live rows whose group was lost}
+        * ``"tail"``: {aggregate: max per-group truncation mass}, only
+          entries above ``tail_tol``
+        * ``"nan"``: {state: NaN count} — reported only when no exchange
+          overflowed (overflow explains the NaN; without one, the NaN
+          came in with the data and no escalation can remove it)
+        """
+        out: dict = {}
+        over = {k: int(v) for k, v in self.exchange_overflow.items()
+                if int(v) > 0}
+        if over:
+            out["overflow"] = over
+        gover = {k: int(v) for k, v in self.group_overflow.items()
+                 if int(v) > 0}
+        if gover:
+            out["group_overflow"] = gover
+        tails = {k: float(jnp.max(v)) for k, v in self.tail_mass.items()}
+        tails = {k: t for k, t in tails.items() if t > tail_tol}
+        if tails:
+            out["tail"] = tails
+        if not over:
+            nans = {k: int(v) for k, v in self.state_nan.items()
+                    if int(v) > 0}
+            if nans:
+                out["nan"] = nans
+        return out
+
+    def ok(self, tail_tol: float = 0.0) -> bool:
+        return not self.issues(tail_tol)
+
+    def overflow_total(self) -> int:
+        return sum(int(v) for v in self.exchange_overflow.values())
+
+    def max_tail_mass(self) -> float:
+        """Largest per-group §V-B.2 truncation mass over every MIN/MAX
+        aggregate of the run (0.0 when none ran or none truncated)."""
+        if not self.tail_mass:
+            return 0.0
+        return max(float(jnp.max(v)) for v in self.tail_mass.values())
+
+    def describe(self, tail_tol: float = 0.0) -> str:
+        iss = self.issues(tail_tol)
+        if not iss:
+            return "clean"
+        return "; ".join(f"{k}: {v}" for k, v in sorted(iss.items()))
+
+
+def nan_count(state):
+    """Total NaN count over the inexact leaves of a UDA state pytree.
+    NaN — not isfinite — is the poison signal: MinMax pads values with
+    +inf and AtLeastOne legitimately reaches log1p(-1) = -inf for
+    deterministic (p = 1) tuples."""
+    total = jnp.zeros((), jnp.int32)
+    for leaf in jax.tree.leaves(state):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact):
+            total = total + jnp.sum(jnp.isnan(leaf)).astype(jnp.int32)
+    return total
+
+
+class ReportBuilder:
+    """Trace-time collector behind one compiled run: the executor calls
+    the record methods while the plan traces (or executes eagerly) and
+    :meth:`build` assembles the :class:`ExecutionReport`.  Labels are
+    assigned from per-kind counters in execution order, so a plan's
+    report structure is deterministic across traces (the jit cache and
+    shard_map out-trees depend on it)."""
+
+    def __init__(self):
+        self._counters: dict = {}
+        self._report = ExecutionReport()
+
+    def _next(self, kind: str) -> str:
+        i = self._counters.get(kind, 0)
+        self._counters[kind] = i + 1
+        return f"{kind}[{i}]"
+
+    # ------------------------------------------------------- exchanges
+    def begin_exchange(self, kind: str) -> str:
+        """Label one exchange operator (shuffle_join / copartitioned_join
+        / repartition); its legs record under ``label.leg``."""
+        return self._next(kind)
+
+    def exchange_leg(self, label: str, leg: str, overflow, demand,
+                     capacity: int) -> None:
+        key = f"{label}.{leg}"
+        self._report.exchange_overflow[key] = jnp.asarray(overflow,
+                                                          jnp.int32)
+        self._report.exchange_demand[key] = jnp.asarray(demand, jnp.int32)
+        self._report.exchange_capacity[key] = jnp.asarray(capacity,
+                                                          jnp.int32)
+
+    # ---------------------------------------------- aggregation passes
+    def begin_agg(self, kind: str) -> str:
+        return self._next(f"agg:{kind}")
+
+    def group_overflow(self, label: str, count) -> None:
+        self._report.group_overflow[label] = jnp.asarray(count, jnp.int32)
+
+    def tail(self, name: str, per_group) -> None:
+        self._report.tail_mass[name] = per_group
+
+    def state_nan(self, name: str, count) -> None:
+        self._report.state_nan[name] = jnp.asarray(count, jnp.int32)
+
+    # ------------------------------------------------------- streaming
+    def set_waves(self, completed: int, total: int, retries: int) -> None:
+        self._report.waves["completed"] = completed
+        self._report.waves["total"] = total
+        self._report.waves["retries"] = retries
+
+    # ------------------------------------------- trace-boundary plumbing
+    def fork(self) -> "ReportBuilder":
+        """A child builder whose label counters CONTINUE from this one —
+        for a plan suffix traced under its own shard_map: the child
+        collects inside the trace, its built report rides the traced
+        outputs, and :meth:`absorb` merges the concrete copy back."""
+        child = ReportBuilder()
+        child._counters = dict(self._counters)
+        return child
+
+    def absorb(self, report: ExecutionReport) -> None:
+        """Merge a (concrete) report produced by a forked builder."""
+        for f in _FIELDS:
+            getattr(self._report, f).update(getattr(report, f))
+
+    def build(self) -> ExecutionReport:
+        return self._report

@@ -332,6 +332,41 @@ def q18(db: TPCH, mode: str = "aggregate", qty_threshold: int = 150,
     return dict(valid=out["valid"], sum_qty=(mu, var), p_qualifies=p_gt)
 
 
+def q18_topk(db: TPCH, max_groups: int = 2048, kappa: int = 8, mesh=None,
+             plan_opts=None):
+    """Top-k variant of Q18: the per-order MAX(l_quantity) distribution
+    with the paper's §V-B.2 truncation bound exposed per group.
+
+    The MinMax UDA keeps the ``kappa`` best distinct values per group
+    (§V-B.1 masses are exact on that support).  What used to be invisible
+    to callers is the truncation remainder: the probability that a
+    group's true MAX lies STRICTLY beyond the kept support.  It is
+    returned here as ``tail_mass`` — per group,
+
+        tail_mass_g = prod_{kept values} Q_j * (1 - prod_{evicted} (1-p))
+
+    (see :meth:`repro.core.uda.MinMax.tail_mass`), which §V-B.2 shows
+    bounds the total probability unaccounted for by the reported
+    per-value masses; it is exactly 0 when kappa covered every distinct
+    value.  A caller ranking orders by MAX quantity can therefore certify
+    each group's answer to that bound — or hand the plan to
+    :func:`repro.db.plans.run_plan` with ``RetryPolicy(tail_tol=...)``,
+    which doubles kappa until the bound is within tolerance.
+
+    Returns per-run arrays (the flattened G*kappa support grid of
+    ``operators.minmax_runs``) plus the per-group ``p_empty`` and
+    ``tail_mass``.
+    """
+    plan = GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity",
+                    "MAX", max_groups, kappa=kappa)
+    out = compile_plan(plan, mesh, **(plan_opts or {}))(db.tables())
+    mm = out["minmax"]
+    return dict(valid=out["valid"], keys=out["keys"],
+                run_group=mm["run_group"], run_value=mm["run_value"],
+                run_mass=mm["run_mass"], run_valid=mm["run_valid"],
+                p_empty=mm["p_empty"], tail_mass=mm["tail_mass"])
+
+
 def q20(db: TPCH, mode: str = "aggregate", nation_name: int = 3,
         max_groups: int = 1024, avail_frac: float = 0.05, mesh=None,
         plan_opts=None):

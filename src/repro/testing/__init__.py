@@ -1,0 +1,3 @@
+"""Deterministic test harnesses for the execution engine (fault
+injection, see :mod:`repro.testing.faults`).  Kept importable from the
+hot path — the hooks are no-ops unless a plan is installed."""

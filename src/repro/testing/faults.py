@@ -1,0 +1,134 @@
+"""Deterministic fault injection for the execution engine.
+
+The streamed executor (``db/plans.py::_streamed_exec``) and the shuffle
+exchange (``db/distributed.py::shuffle_by_key``) call the module-level
+hooks below at their host-visible failure points:
+
+    on_transfer(wave, rows)   before every host→device wave transfer
+                              (``jax.device_put`` of one slab)
+    on_exchange()             at every ``shuffle_by_key`` trace — the
+                              collective-launch stand-in (the exchange
+                              itself runs inside shard_map, so trace
+                              time is the only host-visible point)
+
+With no plan installed both hooks are no-ops (one attribute read — the
+production cost of the harness).  Tests install a :class:`FaultPlan`
+with :func:`inject` to fail chosen occurrences deterministically:
+
+    with faults.inject(faults.FaultPlan(transfer_calls={5})) as fp:
+        result = compiled(tables)       # 6th transfer raises once
+    assert fp.consumed()                # the fault actually fired
+
+Every injected failure raises :class:`TransferFault`.  The wave loop
+resumes the failed wave from the ``ChunkStateAccumulator`` checkpoint
+(completed waves are never re-streamed — assert on ``fp.log``); a fault
+that exhausts the in-loop retries propagates annotated with the wave
+size (``wave_chunks``) so :class:`repro.db.plans.RetryPolicy` can
+re-lower with a halved wave.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterable
+
+
+class TransferFault(RuntimeError):
+    """An injected (or, in principle, real) host↔device transfer /
+    collective-launch failure.  When the fault escapes the streamed
+    executor's in-loop wave retries it is annotated: ``wave_chunks`` is
+    the HALVED wave size (global chunk slots) the retry controller
+    should re-lower with, and ``at_minimum`` marks a schedule already at
+    one chunk slot per shard — where no smaller wave exists and the
+    fault is terminal."""
+
+    wave_chunks: int | None = None
+    at_minimum: bool = False
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic injection schedule.
+
+    transfer_calls   global occurrence indices of ``on_transfer`` calls
+                     (0-based, counted across phases and retries) that
+                     fail ONCE each — the transient-fault model: the
+                     retried transfer succeeds.
+    exchange_calls   global occurrence indices of ``on_exchange`` calls
+                     that fail once each.
+    transfer_rows_over   when set, EVERY transfer of more than this many
+                     rows fails (persistent): models a transfer too big
+                     for the link, so in-loop retries can't help and
+                     only a smaller wave (RetryPolicy halving) succeeds.
+    """
+
+    transfer_calls: Iterable[int] = ()
+    exchange_calls: Iterable[int] = ()
+    transfer_rows_over: int | None = None
+
+    def __post_init__(self):
+        self._transfer_pending = set(self.transfer_calls)
+        self._exchange_pending = set(self.exchange_calls)
+        self._n_transfer = 0
+        self._n_exchange = 0
+        #: every on_transfer call as (occurrence, wave, rows, failed) —
+        #: the resume assertions read this.
+        self.log: list = []
+
+    # ------------------------------------------------------------ hooks
+    def on_transfer(self, wave: int, rows: int) -> None:
+        i = self._n_transfer
+        self._n_transfer += 1
+        fail = False
+        if i in self._transfer_pending:
+            self._transfer_pending.discard(i)
+            fail = True
+        if (self.transfer_rows_over is not None
+                and rows > self.transfer_rows_over):
+            fail = True
+        self.log.append((i, wave, rows, fail))
+        if fail:
+            raise TransferFault(
+                f"injected transfer fault: occurrence {i}, wave {wave}, "
+                f"{rows} rows")
+
+    def on_exchange(self) -> None:
+        i = self._n_exchange
+        self._n_exchange += 1
+        if i in self._exchange_pending:
+            self._exchange_pending.discard(i)
+            raise TransferFault(f"injected exchange fault: occurrence {i}")
+
+    def consumed(self) -> bool:
+        """Every one-shot fault fired (the test exercised what it meant
+        to)."""
+        return not self._transfer_pending and not self._exchange_pending
+
+
+#: the installed plan (None = hooks are no-ops).  Single-threaded test
+#: harness state, mirroring dist.COLLECTIVE_COUNTS.
+_ACTIVE: FaultPlan | None = None
+
+
+def on_transfer(wave: int, rows: int) -> None:
+    if _ACTIVE is not None:
+        _ACTIVE.on_transfer(wave, rows)
+
+
+def on_exchange() -> None:
+    if _ACTIVE is not None:
+        _ACTIVE.on_exchange()
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan):
+    """Install ``plan`` for the with-block (exclusive — nesting raises:
+    overlapping schedules would race their occurrence counters)."""
+    global _ACTIVE
+    if _ACTIVE is not None:
+        raise RuntimeError("a FaultPlan is already installed")
+    _ACTIVE = plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE = None
