@@ -24,7 +24,12 @@ peak must stay FLAT as the table grows 8x past the device row budget.
 The self-healing happy path is gated too: the with-ExecutionReport run
 of the Q1-shaped plan must stay within ``TOLERANCE`` of the plain run
 and ``run_plan`` must resolve it in one attempt (diagnostics are free
-when nothing is wrong).
+when nothing is wrong).  The query-serving layer is gated three ways:
+the cached-submit latency row (baseline), the plan-cache hit-vs-cold
+ratio (floored at ``MIN_CACHE_HIT_SPEEDUP`` — a 'hit' that re-traces
+collapses it), and the 64-point parameterized Q6 sweep vs 64 sequential
+per-point compiles (floored at ``MIN_BATCH_SPEEDUP`` — amortising the
+compile is the feature).
 
     PYTHONPATH=src python benchmarks/smoke.py [--mesh] [--check] [--update]
 
@@ -54,7 +59,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 os.pardir, "src"))
 
 from repro.db import tpch
-from repro.db.plans import (GroupAgg, ReweightGreater, Scan, Select,
+from repro.db.plans import (GroupAgg, Map, ReweightGreater, Scan, Select,
                             compile_plan, shard_capacity)
 
 BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -66,6 +71,8 @@ STREAM_TOLERANCE = 2.0      # streamed host-loop rows: the eager wave loop
                             # device rows, especially on 1-core hosts
 MIN_EXACT_SPEEDUP = 5.0     # grouped exact vs per-group scalar loop floor
 MIN_STREAM_OVERLAP = 1.2    # sync / double-buffered streamed-pass floor
+MIN_CACHE_HIT_SPEEDUP = 50.0  # plan-cache hit vs cold compile floor
+MIN_BATCH_SPEEDUP = 10.0    # batched-64 sweep vs 64 sequential compiles
 
 
 def _stream_overlap_floor() -> float:
@@ -349,6 +356,86 @@ def bench_retry_overhead(n_orders: int = 1000, repeat: int = 5):
              f"base={t_base * 1e6:.1f}us,report={t_rep * 1e6:.1f}us")]
 
 
+def bench_serving(n_orders: int = 1000, repeat: int = 5):
+    """The query-serving layer's reason to exist, measured: round 0
+    submits every TPC-H serving plan cold (full trace + compile), later
+    rounds resubmit FRESH plan objects — the structural plan cache must
+    serve them from the same executables.  Gated two ways: the cached
+    submit latency is baseline-gated like any timing row, and the
+    cold/hit ratio is floored at ``MIN_CACHE_HIT_SPEEDUP`` (if a cache
+    'hit' ever re-traces, the ratio collapses to ~1 and the gate
+    fires)."""
+    from repro.db.serving import QueryService
+
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    svc = QueryService(db.tables(), capacity=16)
+    plans = tpch.serving_plans()
+    t0 = time.perf_counter()
+    for name, plan in plans.items():
+        out, info = svc.submit(plan)
+        jax.block_until_ready(jax.tree.leaves(out))
+        assert not info["hit"], name
+    t_cold = (time.perf_counter() - t0) / len(plans)
+    best = float("inf")
+    for _ in range(repeat):
+        fresh = tpch.serving_plans()        # new objects: hits must be
+        t0 = time.perf_counter()            # structural, not identity
+        for name, plan in fresh.items():
+            out, info = svc.submit(plan)
+            jax.block_until_ready(jax.tree.leaves(out))
+            assert info["hit"], name
+        best = min(best, (time.perf_counter() - t0) / len(fresh))
+    return [("smoke/serving/hit/1dev", best * 1e6,
+             f"qps={1.0 / best:.0f},n_orders={n_orders}"),
+            ("smoke/serving/cache_hit_speedup", t_cold / best,
+             f"cold={t_cold * 1e6:.0f}us,hit={best * 1e6:.0f}us")]
+
+
+def bench_batched_sweep(n_orders: int = 200, n_points: int = 64):
+    """A 64-point Q6 what-if sweep, both ways: 64 per-point plans with
+    baked constants (64 traces + 64 compiles — what the engine did
+    before parameter lifting) vs ONE compiled q6_family executable
+    running all 64 points as one batched device program.  ``--check``
+    floors the ratio at ``MIN_BATCH_SPEEDUP``; wall times include each
+    arm's compiles because amortising the compile IS the feature."""
+    from repro.db.serving import QueryService
+
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    tables = db.tables()
+    lims = [float(i + 1) for i in range(n_points)]
+
+    def baked(lim):
+        sel = Select(Scan("lineitem"),
+                     lambda t: (t["l_shipdate"] >= tpch.DAY0_1995 - 400)
+                     & (t["l_shipdate"] < tpch.DAY0_1995)
+                     & (t["l_discount"] >= 5.0) & (t["l_discount"] <= 7.0)
+                     & (t["l_quantity"] < lim))
+        val = Map(sel, "q6_value",
+                  lambda t: t["l_quantity"] * t["l_discount"])
+        return GroupAgg(val, (), "q6_value", "SUM", 1, "normal",
+                        extra=(("cumulants", "q6_value", "SUM",
+                                "cumulants"),))
+
+    t0 = time.perf_counter()
+    for lim in lims:
+        out = jax.jit(compile_plan(baked(lim)))(tables)
+        jax.block_until_ready(jax.tree.leaves(out))
+    t_seq = time.perf_counter() - t0
+    jax.clear_caches()      # drop the 64 accreted executables (the
+    #                         failure mode the serving layer bounds)
+    svc = QueryService(tables, capacity=4)
+    batch = dict(disc_lo=jnp.full((n_points,), 5.0),
+                 disc_hi=jnp.full((n_points,), 7.0),
+                 qty_lim=jnp.asarray(lims))
+    t0 = time.perf_counter()
+    out, info = svc.sweep(tpch.q6_family(), batch)
+    jax.block_until_ready(jax.tree.leaves(out))
+    t_batch = time.perf_counter() - t0
+    return [(f"smoke/serving/batched{n_points}_speedup", t_seq / t_batch,
+             f"seq={t_seq:.2f}s,batched={t_batch:.2f}s,"
+             f"launches={info['launches']}")]
+
+
 def streamed_layout(n_orders: int = 1000, budget: int = 2000,
                     csz: int = 500) -> dict:
     """Static peak rows/device of the streamed scan at 1x and 8x data:
@@ -414,6 +501,17 @@ def _check(rows) -> int:
         print(f"FAIL retry_overhead: with-report run {retry:.2f}x plain "
               f"> {TOLERANCE}x (diagnostics are taxing the happy path)")
         failures += 1
+    hit = values.get("smoke/serving/cache_hit_speedup")
+    if hit is not None and hit < MIN_CACHE_HIT_SPEEDUP:
+        print(f"FAIL serving: cache-hit speedup {hit:.1f}x < "
+              f"{MIN_CACHE_HIT_SPEEDUP}x floor (structural hits are "
+              "re-tracing)")
+        failures += 1
+    batched = values.get("smoke/serving/batched64_speedup")
+    if batched is not None and batched < MIN_BATCH_SPEEDUP:
+        print(f"FAIL serving: batched-64 sweep {batched:.1f}x < "
+              f"{MIN_BATCH_SPEEDUP}x over 64 sequential compiles")
+        failures += 1
     overlap = values.get("smoke/streamed/overlap_win")
     if overlap is not None and overlap < _stream_overlap_floor():
         print(f"FAIL streamed: overlap win {overlap:.2f}x < "
@@ -424,7 +522,9 @@ def _check(rows) -> int:
         if name in ("smoke/copartitioned_agg/roundtrips_saved",
                     "smoke/streamed/overlap_win",
                     "smoke/streamed/double_buffer/1dev",
-                    "smoke/retry_overhead"):
+                    "smoke/retry_overhead",
+                    "smoke/serving/cache_hit_speedup",
+                    "smoke/serving/batched64_speedup"):
             continue                     # ratio/structural rows, gated above
         if name.startswith("smoke/exact_speedup"):
             if value < MIN_EXACT_SPEEDUP:
@@ -496,7 +596,8 @@ def _check(rows) -> int:
 def _update(rows):
     skip = ("smoke/exact_speedup", "smoke/copartitioned_agg/roundtrips",
             "smoke/streamed/overlap_win", "smoke/streamed/double_buffer",
-            "smoke/retry_overhead")
+            "smoke/retry_overhead", "smoke/serving/cache_hit_speedup",
+            "smoke/serving/batched64_speedup")
     recorded = {name: us for name, us, _ in rows
                 if not name.startswith(skip)}
     saved = {name: v for name, v, _ in rows
@@ -520,6 +621,8 @@ def main() -> int:
     rows += bench_copartitioned_agg()
     rows += bench_streamed()
     rows += bench_retry_overhead()
+    rows += bench_serving()
+    rows += bench_batched_sweep()
     rows += bench_exact_speedup()
     if "--mesh" in sys.argv and len(jax.devices()) > 1:
         from repro.launch.mesh import make_host_mesh

@@ -9,8 +9,10 @@
                     expressed as plans and run through compile_plan
     distributed.py  generic shard_map glue over the UDA protocol
                     (Accumulate per shard / one-psum Merge / Finalize)
+    serving.py      the query-serving layer: bounded structural plan
+                    cache + batched parameterized execution (QueryService)
 """
-from . import distributed, operators, plans, tpch
+from . import distributed, operators, plans, serving, tpch
 from .table import Table
 
-__all__ = ["Table", "distributed", "operators", "plans", "tpch"]
+__all__ = ["Table", "distributed", "operators", "plans", "serving", "tpch"]

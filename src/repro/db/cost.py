@@ -251,6 +251,31 @@ def wave_schedule(chunk_rows: int, chunks: int, shards: int,
                         n_waves=n_waves, n_shards=shards)
 
 
+# ------------------------------------------------- batched parameter axis
+def batched(c: Cost, n_points: int) -> Cost:
+    """Cost of running one compiled plan vmapped over ``n_points``
+    parameter points: every relational intermediate (and its traffic and
+    work) materialises once PER POINT — the batch axis multiplies all
+    three components.  What batching saves is the per-point TRACE +
+    COMPILE, not the device work; the serving layer uses this to bound
+    how many points share one launch (:func:`sweep_chunk_points`)."""
+    return Cost(bytes_moved=c.bytes_moved * n_points,
+                peak_rows=c.peak_rows * n_points,
+                flops=c.flops * n_points)
+
+
+def sweep_chunk_points(per_point_rows: float, budget_rows: int | None,
+                       n_points: int) -> int:
+    """Largest per-launch point count of an ``n_points`` parameter sweep
+    whose batched peak rows (``per_point_rows`` each, the batch axis
+    multiplies residency — see :func:`batched`) fit ``budget_rows``;
+    floored at 1 so progress is always possible, and the whole sweep
+    when no budget is set."""
+    if not budget_rows or per_point_rows <= 0:
+        return max(1, n_points)
+    return max(1, min(n_points, int(budget_rows // per_point_rows)))
+
+
 # ----------------------------------------------------- retry escalation
 def escalated_slack(slack: float, n_shards: int) -> float:
     """The next ``shuffle_slack`` after an overflow: doubled, capped at

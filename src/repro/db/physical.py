@@ -230,7 +230,9 @@ impossible).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
+import types
 from typing import Callable
 
 from . import cost as C
@@ -394,6 +396,70 @@ class MergeAgg(PhysNode):
 
 
 _RESERVED_OUT_KEYS = frozenset({"valid", "keys", "confidence"})
+
+
+# ------------------------------------------------------ structural identity
+def structural_key(obj) -> tuple:
+    """A stable, hashable fingerprint of a plan object's STRUCTURE.
+
+    Frozen dataclasses (logical ``plans.Node``s, the PhysNode IR, cost
+    models, wave schedules) fingerprint as (class, field fingerprints);
+    plain Python functions — the lambdas a Select/Map carries — by their
+    compiled bytecode, constants and captured closure CELL VALUES, so two
+    separately constructed but textually identical plans produce EQUAL
+    keys (the property identity-keyed caches miss on), while a lambda
+    capturing a different constant produces a different key.  Containers
+    recurse; small concrete arrays fingerprint by dtype/shape/bytes.
+
+    Anything unrecognised falls back to ``id()`` — an identity key can
+    only cause a cache MISS, never a false hit, so the fingerprint is
+    safe to key compiled executables on (the serving layer's plan cache
+    and the streamed executor's wave cache both do).
+    """
+    if obj is None or isinstance(obj, (bool, int, float, complex, str,
+                                       bytes)):
+        return ("a", type(obj).__name__, obj)
+    if isinstance(obj, (tuple, list)):
+        return ("t", tuple(structural_key(x) for x in obj))
+    if isinstance(obj, dict):
+        return ("d", tuple(sorted((str(k), structural_key(v))
+                                  for k, v in obj.items())))
+    if isinstance(obj, (set, frozenset)):
+        return ("s", tuple(sorted(map(structural_key, obj), key=repr)))
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        cls = type(obj)
+        return ("dc", f"{cls.__module__}.{cls.__qualname__}",
+                tuple((f.name, structural_key(getattr(obj, f.name)))
+                      for f in dataclasses.fields(obj)))
+    if isinstance(obj, functools.partial):
+        return ("p", structural_key(obj.func), structural_key(obj.args),
+                structural_key(obj.keywords))
+    if isinstance(obj, types.MethodType):
+        return ("m", structural_key(obj.__func__),
+                structural_key(obj.__self__))
+    if isinstance(obj, types.CodeType):
+        return ("c", obj.co_code, obj.co_names, obj.co_varnames,
+                obj.co_argcount, structural_key(obj.co_consts))
+    if isinstance(obj, types.FunctionType):
+        cells = ()
+        if obj.__closure__:
+            vals = []
+            for cell in obj.__closure__:
+                try:
+                    vals.append(structural_key(cell.cell_contents))
+                except ValueError:          # empty cell
+                    vals.append(("empty",))
+            cells = tuple(vals)
+        return ("f", structural_key(obj.__code__), cells,
+                structural_key(obj.__defaults__))
+    try:
+        import numpy as np
+        arr = np.asarray(obj)
+        if arr.dtype != object and arr.size <= (1 << 16):
+            return ("arr", str(arr.dtype), arr.shape, arr.tobytes())
+    except Exception:
+        pass
+    return ("id", type(obj).__qualname__, id(obj))
 
 
 def bucket_capacity(local_rows: int, n_shards: int, slack: float) -> int:

@@ -77,6 +77,7 @@ Node zoo (Table I rows in brackets):
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from types import SimpleNamespace
 from typing import Callable, Dict, Sequence
 
@@ -182,6 +183,179 @@ class ReweightGreater(Node):
     max_groups: int
     threshold: float | None = None
     carry_cols: tuple = ()
+
+
+# ---------------------------------------------------- parameterized plans
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A named scalar hole in a logical plan: the value arrives at RUN
+    time (``compiled(tables, params={name: value})``) instead of being
+    baked into the trace, so one compiled executable serves a whole
+    family of queries — and ``jax.vmap`` over the params runs an N-point
+    parameter sweep as ONE device program (see
+    :class:`repro.db.serving.QueryService.sweep`).  Legal as
+    :attr:`ReweightGreater.threshold` and inside :class:`Parameterized`
+    predicates/column functions."""
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Parameterized:
+    """A Select predicate / Map column function with lifted scalar
+    parameters: ``fn(table, *values)`` receives the named params' values
+    in ``params`` order.  Structurally hashable (the plan cache keys on
+    the wrapped function's bytecode + the param names), and the executor
+    feeds it the run's parameter environment."""
+    fn: Callable
+    params: tuple
+
+    def __call__(self, t: Table, env: Dict[str, jnp.ndarray]):
+        return self.fn(t, *(env[p] for p in self.params))
+
+
+def plan_params(root: Node) -> frozenset:
+    """The set of parameter names a logical plan needs at run time."""
+    names: set = set()
+
+    def walk(n):
+        for f in ("child", "left", "right"):
+            c = getattr(n, f, None)
+            if isinstance(c, Node):
+                walk(c)
+        for f in ("pred", "fn"):
+            v = getattr(n, f, None)
+            if isinstance(v, Parameterized):
+                names.update(v.params)
+        if isinstance(getattr(n, "threshold", None), Param):
+            names.add(n.threshold.name)
+
+    walk(root)
+    return frozenset(names)
+
+
+def plan_key(root: Node) -> tuple:
+    """Stable structural cache key of a logical plan: two separately
+    constructed but identical plans (same node structure, same predicate
+    bytecode and captured constants, same static knobs) produce EQUAL
+    keys — the property the serving layer's plan cache and the streamed
+    wave cache key executables on.  Delegates to
+    :func:`repro.db.physical.structural_key`; unknown objects degrade to
+    identity keys (a possible miss, never a false hit)."""
+    return ("plan", phys.structural_key(root))
+
+
+def mesh_fingerprint(mesh) -> tuple | None:
+    """Hashable identity of a mesh for compile-cache keys (axis names,
+    mesh shape and device ids — what the lowering and the collectives
+    depend on); None for single-device compiles."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+class LRUCache:
+    """Bounded least-recently-used mapping with hit/miss/eviction
+    counters and an ``on_evict`` hook — the executable-cache primitive
+    behind the streamed wave cache and :class:`repro.db.serving.
+    PlanCache`.  The CPU jaxlib backend segfaults once a process
+    accretes a few hundred live compiled executables (see
+    docs/serving.md), so every cache holding compiled functions must
+    bound its population and drop executables on eviction."""
+
+    def __init__(self, capacity: int, on_evict: Callable | None = None):
+        if capacity < 1:
+            raise ValueError(f"LRUCache capacity must be >= 1, got "
+                             f"{capacity}")
+        self.capacity = capacity
+        self.on_evict = on_evict
+        self._data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def get(self, key, default=None):
+        if key in self._data:
+            self._data.move_to_end(key)
+            self.hits += 1
+            return self._data[key]
+        self.misses += 1
+        return default
+
+    def put(self, key, value) -> None:
+        if key in self._data:
+            self._data.move_to_end(key)
+        self._data[key] = value
+        self._trim()
+
+    def _trim(self) -> None:
+        while len(self._data) > self.capacity:
+            _, old = self._data.popitem(last=False)
+            self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(old)
+
+    def set_capacity(self, capacity: int) -> None:
+        if capacity < 1:
+            raise ValueError(f"LRUCache capacity must be >= 1, got "
+                             f"{capacity}")
+        self.capacity = capacity
+        self._trim()
+
+    def clear(self) -> None:
+        """Evict everything (the on_evict hook runs for each entry)."""
+        while self._data:
+            _, old = self._data.popitem(last=False)
+            self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(old)
+
+    def info(self) -> dict:
+        return dict(size=len(self._data), capacity=self.capacity,
+                    hits=self.hits, misses=self.misses,
+                    evictions=self.evictions)
+
+
+def _drop_executables(fns) -> None:
+    """LRU eviction hook: drop a jitted callable's (or tuple of
+    callables') compiled executables so the compiler footprint stays
+    flat."""
+    if not isinstance(fns, tuple):
+        fns = (fns,)
+    for f in fns:
+        clear = getattr(f, "clear_cache", None)
+        if clear is not None:
+            clear()
+
+
+#: Process-wide BOUNDED jit cache of the streamed executor's per-wave
+#: functions, keyed structurally (plan + mesh + grid params) so repeated
+#: compiles of the same streamed plan — including separately constructed
+#: identical plans — reuse one traced wave pair, while distinct plans
+#: past the capacity evict the least-recently-used executables instead
+#: of accreting until the CPU backend segfaults.  Replaces the unbounded
+#: per-``compile_plan`` ``_wave_cache`` dict.
+_WAVE_CACHE = LRUCache(capacity=32, on_evict=_drop_executables)
+
+
+def set_wave_cache_capacity(capacity: int) -> int:
+    """Resize the streamed executor's bounded wave-function cache
+    (evicting down to the new capacity if needed).  Returns the
+    previous capacity so callers can restore it."""
+    old = _WAVE_CACHE.capacity
+    _WAVE_CACHE.set_capacity(capacity)
+    return old
+
+
+def wave_cache_info() -> dict:
+    """Size/capacity/hit/miss/eviction counters of the wave cache."""
+    return _WAVE_CACHE.info()
 
 
 def _agg_uda(agg: str, method: str, kappa: int, num_freq: int = 0,
@@ -304,7 +478,7 @@ def _lost_group_count(code_live, big, merged, ids):
 
 
 def _finalize_pass(node, pa, udas: dict, states: dict, gvalid,
-                   key_columns, rb=None, label: str = ""):
+                   key_columns, rb=None, label: str = "", params=None):
     """The replicated epilogue of one aggregation pass, selected by
     ``node.kind``; ``key_columns(cols)`` returns the per-group
     representatives of the named columns.  With a :class:`ReportBuilder`
@@ -330,7 +504,10 @@ def _finalize_pass(node, pa, udas: dict, states: dict, gvalid,
             thr = gcols[node.threshold_col].astype(mu.dtype)
         else:
             gcols = key_columns(carry)
-            thr = jnp.asarray(node.threshold, mu.dtype)
+            thr = node.threshold
+            if isinstance(thr, Param):      # lifted constant: value at run
+                thr = (params or {})[thr.name]
+            thr = jnp.asarray(thr, mu.dtype)
         p_gt = ops.normal_greater(mu, var, thr)
         return Table({k: gcols[k] for k in carry}, conf * p_gt,
                      gvalid, node.part)
@@ -556,7 +733,8 @@ def compile_plan(root: Node, mesh=None, *,
         raise TypeError(pnode)
 
     def make_runner(sh_tables: Dict[str, Table],
-                    rb: ReportBuilder | None = None) -> SimpleNamespace:
+                    rb: ReportBuilder | None = None,
+                    params: dict | None = None) -> SimpleNamespace:
         """Bind the physical-plan interpreter to one dict of (shard-local)
         tables; in mesh mode the closures run inside shard_map.  The
         streamed executor binds the SAME interpreter to every wave's slab
@@ -669,7 +847,7 @@ def compile_plan(root: Node, mesh=None, *,
             return _finalize_pass(
                 node, pa, udas, states, gvalid,
                 lambda cols: rel_key_columns(t, cols, ids, mg),
-                rb=rb, label=label)
+                rb=rb, label=label, params=params)
 
         def run(node: phys.PhysNode):
             if isinstance(node, (phys.ShardScan, phys.StreamedScan)):
@@ -678,10 +856,17 @@ def compile_plan(root: Node, mesh=None, *,
                 # wave's slab.
                 return sh_tables[node.name].with_part(node.part)
             if isinstance(node, phys.PhysSelect):
-                return ops.select(run(node.child), node.pred)
+                pred = node.pred
+                if isinstance(pred, Parameterized):
+                    return ops.select(run(node.child),
+                                      lambda t: pred(t, params))
+                return ops.select(run(node.child), pred)
             if isinstance(node, phys.PhysMap):
                 t = run(node.child)
-                return t.with_column(node.name, node.fn(t))
+                fn = node.fn
+                col = fn(t, params) if isinstance(fn, Parameterized) \
+                    else fn(t)
+                return t.with_column(node.name, col)
             if isinstance(node, phys.GatherJoin):
                 lt = run(node.left)
                 rt = run(node.right)
@@ -737,9 +922,10 @@ def compile_plan(root: Node, mesh=None, *,
                                sharded=sharded)
 
     def interpret(sh_tables: Dict[str, Table], proot: phys.PhysNode,
-                  rb: ReportBuilder | None = None):
+                  rb: ReportBuilder | None = None,
+                  params: dict | None = None):
         """Interpret the physical plan end-to-end (the resident path)."""
-        r = make_runner(sh_tables, rb)
+        r = make_runner(sh_tables, rb, params)
         out = r.run(proot)
         if isinstance(out, Table):
             if r.sharded(out):
@@ -756,19 +942,21 @@ def compile_plan(root: Node, mesh=None, *,
         return out
 
     # ------------------------------------------------- streamed execution
-    #: jit cache of the per-wave functions, keyed by the physical plan
-    #: (frozen dataclasses compare structurally, callables by identity),
-    #: so repeated ``compiled()`` calls reuse the traced waves.
-    _wave_cache: dict = {}
-
     def _build_wave_fns(proot, agg, sc):
         """The two per-wave device functions of the streamed executor —
         phase A (group-code discovery) and phase B (chunk-state
         accumulation) — each re-running the plan spine below ``agg`` on
-        one slab, shard_mapped over the mesh and jitted."""
-        key = (proot,)
-        if key in _wave_cache:
-            return _wave_cache[key]
+        one slab, shard_mapped over the mesh and jitted.  Cached in the
+        process-wide bounded ``_WAVE_CACHE`` under the plan's STRUCTURAL
+        key plus everything else the traces depend on (mesh identity,
+        data axes, the canonical grid and the CF slab budget), so
+        separately constructed identical plans share one executable and
+        distinct plans past the capacity evict instead of accreting."""
+        key = ("wave", phys.structural_key(proot), mesh_fingerprint(mesh),
+               axes, shards, chunks, cf_budget_elems)
+        cached = _WAVE_CACHE.get(key)
+        if cached is not None:
+            return cached
         pa = agg.child
         spine = pa.child
         mg = pa.max_groups
@@ -780,8 +968,8 @@ def compile_plan(root: Node, mesh=None, *,
                 kcols.append(agg.threshold_col)
         exact_names, slabs = _pass_slabs(pa, cf_budget_elems)
 
-        def wave_a(slab, res):
-            t = make_runner({**res, sc.name: slab}).run(spine)
+        def wave_a(slab, res, pv):
+            t = make_runner({**res, sc.name: slab}, params=pv).run(spine)
             code_live, _ = ops.live_key_codes(t, keys)
             local = ops.merge_group_codes(code_live, mg)
             if axes:
@@ -790,8 +978,8 @@ def compile_plan(root: Node, mesh=None, *,
                 local = ops.merge_group_codes(gathered, mg)
             return local
 
-        def wave_b(slab, res, merged):
-            t = make_runner({**res, sc.name: slab}).run(spine)
+        def wave_b(slab, res, merged, pv):
+            t = make_runner({**res, sc.name: slab}, params=pv).run(spine)
             code_live, big = ops.live_key_codes(t, keys)
             ids = ops.codes_to_ids(code_live, merged)
             # The wave's group-overflow contribution is always computed
@@ -817,17 +1005,17 @@ def compile_plan(root: Node, mesh=None, *,
 
         if axes:
             wave_a = shard_map(wave_a, mesh=mesh,
-                               in_specs=(P(axes), P(axes)), out_specs=P(),
-                               check_vma=False)
-            wave_b = shard_map(wave_b, mesh=mesh,
                                in_specs=(P(axes), P(axes), P()),
+                               out_specs=P(), check_vma=False)
+            wave_b = shard_map(wave_b, mesh=mesh,
+                               in_specs=(P(axes), P(axes), P(), P()),
                                out_specs=P(), check_vma=False)
         # Donating the slab lets XLA reuse wave k's buffers for wave k+2
         # (the CPU backend does not support donation — avoid the warning).
         donate = (0,) if jax.default_backend() != "cpu" else ()
         fns = (jax.jit(wave_a, donate_argnums=donate),
                jax.jit(wave_b, donate_argnums=donate))
-        _wave_cache[key] = fns
+        _WAVE_CACHE.put(key, fns)
         return fns
 
     def _stream(ht: HostTable, sched, wave_call, collect) -> int:
@@ -902,7 +1090,8 @@ def compile_plan(root: Node, mesh=None, *,
             prev = out
         return n_retries
 
-    def _streamed_exec(proot, padded, rb: ReportBuilder | None = None):
+    def _streamed_exec(proot, padded, rb: ReportBuilder | None = None,
+                       params: dict | None = None):
         """Run a physical plan containing a StreamedScan: the lowest
         aggregation pass above the scan executes as waves (see
         ``compile_plan``'s docstring); any plan suffix above that pass
@@ -928,12 +1117,14 @@ def compile_plan(root: Node, mesh=None, *,
         resident = {k: (t.to_table() if isinstance(t, HostTable) else t)
                     for k, t in padded.items() if k != sc.name}
         wave_a, wave_b = _build_wave_fns(proot, agg, sc)
+        pv = dict(params or {})
 
         # Phase A: stream once for the global group-code table — exact
         # under hierarchical merging (ops.merge_group_codes), so merging
         # the per-wave tables reproduces the resident table bit for bit.
         code_tabs = [None] * sched.n_waves
-        retries = _stream(ht, sched, lambda w, slab: wave_a(slab, resident),
+        retries = _stream(ht, sched,
+                          lambda w, slab: wave_a(slab, resident, pv),
                           lambda w, out: code_tabs.__setitem__(w, out))
         mg = pa.max_groups
         merged = ops.merge_group_codes(jnp.concatenate(code_tabs), mg)
@@ -968,7 +1159,7 @@ def compile_plan(root: Node, mesh=None, *,
                                 else jnp.maximum(gcols_run[k], v))
 
         retries += _stream(
-            ht, sched, lambda w, slab: wave_b(slab, resident, merged),
+            ht, sched, lambda w, slab: wave_b(slab, resident, merged, pv),
             collect_b)
 
         label = rb.begin_agg(agg.kind) if rb is not None else ""
@@ -985,7 +1176,7 @@ def compile_plan(root: Node, mesh=None, *,
         result = _finalize_pass(
             agg, pa, udas, states, gvalid,
             lambda cols: {k: gcols_run[k] for k in cols},
-            rb=rb, label=label)
+            rb=rb, label=label, params=pv)
         if agg is proot:
             return (result.with_part(phys.Replicated())
                     if isinstance(result, Table) else result)
@@ -1000,12 +1191,14 @@ def compile_plan(root: Node, mesh=None, *,
         canon_caps[_STREAMED_RESULT] = result.capacity
         if not mesh_mode:
             return interpret({**resident, _STREAMED_RESULT: result},
-                             outer, rb)
+                             outer, rb, pv)
         if rb is None:
-            fn = shard_map(lambda sh, ex: interpret({**sh, **ex}, outer),
-                           mesh=mesh, in_specs=(P(axes), P()),
-                           out_specs=P(), check_vma=False)
-            return fn(resident, {_STREAMED_RESULT: result})
+            fn = shard_map(
+                lambda sh, ex, p: interpret({**sh, **ex}, outer,
+                                            params=p),
+                mesh=mesh, in_specs=(P(axes), P(), P()),
+                out_specs=P(), check_vma=False)
+            return fn(resident, {_STREAMED_RESULT: result}, pv)
         # The suffix traces under shard_map, so its diagnostics must ride
         # the traced outputs: a forked builder (label counters continue
         # from the streamed pass) collects inside, its built report is
@@ -1013,15 +1206,30 @@ def compile_plan(root: Node, mesh=None, *,
         # absorbed back host-side.
         sub = rb.fork()
         fn = shard_map(
-            lambda sh, ex: (interpret({**sh, **ex}, outer, sub),
-                            sub.build()),
-            mesh=mesh, in_specs=(P(axes), P()), out_specs=P(),
+            lambda sh, ex, p: (interpret({**sh, **ex}, outer, sub, p),
+                               sub.build()),
+            mesh=mesh, in_specs=(P(axes), P(), P()), out_specs=P(),
             check_vma=False)
-        out, rep = fn(resident, {_STREAMED_RESULT: result})
+        out, rep = fn(resident, {_STREAMED_RESULT: result}, pv)
         rb.absorb(rep)
         return out
 
-    def compiled(tables: Dict[str, Table]):
+    needed_params = plan_params(root)
+
+    def compiled(tables: Dict[str, Table], params: dict | None = None):
+        # Lifted-parameter environment: every Param hole must be bound,
+        # and only Param holes may be (a typo'd name would silently bake
+        # nothing).  Values may be traced — under jax.vmap each is one
+        # lane of the parameter batch (see repro.db.serving).
+        env = dict(params or {})
+        missing = needed_params - env.keys()
+        extra = env.keys() - needed_params
+        if missing or extra:
+            raise ValueError(
+                f"plan parameters mismatch: missing {sorted(missing)}, "
+                f"unexpected {sorted(extra)} (plan needs "
+                f"{sorted(needed_params)})")
+        env = {k: jnp.asarray(env[k]) for k in sorted(env)}
         # Every compile pads every base table to the canonical chunk grid
         # (the chunk boundaries define the deterministic fold tree) plus
         # whole padding chunks so any shard count owns equal chunk runs.
@@ -1053,26 +1261,27 @@ def compile_plan(root: Node, mesh=None, *,
                                 bucket_floor=shuffle_bucket_floor)
         rb = ReportBuilder() if with_report else None
         if any(isinstance(n, phys.StreamedScan) for n in _iter_phys(proot)):
-            out = _streamed_exec(proot, padded, rb)
+            out = _streamed_exec(proot, padded, rb, env)
             return (out, rb.build()) if with_report else out
         resident = {k: (t.to_table() if isinstance(t, HostTable) else t)
                     for k, t in padded.items()}
         if not mesh_mode:
-            out = interpret(resident, proot, rb)
+            out = interpret(resident, proot, rb, env)
             return (out, rb.build()) if with_report else out
         if not with_report:
-            fn = shard_map(lambda sh: interpret(sh, proot), mesh=mesh,
-                           in_specs=(P(axes),), out_specs=P(),
-                           check_vma=False)
-            return fn(resident)
+            fn = shard_map(lambda sh, p: interpret(sh, proot, params=p),
+                           mesh=mesh, in_specs=(P(axes), P()),
+                           out_specs=P(), check_vma=False)
+            return fn(resident, env)
         # The report's leaves are traced inside shard_map; returning the
         # built pytree alongside the result is what carries them out
         # (every recorded value is psum/pmax-replicated, honouring the
         # P() out_spec).
-        fn = shard_map(lambda sh: (interpret(sh, proot, rb), rb.build()),
-                       mesh=mesh, in_specs=(P(axes),), out_specs=P(),
-                       check_vma=False)
-        return fn(resident)
+        fn = shard_map(
+            lambda sh, p: (interpret(sh, proot, rb, p), rb.build()),
+            mesh=mesh, in_specs=(P(axes), P()), out_specs=P(),
+            check_vma=False)
+        return fn(resident, env)
 
     return compiled
 
@@ -1126,8 +1335,21 @@ def _scale_plan(node: Node, kappa_scale: int, groups_scale: int) -> Node:
     return dataclasses.replace(node, **reb) if reb else node
 
 
+def _default_compiler(root: Node, mesh=None, jit: bool = False, **opts):
+    """The retry controller's default compile hook: a fresh
+    ``compile_plan`` (jit-wrapped on request) per attempt.  A serving
+    layer substitutes :meth:`repro.db.serving.PlanCache.compile` here, so
+    every attempt's executable is cached under (plan structure, attempt
+    params) — a later identical submit hits the FINAL attempt's entry
+    bit-identically, and intermediate attempts never poison it."""
+    fn = compile_plan(root, mesh, **opts)
+    return jax.jit(fn) if jit else fn
+
+
 def run_plan(root: Node, tables: Dict[str, Table], mesh=None, *,
              policy: RetryPolicy | None = None, jit: bool = False,
+             params: dict | None = None, compiler=None,
+             kappa_scale: int = 1, groups_scale: int = 1,
              **opts):
     """Run a logical plan under the self-healing retry loop: compile
     (``compile_plan(..., with_report=True)``), run, DIAGNOSE the
@@ -1159,14 +1381,23 @@ def run_plan(root: Node, tables: Dict[str, Table], mesh=None, *,
     exercise the traced-key slack sizing: eager runs size buckets from
     concrete key histograms and cannot overflow).  Not available for
     streamed plans (the wave loop is a host loop).
+
+    ``params`` binds the plan's lifted :class:`Param` holes (passed
+    through to every attempt unchanged).  ``compiler`` replaces the
+    per-attempt compile (signature ``compiler(root, mesh, jit=...,
+    **opts) -> fn``) — the serving layer passes its bounded plan cache
+    here, keyed on each attempt's exact (scaled plan, lowering params),
+    so retries create per-attempt entries instead of poisoning the base
+    one.  ``kappa_scale`` / ``groups_scale`` seed the escalation ladder
+    (a service replaying a remembered ``final_params`` starts AT the
+    converged point: attempt 1 is clean and its compile is a cache hit).
     """
     policy = policy or RetryPolicy()
+    compiler = compiler or _default_compiler
     opts = dict(opts)
     slack = float(opts.pop("shuffle_slack", 4.0))
     floor = opts.pop("shuffle_bucket_floor", None)
     wave_chunks = opts.pop("stream_wave_chunks", None)
-    kappa_scale = 1
-    groups_scale = 1
     n_shards = 1
     if mesh is not None:
         from . import distributed as dist
@@ -1176,16 +1407,14 @@ def run_plan(root: Node, tables: Dict[str, Table], mesh=None, *,
     out = report = None
     attempt = 0
     for attempt in range(1, policy.max_attempts + 1):
-        fn = compile_plan(_scale_plan(root, kappa_scale, groups_scale),
-                          mesh, with_report=True, shuffle_slack=slack,
-                          shuffle_bucket_floor=floor,
-                          stream_wave_chunks=wave_chunks,
-                          stream_wave_retries=policy.wave_retries,
-                          **opts)
-        if jit:
-            fn = jax.jit(fn)
+        fn = compiler(_scale_plan(root, kappa_scale, groups_scale),
+                      mesh, jit=jit, with_report=True, shuffle_slack=slack,
+                      shuffle_bucket_floor=floor,
+                      stream_wave_chunks=wave_chunks,
+                      stream_wave_retries=policy.wave_retries,
+                      **opts)
         try:
-            out, report = fn(tables)
+            out, report = fn(tables, params)
         except faults.TransferFault as e:
             if (e.wave_chunks is None or e.at_minimum
                     or attempt == policy.max_attempts):

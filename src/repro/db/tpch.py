@@ -33,8 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import operators as ops
-from .plans import (FKJoin, GroupAgg, Map, Project, ReweightGreater, Scan,
-                    Select, compile_plan)
+from .plans import (FKJoin, GroupAgg, Map, Param, Parameterized, Project,
+                    ReweightGreater, Scan, Select, compile_plan)
 from .table import Table
 
 DAY0_1995 = 9131          # days since epoch-ish origin for synthetic dates
@@ -155,6 +155,139 @@ def generate(n_orders: int = 2000, lines_per_order: int = 4,
                      n_customers=n_customers, n_nations=n_nations))
 
 
+# ------------------------------------------------------ plan constructors
+# The aggregate-mode logical plans, exposed as standalone constructors so
+# the serving layer (repro.db.serving) can submit them without running a
+# query function: two calls build STRUCTURALLY EQUAL plans
+# (plans.plan_key), which is what the bounded plan cache keys on.
+def _q1_select():
+    return Select(Scan("lineitem"),
+                  lambda t: t["l_shipdate"] <= DAY0_1995 + 500)
+
+
+def q1_plan():
+    """Q1 aggregate-mode plan: pricing summary GROUP BY (returnflag,
+    linestatus) with SUM/COUNT/cumulant riders in one pass."""
+    return GroupAgg(_q1_select(), ("l_returnflag", "l_linestatus"),
+                    "l_quantity", "SUM", 8, "normal",
+                    extra=(("price", "l_extendedprice", "SUM", "normal"),
+                           ("count", "", "COUNT", "normal"),
+                           ("cumulants_qty", "l_quantity", "SUM",
+                            "cumulants")))
+
+
+def _q3_join(segment: int = 1, order_join_budget: int | None = None):
+    cust = Select(Scan("customer"), lambda t: t["c_mktsegment"] == segment)
+    orders = Select(Scan("orders"), lambda t: t["o_orderdate"] < DAY0_1995)
+    o = FKJoin(orders, cust, "o_custkey", "c_custkey", ("c_mktsegment",))
+    li = Select(Scan("lineitem"), lambda t: t["l_shipdate"] > DAY0_1995)
+    return FKJoin(li, o, "l_orderkey", "o_orderkey",
+                  ("o_orderdate", "o_custkey"),
+                  gather_budget=order_join_budget)
+
+
+def q3_plan(segment: int = 1, max_groups: int = 512,
+            order_join_budget: int | None = None):
+    """Q3 aggregate-mode plan: revenue per order of one market segment."""
+    return GroupAgg(_q3_join(segment, order_join_budget), ("l_orderkey",),
+                    "l_extendedprice", "SUM", max_groups, "normal",
+                    extra=(("cumulants", "l_extendedprice", "SUM",
+                            "cumulants"),))
+
+
+def _q6_select():
+    return Select(
+        Scan("lineitem"),
+        lambda t: (t["l_shipdate"] >= DAY0_1995 - 400)
+        & (t["l_shipdate"] < DAY0_1995)
+        & (t["l_discount"] >= 5) & (t["l_discount"] <= 7)
+        & (t["l_quantity"] < 24))
+
+
+def q6_plan(num_freq: int | None = None):
+    """Q6 aggregate-mode plan: the single-group scalar revenue SUM."""
+    val = Map(_q6_select(), "q6_value",
+              lambda t: t["l_quantity"] * t["l_discount"])
+    extra = (("cumulants", "q6_value", "SUM", "cumulants"),)
+    if num_freq:
+        extra += (("exact", "q6_value", "SUM", "exact"),)
+    return GroupAgg(val, (), "q6_value", "SUM", 1, "normal", extra=extra,
+                    num_freq=num_freq or 0)
+
+
+def q18_plan(qty_threshold: float = 150.0, max_groups: int = 2048):
+    """Q18 reweight plan: keep each order with p *= P(SUM(qty) > cutoff)
+    (Table I row III — the group_confidence shape)."""
+    return ReweightGreater(Scan("lineitem"), ("l_orderkey",), "l_quantity",
+                           "", max_groups, threshold=float(qty_threshold))
+
+
+def _q20_r10(nation_name: int = 3, max_groups: int = 1024,
+             avail_frac: float = 0.05):
+    r1 = Select(Scan("part"), lambda t: t["p_name_forest"])
+    r2 = FKJoin(Scan("partsupp"), r1, "ps_partkey", "p_partkey",
+                ("p_name_forest",))
+    r3 = Select(Scan("lineitem"),
+                lambda t: (t["l_shipdate"] >= DAY0_1995 - 365)
+                & (t["l_shipdate"] < DAY0_1995))
+    r4 = FKJoin(r3, r2, "l_pskey", "ps_pskey",
+                ("ps_availqty", "ps_suppkey", "ps_pskey"))
+    r4t = Map(r4, "q20_thresh",
+              lambda t: t["ps_availqty"].astype(t.prob.dtype) * avail_frac)
+    r7 = ReweightGreater(r4t, ("ps_pskey",), "l_quantity", "q20_thresh",
+                         max_groups, carry_cols=("ps_suppkey",))
+    nat = Select(Scan("nation"), lambda t: t["n_name"] == nation_name)
+    r9 = FKJoin(Scan("supplier"), nat, "s_nationkey", "n_nationkey",
+                ("n_name",))
+    return FKJoin(r7, r9, "ps_suppkey", "s_suppkey",
+                  ("s_name", "s_address"))
+
+
+def q20_plan(nation_name: int = 3, max_groups: int = 1024,
+             avail_frac: float = 0.05):
+    """Q20 plan (the paper's Fig. 6): project(s_name) of the reweighted
+    excess-stock pipeline."""
+    return Project(_q20_r10(nation_name, max_groups, avail_frac),
+                   ("s_name",), 64)
+
+
+def serving_plans(max_groups: int = 512) -> dict:
+    """One representative logical plan per TPC-H query — the serving
+    workload (`launch/serve.py --db`) and the cache-hit bit-equality
+    tests submit exactly these."""
+    return {"q1": q1_plan(), "q3": q3_plan(max_groups=max_groups),
+            "q6": q6_plan(), "q18": q18_plan(max_groups=4 * max_groups),
+            "q20": q20_plan()}
+
+
+# ------------------------------------------------- parameterized families
+def q6_family():
+    """Q6 as a parameterized family: the discount window and quantity
+    limit are lifted :class:`~repro.db.plans.Param` holes
+    (``disc_lo`` / ``disc_hi`` / ``qty_lim``), so ONE compiled
+    executable serves every setting and a what-if sweep over N settings
+    runs as one batched device program
+    (:meth:`repro.db.serving.QueryService.sweep`)."""
+    sel = Select(Scan("lineitem"), Parameterized(
+        lambda t, lo, hi, lim: (t["l_shipdate"] >= DAY0_1995 - 400)
+        & (t["l_shipdate"] < DAY0_1995)
+        & (t["l_discount"] >= lo) & (t["l_discount"] <= hi)
+        & (t["l_quantity"] < lim),
+        ("disc_lo", "disc_hi", "qty_lim")))
+    val = Map(sel, "q6_value", lambda t: t["l_quantity"] * t["l_discount"])
+    return GroupAgg(val, (), "q6_value", "SUM", 1, "normal",
+                    extra=(("cumulants", "q6_value", "SUM", "cumulants"),))
+
+
+def q18_family(max_groups: int = 2048):
+    """Q18 as a parameterized family: the quantity cutoff is the lifted
+    ``qty_threshold`` param of the reweight — threshold what-if sweeps
+    share one executable."""
+    return ReweightGreater(Scan("lineitem"), ("l_orderkey",), "l_quantity",
+                           "", max_groups,
+                           threshold=Param("qty_threshold"))
+
+
 # --------------------------------------------------------------- queries
 def _confidence_of(plan, db: TPCH, mesh, opts=None):
     """P(result non-empty): one-group AtLeastOne over the plan's output."""
@@ -172,8 +305,7 @@ def q1(db: TPCH, mode: str = "aggregate", mesh=None, plan_opts=None):
     so callers steer the physical planner's strategy choices (e.g. force
     the shuffle-partitioned join with a tiny gather budget) without
     rebuilding the logical plans."""
-    sel = Select(Scan("lineitem"),
-                 lambda t: t["l_shipdate"] <= DAY0_1995 + 500)
+    sel = _q1_select()
     keys = ("l_returnflag", "l_linestatus")
     if mode == "deterministic":
         li = compile_plan(sel)(db.tables())
@@ -192,12 +324,7 @@ def q1(db: TPCH, mode: str = "aggregate", mesh=None, plan_opts=None):
                            **(plan_opts or {}))(db.tables())
         return dict(valid=out["valid"], confidence=out["confidence"])
     # aggregate: Normal + moment terms per group, all in ONE UDA pass
-    plan = GroupAgg(sel, keys, "l_quantity", "SUM", 8, "normal",
-                    extra=(("price", "l_extendedprice", "SUM", "normal"),
-                           ("count", "", "COUNT", "normal"),
-                           ("cumulants_qty", "l_quantity", "SUM",
-                            "cumulants")))
-    out = compile_plan(plan, mesh, **(plan_opts or {}))(db.tables())
+    out = compile_plan(q1_plan(), mesh, **(plan_opts or {}))(db.tables())
     return dict(valid=out["valid"], qty=out["sum"], price=out["price"],
                 count=out["count"], cumulants_qty=out["cumulants_qty"])
 
@@ -216,13 +343,7 @@ def q3(db: TPCH, mode: str = "aggregate", segment: int = 1,
     capacity to exercise the fused pipeline while the small customer
     dimension still gathers (``plan_opts=dict(join_gather_budget=...)``
     would shuffle both).  Results are bit-identical either way."""
-    cust = Select(Scan("customer"), lambda t: t["c_mktsegment"] == segment)
-    orders = Select(Scan("orders"), lambda t: t["o_orderdate"] < DAY0_1995)
-    o = FKJoin(orders, cust, "o_custkey", "c_custkey", ("c_mktsegment",))
-    li = Select(Scan("lineitem"), lambda t: t["l_shipdate"] > DAY0_1995)
-    j = FKJoin(li, o, "l_orderkey", "o_orderkey",
-               ("o_orderdate", "o_custkey"),
-               gather_budget=order_join_budget)
+    j = _q3_join(segment, order_join_budget)
     if mode == "deterministic":
         jt = compile_plan(j)(db.tables())
         ids, _, gvalid = ops.group_ids(jt, ["l_orderkey"], max_groups)
@@ -237,10 +358,7 @@ def q3(db: TPCH, mode: str = "aggregate", segment: int = 1,
                                     max_groups), mesh,
                            **(plan_opts or {}))(db.tables())
         return dict(valid=out["valid"], confidence=out["confidence"])
-    plan = GroupAgg(j, ("l_orderkey",), "l_extendedprice", "SUM", max_groups,
-                    "normal",
-                    extra=(("cumulants", "l_extendedprice", "SUM",
-                            "cumulants"),))
+    plan = q3_plan(segment, max_groups, order_join_budget)
     out = compile_plan(plan, mesh, **(plan_opts or {}))(db.tables())
     return dict(valid=out["valid"], revenue=out["sum"],
                 cumulants=out["cumulants"])
@@ -253,28 +371,19 @@ def q6(db: TPCH, mode: str = "aggregate", num_freq: int | None = None,
     The single-group scalar aggregate — the paper's Figure 9 COUNT(*)
     experiment is this query with values == 1.
     """
-    sel = Select(
-        Scan("lineitem"),
-        lambda t: (t["l_shipdate"] >= DAY0_1995 - 400)
-        & (t["l_shipdate"] < DAY0_1995)
-        & (t["l_discount"] >= 5) & (t["l_discount"] <= 7)
-        & (t["l_quantity"] < 24))
+    sel = _q6_select()
     if mode == "deterministic":
         li = compile_plan(sel)(db.tables())
         return dict(revenue=jnp.sum(jnp.where(li.valid, li["l_quantity"]
                                               * li["l_discount"], 0)))
     if mode in ("confidence", "group_confidence"):
         return _confidence_of(sel, db, mesh, plan_opts)
-    # Integer-typed computed column: keeps the exact-CF aggregate eligible
-    # for the Pallas kernel's integer-phase arithmetic (uda.accumulate
-    # casts to the prob dtype itself and tracks source integrality).
-    val = Map(sel, "q6_value", lambda t: t["l_quantity"] * t["l_discount"])
-    extra = (("cumulants", "q6_value", "SUM", "cumulants"),)
-    if num_freq:  # exact distribution on request (Figure 9's exact path)
-        extra += (("exact", "q6_value", "SUM", "exact"),)
-    plan = GroupAgg(val, (), "q6_value", "SUM", 1, "normal", extra=extra,
-                    num_freq=num_freq or 0)
-    r = compile_plan(plan, mesh, **(plan_opts or {}))(db.tables())
+    # Integer-typed computed column (q6_plan's Map): keeps the exact-CF
+    # aggregate eligible for the Pallas kernel's integer-phase arithmetic
+    # (uda.accumulate casts to the prob dtype itself and tracks source
+    # integrality).  num_freq requests the exact distribution (Figure 9).
+    r = compile_plan(q6_plan(num_freq), mesh,
+                     **(plan_opts or {}))(db.tables())
     mu, var = r["sum"]
     out = dict(normal=(mu[0], var[0]), cumulants=r["cumulants"][0])
     if num_freq:
@@ -308,8 +417,7 @@ def q18(db: TPCH, mode: str = "aggregate", qty_threshold: int = 150,
         qty = jax.ops.segment_sum(jnp.where(t.valid, t["l_quantity"], 0),
                                   ids, num_segments=max_groups)
         return dict(valid=gvalid & (qty > qty_threshold), sum_qty=qty)
-    rew = ReweightGreater(li, ("l_orderkey",), "l_quantity", "", max_groups,
-                          threshold=float(qty_threshold))
+    rew = q18_plan(qty_threshold, max_groups)
     if mode == "confidence":
         # P(at least one order qualifies) = 1 - prod_g (1 - conf_g * p_gt_g)
         return _confidence_of(rew, db, mesh, plan_opts)
@@ -382,22 +490,7 @@ def q20(db: TPCH, mode: str = "aggregate", nation_name: int = 3,
         R9 = supplier |x| sigma_CANADA(nation)
         Q  = project(s_name) of R7 |x| R9
     """
-    r1 = Select(Scan("part"), lambda t: t["p_name_forest"])
-    r2 = FKJoin(Scan("partsupp"), r1, "ps_partkey", "p_partkey",
-                ("p_name_forest",))
-    r3 = Select(Scan("lineitem"),
-                lambda t: (t["l_shipdate"] >= DAY0_1995 - 365)
-                & (t["l_shipdate"] < DAY0_1995))
-    r4 = FKJoin(r3, r2, "l_pskey", "ps_pskey",
-                ("ps_availqty", "ps_suppkey", "ps_pskey"))
-    r4t = Map(r4, "q20_thresh",
-              lambda t: t["ps_availqty"].astype(t.prob.dtype) * avail_frac)
-    r7 = ReweightGreater(r4t, ("ps_pskey",), "l_quantity", "q20_thresh",
-                         max_groups, carry_cols=("ps_suppkey",))
-    nat = Select(Scan("nation"), lambda t: t["n_name"] == nation_name)
-    r9 = FKJoin(Scan("supplier"), nat, "s_nationkey", "n_nationkey",
-                ("n_name",))
-    r10 = FKJoin(r7, r9, "ps_suppkey", "s_suppkey", ("s_name", "s_address"))
+    r10 = _q20_r10(nation_name, max_groups, avail_frac)
     if mode == "deterministic":
         t = compile_plan(r10, mesh, **(plan_opts or {}))(db.tables())
         return dict(valid=t.valid & (t.prob > 0.5), s_name=t["s_name"])

@@ -4,7 +4,15 @@ the probabilistic-DB query service (the paper's workload as a server).
     PYTHONPATH=src python -m repro.launch.serve --arch yi_6b --reduced \
         --batch 4 --prompt-len 32 --gen 16
 
-    PYTHONPATH=src python -m repro.launch.serve --db --scale 200
+    PYTHONPATH=src python -m repro.launch.serve --db --scale 200 \
+        --rounds 3 --sweep 64 --cache-capacity 16
+
+The ``--db`` loop drives :class:`repro.db.serving.QueryService`: each
+round submits every TPC-H serving plan (round 0 compiles cold, later
+rounds are structural plan-cache hits — same executables, bit-identical
+results), then a parameterized Q6 what-if sweep runs ``--sweep`` points
+as ONE vmapped device program.  The loop prints per-round latency,
+cached queries-per-second and the service's hit/miss/eviction counters.
 """
 from __future__ import annotations
 
@@ -37,6 +45,49 @@ def generate(cfg, params, prompt, max_len: int, gen: int, greedy=True):
     return jnp.concatenate(out, axis=1)
 
 
+def serve_db(args) -> int:
+    """The ``--db`` service loop: submit / cached-hit / evict over the
+    TPC-H plan library, then the batched parameterized Q6 sweep."""
+    from ..db import tpch
+    from ..db.serving import QueryService
+
+    db = tpch.generate(n_orders=args.scale)
+    svc = QueryService(db.tables(), capacity=args.cache_capacity)
+    plans = tpch.serving_plans()
+    hit_seconds = 0.0
+    hit_requests = 0
+    for r in range(max(1, args.rounds)):
+        t0 = time.time()
+        hits = 0
+        for name, plan in plans.items():
+            out, info = svc.submit(plan)
+            jax.block_until_ready(jax.tree.leaves(out))
+            hits += int(info["hit"])
+        dt = time.time() - t0
+        if r > 0:                     # warm rounds measure serving QPS
+            hit_seconds += dt
+            hit_requests += len(plans)
+        print(f"[serve-db] round {r}: {len(plans)} queries in {dt:.3f}s "
+              f"({hits}/{len(plans)} cache hits)")
+    if hit_requests:
+        print(f"[serve-db] cached throughput: "
+              f"{hit_requests / hit_seconds:.1f} queries/s")
+    if args.sweep > 0:
+        n = args.sweep
+        batch = dict(disc_lo=jnp.full((n,), 5),
+                     disc_hi=jnp.full((n,), 7),
+                     qty_lim=jnp.arange(1, n + 1))
+        t0 = time.time()
+        out, info = svc.sweep(tpch.q6_family(), batch)
+        jax.block_until_ready(jax.tree.leaves(out))
+        print(f"[serve-db] batched q6 sweep: {n} points as "
+              f"{info['launches']} device program(s) in "
+              f"{time.time() - t0:.3f}s")
+    print(f"[serve-db] stats: {svc.stats.as_dict()}")
+    print(f"[serve-db] plan cache: {svc.cache.info()}")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi_6b")
@@ -47,19 +98,18 @@ def main(argv=None):
     ap.add_argument("--db", action="store_true",
                     help="serve probabilistic TPC-H queries instead")
     ap.add_argument("--scale", type=int, default=200)
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="--db: request rounds over the plan library "
+                         "(round 0 is cold, later rounds hit the cache)")
+    ap.add_argument("--sweep", type=int, default=64,
+                    help="--db: parameter points of the batched Q6 "
+                         "what-if sweep (0 disables)")
+    ap.add_argument("--cache-capacity", type=int, default=16,
+                    help="--db: bounded plan-cache entries")
     args = ap.parse_args(argv)
 
     if args.db:
-        from ..db import tpch
-        db = tpch.generate(n_orders=args.scale)
-        t0 = time.time()
-        for q in ("q1", "q6", "q18", "q20"):
-            for mode in tpch.MODES:
-                out = tpch.QUERIES[q](db, mode)
-                jax.block_until_ready(jax.tree.leaves(out))
-        print(f"[serve-db] 16 query/mode cells at scale {args.scale}: "
-              f"{time.time() - t0:.2f}s")
-        return 0
+        return serve_db(args)
 
     cfg = cfgs.get_reduced(args.arch)
     params = api.init_params(cfg, jax.random.PRNGKey(0))

@@ -406,3 +406,29 @@ def test_fault_plan_mechanics():
     assert [f for *_x, f in fp.log] == [False, True, False, True]
     faults.on_transfer(0, 10**9)                 # hooks are no-ops outside
     faults.on_exchange()
+
+
+def test_queryservice_healed_replay():
+    """Serving-layer retries neither poison nor duplicate cache entries:
+    each escalation attempt keys its own entry, the service remembers the
+    converged final_params, and a RESUBMIT of the healed plan runs one
+    clean attempt, hits the cache, and answers bit-identically."""
+    from repro.db.serving import QueryService
+
+    db = _db()
+    root = GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity",
+                    "SUM", 16, "normal")            # overflows: 48 groups
+    svc = QueryService(db.tables(), capacity=16,
+                       policy=RetryPolicy(max_attempts=4))
+    out1, info1 = svc.submit(root)
+    assert info1["attempts"] > 1
+    assert info1["report"].issues() == {}
+    misses_after_heal = svc.cache.misses
+    out2, info2 = svc.submit(root)
+    assert info2["attempts"] == 1                   # replays final_params
+    assert info2["hit"] and svc.cache.misses == misses_after_heal
+    _assert_biteq("healed-replay", out1, out2)
+    # the healed hit also equals a from-scratch escalated run
+    out3, _ = run_plan(root, db.tables(),
+                       policy=RetryPolicy(max_attempts=4))
+    _assert_biteq("healed-vs-fresh", out1, out3)
