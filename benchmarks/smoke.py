@@ -17,10 +17,13 @@ The baseline JSON additionally records the static replicated-vs-sharded
 peak rows/device accounting of the frontend AND the gather-vs-shuffle
 build-side rows/device of a join whose build side exceeds the gather
 budget (the ShuffleJoin memory contract).  The out-of-core streamed path
-is gated twice: the double-buffered vs synchronous wave-transfer wall
-times (the overlap win, floored on multi-core hosts) and the static
+is gated three ways: the double-buffered vs synchronous wave-transfer
+wall times (the overlap win, floored on multi-core hosts), the static
 streamed-vs-resident peak rows/device at 1x and 8x data — the streamed
-peak must stay FLAT as the table grows 8x past the device row budget.
+peak must stay FLAT as the table grows 8x past the device row budget —
+and the column-pruned slab bytes of the streamed Q6 pass, which must
+stay strictly below the unpruned bytes (Q6 reads 3 of lineitem's 10
+columns) alongside a per-wave host-slice time row.
 The self-healing happy path is gated too: the with-ExecutionReport run
 of the Q1-shaped plan must stay within ``TOLERANCE`` of the plain run
 and ``run_plan`` must resolve it in one attempt (diagnostics are free
@@ -331,6 +334,49 @@ def bench_streamed(n_orders: int = 8000, repeat: int = 5):
     return rows
 
 
+def bench_stream_pruning(n_orders: int = 2000, repeat: int = 3):
+    """Column pruning on the streamed Q6 pass, measured in slab bytes:
+    the Q6 predicate + value expression read 3 of lineitem's 10 columns,
+    so the pruned wave slabs must ship strictly fewer host->device bytes
+    than the unpruned slabs over the same table — ``--check`` gates the
+    strict inequality, and both byte counters are baseline-gated (they
+    are static properties of the lowering, so any growth is a pruning
+    regression).  Also records the per-wave host-slice time of the
+    pruned pass (the zero-alloc ping-pong slab assembly path), averaged
+    over ``repeat`` full passes to damp scheduler jitter."""
+    from repro.db import plans as P
+    from repro.db.table import HostTable
+
+    db = tpch.generate(n_orders=n_orders, seed=0)
+    n_li = db.lineitem.capacity
+    chunks = max(8, n_li // 500)
+    budget = 2000
+    plan = tpch.q6_plan()
+    tables = dict(db.tables())
+    tables["lineitem"] = HostTable.from_table(db.lineitem)
+    rows, stats = [], {}
+    for tag, prune in (("pruned", True), ("unpruned", False)):
+        fn = compile_plan(plan, None, device_row_budget=budget,
+                          canonical_chunks=chunks,
+                          stream_prune_columns=prune)
+        out = fn(tables)                              # warm per-wave jits
+        jax.block_until_ready(jax.tree.leaves(out))
+        P.reset_stream_stats()
+        for _ in range(repeat):
+            out = fn(tables)
+            jax.block_until_ready(jax.tree.leaves(out))
+        s = P.stream_stats()
+        stats[tag] = s
+        rows.append((f"smoke/streamed/slab_bytes/{tag}",
+                     s["slab_bytes"] / repeat,
+                     f"waves={s['waves'] // repeat},n_li={n_li}"))
+    s = stats["pruned"]
+    rows.append(("smoke/streamed/slice_us_per_wave",
+                 s["slice_s"] / max(s["waves"], 1) * 1e6,
+                 f"waves={s['waves'] // repeat},repeat={repeat}"))
+    return rows
+
+
 def bench_retry_overhead(n_orders: int = 1000, repeat: int = 5):
     """The happy path of the self-healing controller must be (nearly)
     free: the Q1-shaped resident plan jitted once plain and once with
@@ -512,6 +558,13 @@ def _check(rows) -> int:
         print(f"FAIL serving: batched-64 sweep {batched:.1f}x < "
               f"{MIN_BATCH_SPEEDUP}x over 64 sequential compiles")
         failures += 1
+    pruned = values.get("smoke/streamed/slab_bytes/pruned")
+    unpruned = values.get("smoke/streamed/slab_bytes/unpruned")
+    if pruned is not None and unpruned is not None and pruned >= unpruned:
+        print(f"FAIL streamed: pruned slab bytes {pruned:.0f} >= unpruned "
+              f"{unpruned:.0f} (column pruning stopped shrinking the Q6 "
+              "wave slabs — Q6 reads 3 of lineitem's 10 columns)")
+        failures += 1
     overlap = values.get("smoke/streamed/overlap_win")
     if overlap is not None and overlap < _stream_overlap_floor():
         print(f"FAIL streamed: overlap win {overlap:.2f}x < "
@@ -620,6 +673,7 @@ def main() -> int:
     rows += bench_shuffle_join()
     rows += bench_copartitioned_agg()
     rows += bench_streamed()
+    rows += bench_stream_pruning()
     rows += bench_retry_overhead()
     rows += bench_serving()
     rows += bench_batched_sweep()

@@ -229,22 +229,28 @@ class WaveSchedule:
 
 def wave_schedule(chunk_rows: int, chunks: int, shards: int,
                   budget: int | None,
-                  override_chunks: int | None = None) -> WaveSchedule:
+                  override_chunks: int | None = None,
+                  width: float = 1.0) -> WaveSchedule:
     """Pick the wave size for a streamed scan whose canonical chunk grid
     is ``chunks`` slots of ``chunk_rows`` rows.
 
     Double buffering holds 2 slabs per device, so the largest wave that
     fits the per-device row ``budget`` has ``budget // (2 * chunk_rows)``
-    local chunk slots; clamped to [1, local_slots].  ``override_chunks``
-    (global chunk slots per wave, rounded up to the shard count) bypasses
-    the budget — the test hook for pinning {1 chunk, ragged tail,
-    whole-table} schedules."""
+    local chunk slots; clamped to [1, local_slots].  ``width`` is the
+    pruned-slab relative row width ``(pruned_cols + 2) / (full_cols + 2)``
+    — ``device_row_budget`` is calibrated against FULL rows, so a
+    column-pruned slab of width 0.5 fits twice the rows in the same
+    bytes and the wave widens accordingly (fewer waves, fewer
+    transfers).  ``override_chunks`` (global chunk slots per wave,
+    rounded up to the shard count) bypasses both — the test hook for
+    pinning {1 chunk, ragged tail, whole-table} schedules."""
     csz = chunk_rows
     local_slots = -(-chunks // shards)            # chunk slots per shard
     if override_chunks is not None:
         local_cpw = max(1, -(-override_chunks // shards))
     else:
-        local_cpw = max(1, (budget or 0) // (2 * csz))
+        eff = (budget or 0) if width >= 1.0 else int((budget or 0) / width)
+        local_cpw = max(1, eff // (2 * csz))
     local_cpw = min(local_cpw, local_slots)
     n_waves = -(-local_slots // local_cpw)
     return WaveSchedule(chunk_rows=csz, local_chunks_per_wave=local_cpw,
@@ -300,7 +306,10 @@ def streamed_scan(m: CostModel, rows: int, wave_rows: int,
     pass (column + p + valid payload, no (n-1)/n discount — it is a
     transfer, not a collective; the executor's group-discovery pass
     re-streams, the model charges the accumulate pass), and residency is
-    two double-buffered slabs per device instead of the table."""
+    two double-buffered slabs per device instead of the table.
+    ``n_cols`` is the PRUNED column count when the lowering computed a
+    ``StreamedScan.columns`` demand set — only demanded columns ride the
+    wave slabs."""
     w = n_cols + 2
     return Cost(bytes_moved=rows * w * m.elem_bytes,
                 peak_rows=2 * (wave_rows // max(1, m.n_shards)) * w)

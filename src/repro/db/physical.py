@@ -235,6 +235,8 @@ import math
 import types
 from typing import Callable
 
+import numpy as np
+
 from . import cost as C
 
 #: reserved column carrying each exchanged row's canonical-chunk id
@@ -278,12 +280,17 @@ class StreamedScan(PhysNode):
     lattice in the module docstring).  ``part`` is the placement of each
     wave's slab (RowBlocked on a mesh); ``rows`` is the global chunk-grid
     capacity of the host table; ``cost`` prices the one-way host→device
-    bytes and the 2-slab double-buffered residency."""
+    bytes and the 2-slab double-buffered residency.  ``columns`` is the
+    static required-column demand set of the plan above the scan
+    (:func:`required_scan_columns`): wave slabs ship ONLY these columns
+    (plus prob/valid); ``None`` means the analysis could not bound the
+    reads and every column streams."""
     name: str
     part: object
     rows: int
     schedule: C.WaveSchedule
     cost: object = None
+    columns: tuple | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -462,6 +469,134 @@ def structural_key(obj) -> tuple:
     return ("id", type(obj).__qualname__, id(obj))
 
 
+# ----------------------------------------------- required-column analysis
+class _SpyColumns(dict):
+    """Recording stand-in for ``Table.columns``: every name looked up (or
+    even probed for membership) is charged to the demand set."""
+
+    def __init__(self, seen):
+        super().__init__()
+        self._seen = seen
+
+    def __getitem__(self, name):
+        self._seen.add(name)
+        return np.zeros((1,), np.float64)
+
+    def __contains__(self, name):
+        self._seen.add(name)
+        return True
+
+    def get(self, name, default=None):
+        self._seen.add(name)
+        return np.zeros((1,), np.float64)
+
+
+class _ColumnSpy:
+    """One-row numpy stand-in Table fed to a Select predicate / Map column
+    function to RECORD which columns it reads.  Mirrors the read-only
+    Table surface predicates use (``t["col"]``, ``t.columns``,
+    ``t.prob`` / ``t.valid`` / ``t.masked_prob()``); anything it cannot
+    stand in for raises out to the analyser, which then gives up on
+    pruning (ship every column) rather than under-approximate."""
+
+    def __init__(self):
+        self.seen: set = set()
+        self.columns = _SpyColumns(self.seen)
+        self.prob = np.full((1,), 0.5, np.float64)
+        self.valid = np.ones((1,), bool)
+        self.part = None
+        self.capacity = 1
+
+    def __getitem__(self, name):
+        return self.columns[name]
+
+    def masked_prob(self):
+        return np.where(self.valid, self.prob, 0.0)
+
+
+def _callable_columns(fn) -> frozenset | None:
+    """The column names a predicate / column function reads, discovered
+    by EXECUTING it against a recording :class:`_ColumnSpy`; ``None``
+    when the callable cannot be analysed (data-dependent control flow,
+    exotic Table use) — the caller must then ship every column.  Over-
+    approximation (a name probed but never used) only costs bytes;
+    under-approximation would be a correctness bug, hence the blanket
+    except."""
+    from . import plans as L
+    spy = _ColumnSpy()
+    try:
+        if isinstance(fn, L.Parameterized):
+            fn.fn(spy, *(np.float64(0.5) for _ in fn.params))
+        else:
+            fn(spy)
+    except Exception:
+        return None
+    return frozenset(spy.seen)
+
+
+def required_scan_columns(root) -> dict:
+    """Per-base-scan required-column demand of a logical plan: map
+    ``id(Scan node) -> frozenset`` of the column names the plan above it
+    reads (``None`` = analysis failed, ship everything).  Walked
+    top-down with the downstream demand in hand:
+
+    * Select adds its predicate's reads;
+    * Map satisfies the demand for its defined column and adds its
+      function's reads;
+    * FKJoin's probe side needs the downstream demand minus the fetched
+      build columns, plus the probe key; the build side needs its key
+      plus the fetched columns;
+    * aggregations reset the demand to their group keys + value /
+      carry / threshold columns (the plan above an aggregation reads
+      group-level output, not scan columns).
+
+    prob/valid always ride the slabs and are not tracked here."""
+    from . import plans as L
+    out: dict = {}
+
+    def note(scan, need):
+        prev = out.get(id(scan), frozenset())
+        out[id(scan)] = None if (need is None or prev is None) \
+            else prev | need
+
+    def walk(node, need):
+        if isinstance(node, L.Scan):
+            note(node, need)
+        elif isinstance(node, L.Select):
+            cols = _callable_columns(node.pred)
+            walk(node.child, None if (need is None or cols is None)
+                 else need | cols)
+        elif isinstance(node, L.Map):
+            cols = _callable_columns(node.fn)
+            walk(node.child, None if (need is None or cols is None)
+                 else (need - {node.name}) | cols)
+        elif isinstance(node, L.FKJoin):
+            rc = frozenset(node.right_cols)
+            walk(node.left, None if need is None
+                 else (need - rc) | {node.left_key})
+            walk(node.right, frozenset((node.right_key,)) | rc)
+        elif isinstance(node, L.Project):
+            walk(node.child, frozenset(node.keys))
+        elif isinstance(node, L.GroupAgg):
+            specs = ((node.value,),) + tuple((e[1],) for e in node.extra)
+            vals = {v for (v,) in specs if v}
+            walk(node.child, frozenset(node.keys) | vals)
+        elif isinstance(node, L.ReweightGreater):
+            need_c = set(node.keys) | {node.value} | set(node.carry_cols)
+            if node.threshold_col:
+                need_c.add(node.threshold_col)
+            walk(node.child, frozenset(need_c))
+        else:
+            # Unknown node: every column of every scan below it.
+            for f in ("child", "left", "right"):
+                c = getattr(node, f, None)
+                if isinstance(c, L.Node):
+                    walk(c, None)
+
+    walk(root, None)
+    return out
+
+
 def bucket_capacity(local_rows: int, n_shards: int, slack: float) -> int:
     """Static per-(sender, owner) shuffle bucket rows: ``slack`` times the
     uniform share, capped at the sender's local rows (at which point
@@ -477,27 +612,36 @@ def concrete_bucket_capacity(table, key: str, n_shards: int) -> int | None:
     they need instead of the uniform ``slack`` tax — and overflow is
     impossible, because downstream selection can only shrink the demand.
     Returns None when the column is traced (jit compiles keep the slack
-    sizing and its overflow-NaN guard) or absent."""
-    import numpy as np
+    sizing and its overflow-NaN guard) or absent.
 
+    The histogram is sized by the table's LOGICAL ``capacity``, not the
+    stored array length — a virtually padded :class:`HostTable` keeps
+    its stored rows and records the pad separately, and pad rows are
+    invalid (they route nowhere), so only stored rows that land in a
+    shard's slot range are counted."""
     from .operators import _is_concrete
     col = None if table is None else table.columns.get(key)
     if col is None or not (_is_concrete(col) and _is_concrete(table.valid)):
         return None
     k = np.asarray(col)
     ok = np.asarray(table.valid)
-    if k.ndim != 1 or k.shape[0] % n_shards:
+    cap = table.capacity
+    if k.ndim != 1 or cap % n_shards:
         return None
-    local = k.shape[0] // n_shards
+    local = cap // n_shards
+    stored = k.shape[0]
     # Mirror the runtime routing exactly (dist.shuffle_by_key hashes the
     # int32-CAST key): a wider key must wrap the same way here, or the
     # histogram would count a different owner than the exchange uses.
-    dest = k.reshape(n_shards, local).astype(np.int32) % n_shards
+    # sender = row // local over the logical (padded) row order; rows at
+    # or past `stored` are virtual pad (invalid) and never counted.
+    sender = np.arange(stored) // local
+    dest = k.astype(np.int32) % n_shards
+    pair = (sender * n_shards + dest)[ok]
     peak = 0
-    for s in range(n_shards):
-        d = dest[s][ok.reshape(n_shards, local)[s]]
-        if d.size:
-            peak = max(peak, int(np.bincount(d, minlength=n_shards).max()))
+    if pair.size:
+        peak = int(np.bincount(pair,
+                               minlength=n_shards * n_shards).max())
     return max(1, peak)
 
 
@@ -520,6 +664,7 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
                tables: dict | None = None,
                device_row_budget: int | None = None,
                stream_wave_chunks: int | None = None,
+               stream_prune_columns: bool = True,
                bucket_floor: int | None = None) -> PhysNode:
     """Lower a logical plan to the physical IR: enumerate physical
     candidates per node, cost them with :mod:`repro.db.cost`, pick the
@@ -549,7 +694,12 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
       semantics are the resident ones verbatim.  A BUILD side over the
       budget raises (only the probe side may stream);
       ``stream_wave_chunks`` pins the wave size (global chunk slots per
-      wave) for tests.
+      wave) for tests.  ``stream_prune_columns`` (default on) runs
+      :func:`required_scan_columns` over the plan and records each
+      streamed scan's exact demand set on ``StreamedScan.columns`` —
+      wave slabs then ship only those columns, and (when ``tables``
+      reveals the full column count) the wave WIDENS so the same
+      ``device_row_budget`` bytes hold more rows per slab.
 
     ``model`` overrides the knob-derived CostModel wholesale (pure
     estimates: ``CostModel(gather_budget=None)``).  ``canonical_chunks``
@@ -573,6 +723,12 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
         n_shards=n_shards, gather_budget=join_gather_budget,
         copartition=copartition, agg_shuffle_budget=agg_shuffle_budget,
         shuffle_slack=shuffle_slack, device_row_budget=device_row_budget)
+
+    # Required-column demand per base scan (id(Scan) -> frozenset|None);
+    # only computed when something may actually stream.
+    scan_cols: dict = {}
+    if stream_prune_columns and m.device_row_budget is not None:
+        scan_cols = required_scan_columns(root)
 
     def pick(cands):
         """cands: [(penalty, cost, build_fn)] -> built cheapest node."""
@@ -761,13 +917,24 @@ def lower_plan(root, caps: dict, *, n_shards: int = 1, sharded: bool = False,
                 slots = n_shards * (-(-canonical_chunks // n_shards))
                 csz = rows // slots if rows % slots == 0 \
                     else -(-rows // canonical_chunks)
-                sched = C.wave_schedule(csz, canonical_chunks, n_shards,
-                                        budget, stream_wave_chunks)
                 t = None if tables is None else tables.get(node.name)
-                ncols = len(t.columns) if t is not None else 1
+                total_cols = len(t.columns) if t is not None else None
+                need = scan_cols.get(id(node)) if scan_cols else None
+                if need is not None and t is not None:
+                    need = frozenset(need) & set(t.columns)
+                cols = None if need is None else tuple(sorted(need))
+                ncols = len(cols) if cols is not None else (total_cols or 1)
+                # Pruned rows are narrower: widen the wave so the same
+                # byte budget (calibrated on full rows) still fills it.
+                width = 1.0
+                if cols is not None and total_cols:
+                    width = (ncols + 2) / (total_cols + 2)
+                sched = C.wave_schedule(csz, canonical_chunks, n_shards,
+                                        budget, stream_wave_chunks,
+                                        width=width)
                 scost = C.streamed_scan(m, rows, sched.wave_rows, ncols)
-                return StreamedScan(node.name, part, rows, sched, scost), \
-                    rows
+                return StreamedScan(node.name, part, rows, sched, scost,
+                                    cols), rows
             return ShardScan(node.name, part, rows), rows
         if isinstance(node, L.Select):
             c, rows = go(node.child)
@@ -830,9 +997,10 @@ def explain(node: PhysNode, indent: int = 0) -> str:
         return f"{pad}ShardScan({node.name}, rows={node.rows}) :: {tag(node)}"
     if isinstance(node, StreamedScan):
         s = node.schedule
+        cols = "*" if node.columns is None else ",".join(node.columns)
         return (f"{pad}StreamedScan({node.name}, rows={node.rows}, "
                 f"waves={s.n_waves}x{s.chunks_per_wave}chunks"
-                f"@{s.chunk_rows}rows) :: {tag(node)}")
+                f"@{s.chunk_rows}rows, cols=[{cols}]) :: {tag(node)}")
     if isinstance(node, PhysSelect):
         return (f"{pad}Select :: {tag(node)}\n"
                 + explain(node.child, indent + 1))

@@ -77,6 +77,7 @@ Node zoo (Table I rows in brackets):
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from types import SimpleNamespace
 from typing import Callable, Dict, Sequence
@@ -358,6 +359,24 @@ def wave_cache_info() -> dict:
     return _WAVE_CACHE.info()
 
 
+#: Process-wide streamed-transfer counters (benchmarks / tests): bytes
+#: actually shipped in wave slabs (column-pruned slabs count only the
+#: pruned payload), wave count, and the host-side slab-slice seconds
+#: (the gather from [mmap] host arrays into the ping-pong buffers — the
+#: measured bottleneck on thin hosts that pruning attacks).
+_STREAM_STATS = {"slab_bytes": 0, "waves": 0, "slice_s": 0.0}
+
+
+def reset_stream_stats() -> None:
+    """Zero the streamed-transfer counters (call before a measured run)."""
+    _STREAM_STATS.update(slab_bytes=0, waves=0, slice_s=0.0)
+
+
+def stream_stats() -> dict:
+    """Snapshot of the streamed-transfer counters since the last reset."""
+    return dict(_STREAM_STATS)
+
+
 def _agg_uda(agg: str, method: str, kappa: int, num_freq: int = 0,
              freq_lo: int = 0, freq_cnt: int | None = None) -> uda.UDA:
     if agg in ("SUM", "COUNT"):
@@ -591,7 +610,8 @@ def compile_plan(root: Node, mesh=None, *,
                  device_row_budget: int | None = None,
                  stream_wave_chunks: int | None = None,
                  stream_double_buffer: bool = True,
-                 stats_tables: Dict[str, Table] | None = None,
+                 stream_prune_columns: bool = True,
+                 stats_tables: Dict[str, "Table | HostTable"] | None = None,
                  with_report: bool = False,
                  shuffle_bucket_floor: int | None = None,
                  stream_wave_retries: int = 2):
@@ -664,12 +684,22 @@ def compile_plan(root: Node, mesh=None, *,
     for tests.  HostTables without a budget are simply materialised.
     The streamed path executes eagerly (host wave loop): don't wrap the
     compiled function in an outer jit when streaming.
+    ``stream_prune_columns`` (default on) ships only the columns the
+    plan above the scan actually reads (the lowering's
+    :func:`repro.db.physical.required_scan_columns` demand set) and
+    widens the waves to match — fewer bytes per row, fewer transfers;
+    off streams every column (the control for byte-counting
+    benchmarks).  A :class:`~repro.db.table.HostTable` opened from a
+    :meth:`~repro.db.table.HostTable.save` directory streams straight
+    from its memory-mapped column files: only the touched row ranges of
+    the touched columns are ever paged in.
 
-    ``stats_tables`` (name -> representative Table) feeds the
-    skew-adaptive concrete-key bucket sizing when the RUNTIME tables are
-    traced (the compiled function called under jit): the stats tables
-    are padded exactly like the runtime ones and their concrete key
-    histograms size the exchange buckets, replacing the flat
+    ``stats_tables`` (name -> representative Table or HostTable) feeds
+    the skew-adaptive concrete-key bucket sizing when the RUNTIME
+    tables are traced (the compiled function called under jit): the
+    stats tables are padded exactly like the runtime ones and their
+    concrete (numpy — a HostTable's columns are histogrammed directly)
+    key histograms size the exchange buckets, replacing the flat
     ``shuffle_slack`` capacity (the overflow-NaN guard stays as the
     backstop for stale stats).
 
@@ -1036,11 +1066,23 @@ def compile_plan(root: Node, mesh=None, *,
         waves are never re-streamed.  A fault that survives the in-place
         retries propagates annotated with the halved wave size
         (``wave_chunks``) so :func:`run_plan` can re-lower a smaller
-        schedule.  Returns the number of re-ship retries."""
+        schedule.  Returns the number of re-ship retries.
+
+        Slab assembly is ZERO-ALLOC: two preallocated ping-pong host
+        buffers (matching the double-buffer depth) are filled with
+        ``np.copyto`` instead of per-wave fresh allocations.  Reusing
+        buffer ``w % 2`` for wave w is safe because slab w+1 only ships
+        after wave w-1's output is ready (the block below) — and w-1's
+        compute finishing implies its input transfer (same parity
+        buffer) has been consumed."""
         csz = sched.chunk_rows
         lrows = sched.local_chunks_per_wave * csz
         lslots = sched.n_waves * sched.local_chunks_per_wave
         n_retries = 0
+        bufs = (ht.alloc_slab(lrows * shards), ht.alloc_slab(lrows * shards))
+        wave_bytes = sum(a.nbytes for a in
+                         jax.tree.leaves((bufs[0].columns, bufs[0].prob,
+                                          bufs[0].valid)))
 
         def ship(w):
             # Wave w takes the next `lrows` rows of EVERY shard's slot
@@ -1049,7 +1091,11 @@ def compile_plan(root: Node, mesh=None, *,
             faults.on_transfer(w, lrows * shards)
             starts = tuple(s * lslots * csz + w * lrows
                            for s in range(shards))
-            slab = ht.wave_slab(starts, lrows)
+            t0 = time.perf_counter()
+            slab = ht.wave_slab(starts, lrows, out=bufs[w % 2])
+            _STREAM_STATS["slice_s"] += time.perf_counter() - t0
+            _STREAM_STATS["slab_bytes"] += wave_bytes
+            _STREAM_STATS["waves"] += 1
             if mesh_mode:
                 return jax.device_put(slab, NamedSharding(mesh, P(axes)))
             return jax.device_put(slab)
@@ -1108,12 +1154,19 @@ def compile_plan(root: Node, mesh=None, *,
             raise NotImplementedError(
                 "a StreamedScan must feed a grouped aggregation (Project /"
                 " GroupAgg / ReweightGreater): the wave loop folds "
-                "per-chunk UDA states, not raw relational output")
+                "per-chunk UDA states, not raw relational output — raise "
+                "device_row_budget so the table stays resident, or "
+                "materialise it first via HostTable.to_table()")
         pa = agg.child
         sched = sc.schedule
         ht = padded[sc.name]
         ht = (ht if isinstance(ht, HostTable)
               else HostTable.from_table(ht)).pad_to(sched.padded_capacity)
+        if sc.columns is not None:
+            # Required-column pruning: wave slabs carry only the demand
+            # set the lowering recorded (plus prob/valid, always).
+            ht = ht.select_columns([c for c in sc.columns
+                                    if c in ht.columns])
         resident = {k: (t.to_table() if isinstance(t, HostTable) else t)
                     for k, t in padded.items() if k != sc.name}
         wave_a, wave_b = _build_wave_fns(proot, agg, sc)
@@ -1258,6 +1311,7 @@ def compile_plan(root: Node, mesh=None, *,
                                 model=cost_model, tables=plan_tables,
                                 device_row_budget=device_row_budget,
                                 stream_wave_chunks=stream_wave_chunks,
+                                stream_prune_columns=stream_prune_columns,
                                 bucket_floor=shuffle_bucket_floor)
         rb = ReportBuilder() if with_report else None
         if any(isinstance(n, phys.StreamedScan) for n in _iter_phys(proot)):

@@ -38,6 +38,8 @@ a side table.  ``None`` means "unspecified" (plain single-device use).
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Dict
 
 import jax
@@ -153,16 +155,48 @@ class Table:
         return out
 
 
+def _cut(a, start: int, rows: int, out=None):
+    """Copy rows ``[start, start + rows)`` of host array ``a`` into a
+    contiguous buffer, zero-filling past the stored length (the virtual
+    pad / wave-schedule tail: pad rows are invalid with p = 0, so zeros
+    are exactly ``np.pad`` semantics).  With ``out`` the copy lands in
+    the caller's preallocated buffer via ``np.copyto`` — no allocation,
+    the ping-pong half of the zero-alloc slab assembly."""
+    stop = min(start + rows, a.shape[0])
+    got = max(0, stop - start)
+    if out is None:
+        if got == rows:
+            return np.ascontiguousarray(a[start:stop])
+        buf = np.zeros((rows,) + a.shape[1:], a.dtype)
+        if got:
+            buf[:got] = a[start:stop]
+        return buf
+    if got:
+        np.copyto(out[:got], a[start:stop])
+    if got < rows:
+        out[got:rows] = 0
+    return out
+
+
 class HostTable:
     """Host-resident probabilistic table: the out-of-core twin of
     :class:`Table`.
 
-    Columns, prob and valid are kept as host ``numpy`` arrays and are
-    NEVER shipped to the device whole — the streamed executor of
-    ``db/plans.py`` ships one canonical-chunk-aligned *slab* of rows per
-    wave (:meth:`slab`) and folds the per-chunk UDA states across waves,
-    so device residency is two slabs (double-buffered) plus the
-    group-level accumulator, independent of the table size.
+    Columns, prob and valid are kept as host ``numpy`` arrays (or
+    ``np.memmap`` views of on-disk column files, see :meth:`save` /
+    :meth:`open`) and are NEVER shipped to the device whole — the
+    streamed executor of ``db/plans.py`` ships one
+    canonical-chunk-aligned *slab* of rows per wave (:meth:`slab`) and
+    folds the per-chunk UDA states across waves, so device residency is
+    two slabs (double-buffered) plus the group-level accumulator,
+    independent of the table size.
+
+    Padding is VIRTUAL: :meth:`pad_to` records extra capacity instead of
+    copying every column (``columns`` / ``prob`` / ``valid`` keep the
+    stored arrays; ``capacity``, the slab cutters and :meth:`to_table`
+    present the padded view, materialising the invalid p = 0 pad rows as
+    zeros on read).  This is what lets a terabyte-scale memory-mapped
+    table be chunk-grid-padded without touching the disk.
 
     Deliberately NOT a pytree: a HostTable must never cross a jit
     boundary.  It mirrors the small read-only surface the planner needs
@@ -171,16 +205,24 @@ class HostTable:
     unchanged.
     """
 
-    def __init__(self, columns, prob=None, valid=None, part=None):
-        self.columns = {k: np.asarray(v) for k, v in columns.items()}
-        n = next(iter(self.columns.values())).shape[0]
+    def __init__(self, columns, prob=None, valid=None, part=None, pad=0):
+        # keep ndarray instances as-is (np.asarray would strip the
+        # np.memmap subclass of disk-backed columns); coerce the rest
+        asarr = lambda v: v if isinstance(v, np.ndarray) else np.asarray(v)
+        self.columns = {k: asarr(v) for k, v in columns.items()}
+        if self.columns:
+            n = next(iter(self.columns.values())).shape[0]
+        else:       # column-pruned to nothing (pure COUNT): p/valid only
+            assert prob is not None, "empty HostTable needs prob"
+            n = np.asarray(prob).shape[0]
         for k, v in self.columns.items():
             assert v.shape[0] == n, f"column {k} length mismatch"
         self.prob = (np.ones((n,), np.float32) if prob is None
-                     else np.asarray(prob))
+                     else asarr(prob))
         self.valid = (np.ones((n,), bool) if valid is None
-                      else np.asarray(valid))
+                      else asarr(valid))
         self.part = part
+        self._pad = int(pad)
         self._chunk_multiple = 0
 
     @classmethod
@@ -191,6 +233,12 @@ class HostTable:
 
     @property
     def capacity(self) -> int:
+        """Logical row count: stored rows plus the virtual pad."""
+        return self.prob.shape[0] + self._pad
+
+    @property
+    def stored_rows(self) -> int:
+        """Physically stored rows (what :meth:`save` writes to disk)."""
         return self.prob.shape[0]
 
     def __getitem__(self, name: str):
@@ -201,10 +249,9 @@ class HostTable:
         assert capacity >= n
         if capacity == n:
             return self
-        pad = capacity - n
-        cols = {k: np.pad(v, (0, pad)) for k, v in self.columns.items()}
-        return HostTable(cols, np.pad(self.prob, (0, pad)),
-                         np.pad(self.valid, (0, pad)), self.part)
+        out = HostTable(self.columns, self.prob, self.valid, self.part,
+                        pad=self._pad + (capacity - n))
+        return out
 
     def pad_to_multiple(self, multiple: int) -> "HostTable":
         """Host-side chunk-grid padding (same cache as Table's)."""
@@ -214,37 +261,98 @@ class HostTable:
         out._chunk_multiple = multiple
         return out
 
+    def select_columns(self, names) -> "HostTable":
+        """Pruned view sharing the same arrays (the lowered
+        ``StreamedScan.columns`` demand set: waves slice only these)."""
+        out = HostTable({k: self.columns[k] for k in names}, self.prob,
+                        self.valid, self.part, pad=self._pad)
+        out._chunk_multiple = self._chunk_multiple
+        return out
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str) -> None:
+        """Persist to ``path/``: one ``.npy`` file per column plus
+        ``prob.npy`` / ``valid.npy`` and a ``manifest.json`` mapping
+        column names to files (names are not trusted as filenames).
+        Only stored rows hit the disk — virtual padding is recorded in
+        the manifest and restored by :meth:`open` as virtual padding."""
+        os.makedirs(path, exist_ok=True)
+        names = sorted(self.columns)
+        files = {k: f"col{i}.npy" for i, k in enumerate(names)}
+        for k, fname in files.items():
+            np.save(os.path.join(path, fname), np.asarray(self.columns[k]),
+                    allow_pickle=False)
+        np.save(os.path.join(path, "prob.npy"), np.asarray(self.prob),
+                allow_pickle=False)
+        np.save(os.path.join(path, "valid.npy"), np.asarray(self.valid),
+                allow_pickle=False)
+        manifest = {"version": 1, "capacity": int(self.capacity),
+                    "stored_rows": int(self.stored_rows),
+                    "columns": files, "prob": "prob.npy",
+                    "valid": "valid.npy"}
+        with open(os.path.join(path, "manifest.json"), "w") as fh:
+            json.dump(manifest, fh, indent=1, sort_keys=True)
+
+    @classmethod
+    def open(cls, path: str, mmap_mode: str = "r") -> "HostTable":
+        """Open a :meth:`save` directory with every array backed by
+        ``np.memmap`` — slabs then read only the touched row ranges of
+        the touched columns from disk, so dataset size decouples from
+        host RAM.  Pass ``mmap_mode=None`` to load into RAM instead."""
+        with open(os.path.join(path, "manifest.json")) as fh:
+            manifest = json.load(fh)
+        load = lambda f: np.load(os.path.join(path, f), mmap_mode=mmap_mode,
+                                 allow_pickle=False)
+        cols = {k: load(f) for k, f in manifest["columns"].items()}
+        return cls(cols, load(manifest["prob"]), load(manifest["valid"]),
+                   pad=manifest["capacity"] - manifest["stored_rows"])
+
+    # -- slab cutters --------------------------------------------------------
+    def alloc_slab(self, rows: int) -> Table:
+        """Preallocated (uninitialised numpy) slab buffers matching this
+        table's dtypes — the ping-pong targets of ``wave_slab(out=)``."""
+        mk = lambda a: np.empty((rows,) + a.shape[1:], a.dtype)
+        return Table({k: mk(v) for k, v in self.columns.items()},
+                     mk(self.prob), mk(self.valid), self.part)
+
     def slab(self, start: int, rows: int) -> Table:
         """One wave's slab: rows [start, start + rows), zero-padded with
-        invalid p = 0 rows past the capacity, as a device-ready
-        :class:`Table` of host numpy arrays (the executor ``device_put``s
-        it with the mesh sharding; the copy into fresh contiguous buffers
-        is the host half of the double-buffered transfer)."""
-        stop = min(start + rows, self.capacity)
-        pad = rows - (stop - start)
-
-        def cut(a):
-            s = a[start:stop]
-            return np.pad(s, ((0, pad),) + ((0, 0),) * (s.ndim - 1)) \
-                if pad else np.ascontiguousarray(s)
+        invalid p = 0 rows past the stored rows (virtual pad and
+        schedule tail alike), as a device-ready :class:`Table` of host
+        numpy arrays (the executor ``device_put``s it with the mesh
+        sharding; the copy into contiguous buffers is the host half of
+        the double-buffered transfer)."""
+        cut = lambda a: _cut(a, start, rows)
         return Table({k: cut(v) for k, v in self.columns.items()},
                      cut(self.prob), cut(self.valid), self.part)
 
-    def wave_slab(self, starts, rows: int) -> Table:
+    def wave_slab(self, starts, rows: int, out: Table | None = None) -> Table:
         """One MESH wave's slab: the concatenation of the per-shard runs
         ``[start, start + rows)`` for each start in ``starts`` (shard
         order).  On a mesh the rows of one wave are NOT contiguous — each
         shard contributes the next ``rows`` of ITS slot range — so the
         host gathers the strided runs into one contiguous buffer that
         ``device_put`` with the mesh sharding then splits back per
-        device.  The table must already be padded to the wave schedule's
-        ``padded_capacity`` (no tail handling here)."""
-        def cut(a):
-            if len(starts) == 1:
-                return np.ascontiguousarray(a[starts[0]:starts[0] + rows])
-            return np.concatenate([a[s:s + rows] for s in starts])
-        return Table({k: cut(v) for k, v in self.columns.items()},
-                     cut(self.prob), cut(self.valid), self.part)
+        device.  Runs past the stored rows (the virtual pad region) read
+        as invalid p = 0 zeros.  With ``out`` (an :meth:`alloc_slab`
+        buffer of ``len(starts) * rows`` rows) the gather is zero-alloc:
+        ``np.copyto`` into the caller's ping-pong buffer."""
+        def cut(a, buf):
+            if buf is None:
+                if len(starts) == 1:
+                    return _cut(a, starts[0], rows)
+                buf = np.empty((len(starts) * rows,) + a.shape[1:], a.dtype)
+            for i, s in enumerate(starts):
+                _cut(a, s, rows, out=buf[i * rows:(i + 1) * rows])
+            return buf
+        if out is None:
+            return Table({k: cut(v, None) for k, v in self.columns.items()},
+                         cut(self.prob, None), cut(self.valid, None),
+                         self.part)
+        return Table({k: cut(v, out.columns[k])
+                      for k, v in self.columns.items()},
+                     cut(self.prob, out.prob), cut(self.valid, out.valid),
+                     self.part)
 
     def slabs(self, rows: int):
         """Iterate the whole table as ``ceil(capacity / rows)`` fixed-size
@@ -253,10 +361,16 @@ class HostTable:
             yield start, self.slab(start, rows)
 
     def to_table(self) -> Table:
-        """Full device materialisation (resident fallback / tests)."""
-        return Table({k: jnp.asarray(v) for k, v in self.columns.items()},
-                     jnp.asarray(self.prob), jnp.asarray(self.valid),
-                     self.part)
+        """Full device materialisation (resident fallback / tests) —
+        virtual pad rows materialise as invalid p = 0 zeros."""
+        def full(a):
+            a = np.asarray(a)
+            if not self._pad:
+                return jnp.asarray(a)
+            z = np.zeros((self._pad,) + a.shape[1:], a.dtype)
+            return jnp.asarray(np.concatenate([a, z]))
+        return Table({k: full(v) for k, v in self.columns.items()},
+                     full(self.prob), full(self.valid), self.part)
 
 
 def concat(a: Table, b: Table) -> Table:

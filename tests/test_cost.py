@@ -203,6 +203,27 @@ def test_wave_schedule_sizes_from_double_buffered_budget():
     assert (t.local_chunks_per_wave, t.n_waves) == (1, 8)
 
 
+def test_wave_schedule_widens_for_pruned_columns():
+    """A column-pruned slab's rows are narrower, so the same byte budget
+    holds more of them: width (pruned+2)/(full+2) divides the effective
+    row budget.  Width 1.0 is exactly the unpruned schedule; the
+    override hook still pins the wave regardless of width."""
+    base = C.wave_schedule(chunk_rows=512, chunks=8, shards=1, budget=1024)
+    assert base.local_chunks_per_wave == 1
+    wide = C.wave_schedule(chunk_rows=512, chunks=8, shards=1, budget=1024,
+                           width=0.5)
+    assert (wide.local_chunks_per_wave, wide.n_waves) == (2, 4)
+    third = C.wave_schedule(chunk_rows=512, chunks=8, shards=1, budget=1024,
+                            width=1 / 3)
+    assert third.local_chunks_per_wave == 3
+    same = C.wave_schedule(chunk_rows=512, chunks=8, shards=1, budget=1024,
+                           width=1.0)
+    assert same == base
+    pinned = C.wave_schedule(chunk_rows=512, chunks=8, shards=1,
+                             budget=1024, override_chunks=1, width=0.25)
+    assert pinned.local_chunks_per_wave == 1
+
+
 def test_wave_schedule_clamps_to_the_chunk_grid():
     """A budget larger than the table collapses to one wave holding every
     chunk slot (the streamed path degenerates to resident-in-one-wave)."""

@@ -272,10 +272,12 @@ def test_device_row_budget_lowers_scan_to_streamed():
     assert (s.chunk_rows, s.local_chunks_per_wave, s.n_waves,
             s.n_shards) == (512, 1, 8, 1)
     assert s.padded_capacity == 4096
-    # 2 double-buffered slabs x (1 col + p + valid) resident, whole table
-    # crossing the transfer once per pass
-    assert sc.cost.peak_rows == 2 * 512 * 3
-    assert sc.cost.bytes_moved == 4096 * 3 * 8
+    # column pruning bounds the payload to the demand set (l_orderkey,
+    # l_quantity): 2 double-buffered slabs x (2 cols + p + valid)
+    # resident, whole pruned table crossing the transfer once per pass
+    assert sc.columns == ("l_orderkey", "l_quantity")
+    assert sc.cost.peak_rows == 2 * 512 * 4
+    assert sc.cost.bytes_moved == 4096 * 4 * 8
     over = phys.lower_plan(agg, CAPS, n_shards=1, sharded=False,
                            device_row_budget=4096)
     assert isinstance(over.child.child, phys.ShardScan)
@@ -335,7 +337,7 @@ def test_explain_snapshot_streamed_plan():
 MergeAgg[groupagg] :: Replicated
   PartialAgg(keys=['l_orderkey'], specs=['sum'], G=512) :: Replicated cost{bytes=0, rows=12288, flops=12288}
     Select :: Replicated
-      StreamedScan(lineitem, rows=4096, waves=8x1chunks@512rows) :: Replicated cost{bytes=98304, rows=3072, flops=0}"""
+      StreamedScan(lineitem, rows=4096, waves=8x1chunks@512rows, cols=[l_orderkey,l_quantity,x]) :: Replicated cost{bytes=163840, rows=5120, flops=0}"""
 
 
 # --------------------------------------------------- explain snapshots
@@ -385,3 +387,78 @@ MergeAgg[groupagg] :: Replicated
       GatherJoin(o_custkey=c_custkey, build=256) :: RowBlocked cost{bytes=6144, rows=1024, flops=0}
         ShardScan(orders, rows=1024) :: RowBlocked
         ShardScan(customer, rows=256) :: RowBlocked"""
+
+
+# ------------------------------------------- required-column analysis
+def test_required_scan_columns_goldens():
+    """Demand propagation per operator: Select adds predicate reads, Map
+    satisfies its defined column, FKJoin splits probe/build demand, and
+    aggregations reset demand to keys + value/carry columns."""
+    agg = GroupAgg(Map(Select(Scan("lineitem"),
+                              lambda t: t["l_shipdate"] > 10),
+                       "v", lambda t: t["l_quantity"] * t["l_discount"]),
+                   ("l_returnflag",), "v", "SUM", 8)
+    (need,) = phys.required_scan_columns(agg).values()
+    # "v" is produced by the Map — its inputs stream instead
+    assert need == {"l_shipdate", "l_quantity", "l_discount",
+                    "l_returnflag"}
+
+    join = GroupAgg(FKJoin(Scan("lineitem"), Scan("orders"), "l_orderkey",
+                           "o_orderkey", ("o_orderdate",)),
+                    ("o_orderdate",), "l_quantity", "SUM", 8)
+    got = phys.required_scan_columns(join)
+    sides = {frozenset(v) for v in got.values()}
+    # probe: demand minus fetched build cols, plus the probe key;
+    # build: its key plus the fetched cols
+    assert frozenset({"l_orderkey", "l_quantity"}) in sides
+    assert frozenset({"o_orderkey", "o_orderdate"}) in sides
+
+    rw = ReweightGreater(Scan("lineitem"), ("l_orderkey",), "l_quantity",
+                         "", 64, threshold=5.0, carry_cols=("l_partkey",))
+    (need,) = phys.required_scan_columns(rw).values()
+    assert need == {"l_orderkey", "l_quantity", "l_partkey"}
+
+
+def test_unanalysable_predicate_disables_pruning():
+    """A predicate the column spy cannot execute (data-dependent control
+    flow) must NOT under-approximate: the scan's demand becomes None and
+    every column streams."""
+    def hostile(t):
+        raise RuntimeError("no analysis")
+    agg2 = GroupAgg(Select(Scan("lineitem"), hostile), ("l_orderkey",),
+                    "l_quantity", "SUM", 8)
+    (need,) = phys.required_scan_columns(agg2).values()
+    assert need is None
+    p = phys.lower_plan(agg2, CAPS, n_shards=1, sharded=False,
+                        device_row_budget=1024)
+    assert p.child.child.child.columns is None
+
+
+def test_stream_prune_columns_off_ships_everything():
+    agg = GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity", "SUM",
+                   128)
+    p = phys.lower_plan(agg, CAPS, n_shards=1, sharded=False,
+                        device_row_budget=1024,
+                        stream_prune_columns=False)
+    assert p.child.child.columns is None
+
+
+def test_pruned_wave_widens_to_fill_the_budget():
+    """With the full column count known (tables passed), a pruned slab's
+    narrower rows widen the wave: width (2+2)/(10+2) = 1/3 turns a
+    1-chunk wave into a 3-chunk wave under the same byte budget."""
+    cols = {f"c{i}": np.arange(4096) for i in range(8)}
+    cols["l_orderkey"] = np.arange(4096)
+    cols["l_quantity"] = np.arange(4096, dtype=np.float64)
+    t = Table.from_columns({k: jnp.asarray(v) for k, v in cols.items()})
+    agg = GroupAgg(Scan("lineitem"), ("l_orderkey",), "l_quantity", "SUM",
+                   128)
+    wide = phys.lower_plan(agg, CAPS, n_shards=1, sharded=False,
+                           device_row_budget=1024,
+                           tables={"lineitem": t})
+    assert wide.child.child.schedule.local_chunks_per_wave == 3
+    flat = phys.lower_plan(agg, CAPS, n_shards=1, sharded=False,
+                           device_row_budget=1024,
+                           tables={"lineitem": t},
+                           stream_prune_columns=False)
+    assert flat.child.child.schedule.local_chunks_per_wave == 1
